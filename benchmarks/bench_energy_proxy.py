@@ -1,0 +1,35 @@
+"""Fig-8 analogue: energy-efficiency proxy per decoded token.
+
+Vivado power reports don't transfer; the architecture-independent proxy is
+data movement + compute energy:
+    E_token = hbm_bytes * E_HBM + flops * E_MAC
+with representative 7nm-class constants (pJ): HBM access ~7 pJ/byte,
+bf16 MAC ~0.3 pJ/flop.  The paper's win comes from moving fewer bytes
+(quantized weights) and keeping intermediates on-chip; the same two levers
+set this proxy.
+"""
+from __future__ import annotations
+
+from repro.configs.base import RWKV4_ARCHS
+from repro.models.registry import get_model
+from benchmarks.bench_resources import spec_bytes
+from benchmarks.common import emit
+
+E_HBM_PJ_PER_BYTE = 7.0
+E_MAC_PJ_PER_FLOP = 0.3
+
+
+def run():
+    for arch in RWKV4_ARCHS:
+        model, b16, bq = spec_bytes(arch)
+        n = model.param_count()
+        flops = 2.0 * n                       # per decoded token
+        e_fp16 = b16 * E_HBM_PJ_PER_BYTE + flops * E_MAC_PJ_PER_FLOP
+        e_qnt = bq * E_HBM_PJ_PER_BYTE + flops * E_MAC_PJ_PER_FLOP
+        emit(f"energy/{arch}", 0.0,
+             f"fp16_uJ_tok={e_fp16/1e6:.1f};dpot_uJ_tok={e_qnt/1e6:.1f};"
+             f"gain={e_fp16/e_qnt:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

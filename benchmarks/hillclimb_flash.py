@@ -1,0 +1,113 @@
+"""§Perf hillclimb driver: fused-flash-attention projection for a cell.
+
+Methodology (EXPERIMENTS.md §Perf): interpret-mode Pallas cannot be
+*measured* through the dry-run (its functional grid loop copies whole
+arrays), so the kernel's effect is spliced structurally:
+
+  1. lower the BASE cell                         -> terms_base   (measured)
+  2. lower the cell with attention STUBBED       -> terms_stub   (measured)
+     (attention's traffic/flops = base - stub)
+  3. add the kernel's analytic BlockSpec traffic -> terms_proj
+     terms_proj = terms_stub + kernel_traffic(...)   per layer count
+
+The kernel itself is validated for correctness separately (forward AND
+custom-VJP backward vs the XLA oracle, tests/test_kernels.py).
+
+    PYTHONPATH=src:. python -m benchmarks.hillclimb_flash smollm-135m train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json    # noqa: E402
+import sys     # noqa: E402
+
+from repro.configs.base import SHAPES, get_config          # noqa: E402
+from repro.kernels.flash_attention import kernel_traffic   # noqa: E402
+from repro.launch.dryrun import OUT_DIR, run_cell          # noqa: E402
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS       # noqa: E402
+
+
+def project(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_tag = "multi" if multi_pod else "single"
+    base_path = os.path.join(OUT_DIR,
+                             f"{arch}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+    else:
+        base = run_cell(arch, shape_name, multi_pod)
+    stub = run_cell(arch, shape_name, multi_pod,
+                    cfg_overrides={"attn_stub": True},
+                    variant_tag="attnstub")
+    rb, rs = base["roofline"], stub["roofline"]
+
+    # per-device dims on the mesh
+    chips = base["chips"]
+    data = 16
+    model = 16
+    pod = 2 if multi_pod else 1
+    B_dev = max(shape.global_batch // (data * pod), 1)
+    H = cfg.n_heads
+    H_dev = H // model if H % model == 0 else H
+    n_attn = cfg.n_layers + cfg.enc_layers
+    S = shape.seq_len
+    kt = kernel_traffic(B_dev, H_dev, S, S, cfg.resolved_head_dim,
+                        causal=True, train=(shape.kind == "train"))
+    k_bytes = kt["bytes"] * n_attn
+    k_flops = kt["flops"] * n_attn
+
+    proj = {
+        "compute_s": rs["compute_s"] + k_flops / PEAK_FLOPS,
+        "memory_s": rs["memory_s"] + k_bytes / HBM_BW,
+        "collective_s": rs["collective_s"],
+    }
+    attn_measured = {
+        "flops": rb["flops"] - rs["flops"],
+        "bytes": rb["hbm_bytes"] - rs["hbm_bytes"],
+    }
+    rec = {
+        "cell": f"{arch}__{shape_name}__{mesh_tag}__flashproj",
+        "status": "ok", "kind": "projection",
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "chips": chips,
+        "method": "stub-diff + BlockSpec-analytic kernel traffic",
+        "base_terms": {k: rb[k] for k in
+                       ("compute_s", "memory_s", "collective_s")},
+        "stub_terms": {k: rs[k] for k in
+                       ("compute_s", "memory_s", "collective_s")},
+        "xla_attention_measured": attn_measured,
+        "kernel_analytic": {"bytes": k_bytes, "flops": k_flops,
+                            "per_layer": kt, "layers": n_attn,
+                            "B_dev": B_dev, "H_dev": H_dev},
+        "roofline": {
+            **proj,
+            "bottleneck": max(proj, key=proj.get).replace("_s", ""),
+            "flops": rs["flops"] + k_flops,
+            "hbm_bytes": rs["hbm_bytes"] + k_bytes,
+            "coll_bytes": rs["coll_bytes"],
+            "coll_breakdown": rs["coll_breakdown"],
+        },
+    }
+    with open(os.path.join(OUT_DIR, rec["cell"] + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    dom_b = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+    dom_p = max(proj.values())
+    print(f"{arch} {shape_name} [{mesh_tag}]")
+    print(f"  base : compute {rb['compute_s']:.3e}  memory "
+          f"{rb['memory_s']:.3e}  coll {rb['collective_s']:.3e}")
+    print(f"  stub : compute {rs['compute_s']:.3e}  memory "
+          f"{rs['memory_s']:.3e}  coll {rs['collective_s']:.3e}")
+    print(f"  proj : compute {proj['compute_s']:.3e}  memory "
+          f"{proj['memory_s']:.3e}  coll {proj['collective_s']:.3e}")
+    print(f"  dominant term {dom_b:.3e} -> {dom_p:.3e}  "
+          f"({dom_b / dom_p:.2f}x)")
+    return rec
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "smollm-135m"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+    project(arch, shape, multi)

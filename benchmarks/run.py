@@ -1,0 +1,36 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  bench_quant_ablation  — Table 1 (quantization scheme ablation)
+  bench_resources       — Table 2 (footprint/compression accounting)
+  bench_throughput      — Fig 7   (decode throughput across sizes)
+  bench_energy_proxy    — Fig 8   (energy-efficiency proxy)
+  bench_kernels         — §4 modules (kernel vs oracle)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_energy_proxy, bench_kernels,
+                            bench_quant_ablation, bench_resources,
+                            bench_throughput)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_resources, bench_energy_proxy, bench_throughput,
+                bench_kernels, bench_quant_ablation):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,51 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md roofline
+table (single-pod per the assignment; multi-pod rows available via --mesh).
+
+    PYTHONPATH=src:. python -m benchmarks.summarize_roofline [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def load(mesh: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skip":
+        return (f"| {r['cell'].split('__')[0]} | "
+                f"{r['cell'].split('__')[1]} | — | — | — | — | skipped | — |")
+    ro = r["roofline"]
+    dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+    ur = ro.get("useful_ratio")
+    return (f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.2e} | "
+            f"{ro['memory_s']:.2e} | {ro['collective_s']:.2e} | "
+            f"**{ro['bottleneck']}** | {dom:.2e} | "
+            f"{ur:.3f} |" if ur is not None else "—")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    print(f"| arch | shape | compute (s) | memory (s) | collective (s) | "
+          f"bottleneck | dominant (s) | useful FLOP ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

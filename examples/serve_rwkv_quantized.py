@@ -1,0 +1,73 @@
+"""Serve a small RWKV model with batched requests under the paper's
+quantization + hardware numerics (deliverable b, serving flavour).
+
+    PYTHONPATH=src python examples/serve_rwkv_quantized.py
+
+Compares three serving configurations on the same weights:
+  1. fp          — float weights, exact exp/sigmoid/div
+  2. quantized   — Δ-PoT W9 weights + W9 additive (paper §3)
+  3. hw          — quantized + the accelerator's LUT-exp / PWL-sigmoid /
+                   LUT-div + A9 activations (paper §4, full hardware model)
+and reports throughput + agreement of the generated tokens.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.policy import QuantPolicy, fake_quantize_tree
+from repro.launch.serve import greedy_decode
+from repro.models import rwkv4 as R4
+from repro.models.registry import get_model
+
+BATCH, TOKENS = 4, 24
+
+
+class HwModel:
+    """RWKV-4 with the paper's full accelerator numerics."""
+
+    def __init__(self, model):
+        self._m = model
+        self.cfg = model.cfg
+
+    def decode_step(self, p, s, t, pos):
+        return R4.decode_step(self._m.cast_params(p), s, t, pos, self.cfg,
+                              hw=True)
+
+
+def decode_run(model, params, label):
+    state = model.cfg and None
+    m = model if not isinstance(model, HwModel) else model
+    base = model._m if isinstance(model, HwModel) else model
+    state = base.init_decode_state(BATCH, TOKENS + 4)
+    first = jnp.ones((BATCH, 1), jnp.int32)
+    t0 = time.time()
+    toks, _ = greedy_decode(m, params, state, first, TOKENS)
+    dt = time.time() - t0
+    print(f"{label:10s}: {BATCH * TOKENS / dt:8,.0f} tok/s "
+          f"(first seq: {toks[0, :10].tolist()} ...)")
+    return toks
+
+
+def main():
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    qparams = fake_quantize_tree(params, QuantPolicy())
+
+    t_fp = decode_run(model, params, "fp")
+    t_q = decode_run(model, qparams, "quantized")
+    t_hw = decode_run(HwModel(model), qparams, "hw")
+
+    agree_q = float(jnp.mean((t_fp == t_q).astype(jnp.float32)))
+    agree_hw = float(jnp.mean((t_fp == t_hw).astype(jnp.float32)))
+    print(f"\ntoken agreement vs fp: quantized {agree_q:.0%}, "
+          f"hw-numerics {agree_hw:.0%}")
+    print("(random-init weights make argmax near-tied, so agreement here is"
+          " a weak lower bound; the paper's Table-1 accuracy claim is"
+          " verified on trained weights via logit-KL in"
+          " benchmarks/bench_quant_ablation.py and"
+          " tests/test_models.py::test_rwkv4_hw_numerics_close_to_std)")
+
+
+if __name__ == "__main__":
+    main()

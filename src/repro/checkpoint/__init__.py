@@ -1,0 +1,6 @@
+"""Checkpointing: sharded, async, elastic-reshardable."""
+from repro.checkpoint.store import (
+    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]

@@ -1,0 +1,7 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, SHAPES, get_config, list_configs,
+    supported_shapes, smoke_config,
+)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config",
+           "list_configs", "supported_shapes", "smoke_config"]

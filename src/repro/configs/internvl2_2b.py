@@ -1,0 +1,21 @@
+"""internvl2-2b [vlm] — InternViT frontend (stub) + InternLM2 backbone.
+[arXiv:2404.16821; hf]
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553
+Per the assignment: the ViT frontend is a STUB — input_specs() provides
+precomputed patch embeddings (B, 256, d_model) prepended to the text.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=8192, vocab=92553, act="swiglu", norm="rmsnorm",
+    n_patches=256,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=256, act="swiglu", norm="rmsnorm",
+    n_patches=8,
+)

@@ -1,0 +1,24 @@
+"""llama4-maverick-400b-a17b [moe] — MoE, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128e top-1
+
+`moe_every=2` (interleaved dense/MoE layers, Llama-4's published layout)
+makes the per-layer dims consistent with the ~400B total; see DESIGN.md.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202048, act="swiglu", norm="rmsnorm",
+    n_experts=128, top_k=1, moe_every=2, capacity_factor=1.25,
+    optimizer="adafactor",  # full Adam moments would not fit a 256-chip pod
+    shard_kv_seq=False,     # §Perf: 40-head gather costs more than it saves
+)
+
+SMOKE = ModelConfig(
+    name="llama4-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=96, vocab=256, act="swiglu", norm="rmsnorm",
+    n_experts=8, top_k=1, moe_every=2, capacity_factor=2.0,
+)

@@ -1,0 +1,24 @@
+"""minicpm3-4b [dense] — MLA (multi-head latent attention).
+[hf:openbmb/MiniCPM3-4B; hf]
+62L d_model=2560 40H (GQA kv=40) d_ff=6400 vocab=73448
+MLA ranks follow the HF config: q_lora 768, kv_lora 256, qk_nope 64,
+qk_rope 32, v_head 64.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="dense",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=6400, vocab=73448, act="swiglu", norm="rmsnorm",
+    use_mla=True, q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    shard_kv_seq=False,  # §Perf: MLA latent cache is small; gather dominates
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, act="swiglu", norm="rmsnorm",
+    use_mla=True, q_lora_rank=32, kv_lora_rank=16,
+    qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8,
+)

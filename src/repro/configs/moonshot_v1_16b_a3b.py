@@ -1,0 +1,19 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight, 64 experts top-6.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64e top-6
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=163840, act="swiglu", norm="rmsnorm",
+    n_experts=64, top_k=6, moe_every=1, capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="moonshot-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=48, vocab=256, act="swiglu", norm="rmsnorm",
+    n_experts=8, top_k=2, moe_every=1, capacity_factor=1.5,
+)

@@ -1,0 +1,17 @@
+"""phi3-mini-3.8b [dense] — RoPE SwiGLU GQA (MHA: kv == heads).
+[arXiv:2404.14219; unverified]
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32064, act="swiglu", norm="rmsnorm",
+)
+
+SMOKE = ModelConfig(
+    name="phi3-mini-smoke", family="dense",
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=256, act="swiglu", norm="rmsnorm",
+)

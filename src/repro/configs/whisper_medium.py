@@ -1,0 +1,21 @@
+"""whisper-medium [audio] — encoder-decoder, conv frontend stubbed.
+[arXiv:2212.04356; unverified]
+24L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=51865
+Per the assignment: the modality frontend is a STUB — input_specs()
+provides precomputed frame embeddings (B, 1500, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=51865, act="gelu", norm="layernorm",
+    enc_layers=24, enc_frames=1500, rope_theta=0.0,  # learned pos emb, no rope
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, act="gelu", norm="layernorm",
+    enc_layers=2, enc_frames=32, rope_theta=0.0,
+)

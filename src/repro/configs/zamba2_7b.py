@@ -1,0 +1,23 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; unverified]
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64
+Shared transformer block applied every 6 mamba layers on
+concat(hidden, embedding) (the Zamba concatenation trick).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab=32000, act="swiglu", norm="rmsnorm",
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+    shared_attn_every=6,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid",
+    n_layers=7, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, act="swiglu", norm="rmsnorm",
+    ssm_state=16, ssm_head_dim=16, ssm_expand=2,
+    shared_attn_every=3,
+)

@@ -1,0 +1,3 @@
+"""Core — the paper's contributions: quantization (C1/C2), complex-op
+approximation units (C3), and the WKV/SSD recurrences that the fused
+on-chip pipeline (C4) is built around."""

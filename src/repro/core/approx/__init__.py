@@ -1,0 +1,19 @@
+"""Complex-operation approximation units (paper §4.3–4.4).
+
+Bit-accurate software models of the paper's hardware units:
+  exp_lut      — e^x via base-2 transform + 256-entry fraction LUT
+  sigmoid_pwl  — 4-segment piecewise-linear sigmoid with dyadic slopes
+  div_lut      — LOD-normalized division with a 256-entry 2-D mantissa LUT
+  lod          — hierarchical-binary-search leading-one detector
+"""
+from repro.core.approx.units import (
+    exp_lut,
+    sigmoid_pwl,
+    div_lut,
+    lod,
+    EXP_LUT_TABLE,
+    DIV_LUT_TABLE,
+)
+
+__all__ = ["exp_lut", "sigmoid_pwl", "div_lut", "lod",
+           "EXP_LUT_TABLE", "DIV_LUT_TABLE"]

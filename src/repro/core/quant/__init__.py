@@ -1,0 +1,44 @@
+"""Quantization library — the paper's C1/C2 contributions.
+
+Exports:
+  delta_pot   — the paper's Δ-PoT additive-powers-of-two format (§3.1)
+  uniform     — 9-bit uniform symmetric quantization (§3.2)
+  schemes     — baselines reproduced for the Table-1 ablation (RTN/PoT/LogQ)
+  policy      — mixed-precision policy over a parameter tree (§3.2)
+"""
+from repro.core.quant.delta_pot import (
+    DPotFormat,
+    DPotQuantized,
+    dpot_levels,
+    dpot_quantize,
+    dpot_dequantize,
+    dpot_fake_quant,
+    dpot_pack_int8,
+    dpot_unpack_int8,
+)
+from repro.core.quant.uniform import (
+    uniform_quantize,
+    uniform_dequantize,
+    uniform_fake_quant,
+)
+from repro.core.quant.schemes import (
+    rtn_fake_quant,
+    pot_fake_quant,
+    logq_fake_quant,
+    SCHEMES,
+)
+from repro.core.quant.policy import (
+    QuantPolicy,
+    classify_param,
+    quantize_tree,
+    fake_quantize_tree,
+)
+
+__all__ = [
+    "DPotFormat", "DPotQuantized", "dpot_levels", "dpot_quantize",
+    "dpot_dequantize", "dpot_fake_quant", "dpot_pack_int8",
+    "dpot_unpack_int8", "uniform_quantize", "uniform_dequantize",
+    "uniform_fake_quant", "rtn_fake_quant", "pot_fake_quant",
+    "logq_fake_quant", "SCHEMES", "QuantPolicy", "classify_param",
+    "quantize_tree", "fake_quantize_tree",
+]

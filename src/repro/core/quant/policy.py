@@ -1,0 +1,163 @@
+"""Mixed-precision quantization policy over a parameter tree (paper §3.2).
+
+Classification rule (the paper's):
+  * weights that MULTIPLY activations (all ≥2-D projection matrices,
+    including MoE expert tensors)            -> Δ-PoT
+  * weights used ADDITIVELY or element-wise (token-shift μ, decay w, bonus u,
+    LayerNorm γ/β, biases — everything 1-D)  -> 9-bit uniform symmetric
+  * embedding tables (gather, no multiply)   -> 9-bit uniform symmetric
+  * activations                              -> 9-bit uniform (applied inside
+    the quantized model's forward pass, not here)
+
+The classifier is path-based with a ndim fallback so it works on any of the
+registered architectures' parameter trees without per-model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.delta_pot import (
+    DPotFormat, FORMAT_W9, dpot_quantize, dpot_fake_quant, DPotQuantized,
+)
+from repro.core.quant.uniform import (
+    uniform_quantize, uniform_fake_quant, uniform_dequantize,
+)
+
+# path substrings that force the uniform branch even for 2-D tensors
+_ADDITIVE_HINTS = re.compile(
+    r"(embed|emb_|ln|norm|scale|bias|mu_|time_mix|time_decay|time_first|"
+    r"decay|bonus|gamma|beta|_shift|pos_emb|a_log|dt_bias|conv)",
+    re.IGNORECASE,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """The mixed-precision operating point."""
+
+    matmul_fmt: DPotFormat = FORMAT_W9   # Δ-PoT format for projection matrices
+    additive_bits: int = 9               # uniform bits for additive weights
+    activation_bits: int = 9             # uniform bits for activations
+    channel_axis: int = -1               # per-output-channel scales
+    mse_search: bool = False
+
+    def act_fq(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Activation fake-quant, per-tensor (the paper's A9)."""
+        return uniform_fake_quant(x, self.activation_bits, None)
+
+
+def classify_param(path: str, leaf: Any) -> str:
+    """'matmul' | 'additive' | 'skip' for a parameter leaf."""
+    if not hasattr(leaf, "ndim"):
+        return "skip"
+    if leaf.ndim < 2:
+        return "additive"
+    if _ADDITIVE_HINTS.search(path):
+        return "additive"
+    return "matmul"
+
+
+def _iter_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), leaf
+    return treedef
+
+
+def fake_quantize_tree(params, policy: QuantPolicy = QuantPolicy()):
+    """quantize→dequantize every weight per the policy (for accuracy evals).
+
+    Returns a tree with the same structure/dtypes as `params`.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        p = jax.tree_util.keystr(path)
+        kind = classify_param(p, leaf)
+        if kind == "matmul":
+            out.append(dpot_fake_quant(
+                leaf, policy.matmul_fmt.ks, policy.channel_axis,
+                policy.mse_search))
+        elif kind == "additive":
+            out.append(uniform_fake_quant(leaf, policy.additive_bits, None))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fake_quantize_tree_with(params, scheme_fn: Callable, bits: int = 9,
+                            axis=None):
+    """Apply an arbitrary Table-1 scheme to every matmul weight; additive
+    weights always get W9 uniform (the paper quantizes those uniformly under
+    every scheme — the ablation varies only the matrix-weight scheme)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        p = jax.tree_util.keystr(path)
+        kind = classify_param(p, leaf)
+        if kind == "matmul":
+            out.append(scheme_fn(leaf, bits, axis))
+        elif kind == "additive":
+            out.append(uniform_fake_quant(leaf, 9, None))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_tree(params, policy: QuantPolicy = QuantPolicy()):
+    """Real quantization for the serving path: matmul weights become
+    DPotQuantized containers, additive weights (codes, scale) pairs.
+
+    Returns (quantized_tree, stats) where stats has byte accounting used by
+    the Table-2 style resource benchmark.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    bytes_fp16 = 0
+    bytes_quant = 0
+    for path, leaf in flat:
+        p = jax.tree_util.keystr(path)
+        kind = classify_param(p, leaf)
+        if kind == "skip":
+            out.append(leaf)
+            continue
+        bytes_fp16 += leaf.size * 2
+        if kind == "matmul":
+            q = dpot_quantize(leaf, policy.matmul_fmt,
+                              axis=policy.channel_axis,
+                              mse_search=policy.mse_search)
+            bytes_quant += q.nbytes_hardware()
+            out.append(q)
+        else:
+            codes, scale = uniform_quantize(leaf, policy.additive_bits,
+                                            axis=None)
+            bytes_quant += (leaf.size * policy.additive_bits + 7) // 8 + 4
+            out.append({"codes": codes.astype(jnp.int16), "scale": scale})
+    stats = {"bytes_fp16": bytes_fp16, "bytes_quant": bytes_quant,
+             "compression": bytes_fp16 / max(bytes_quant, 1)}
+    return jax.tree_util.tree_unflatten(treedef, out), stats
+
+
+def dequantize_tree(qparams):
+    """Inverse of quantize_tree (reference path for tests)."""
+    def deq(leaf):
+        if isinstance(leaf, DPotQuantized):
+            from repro.core.quant.delta_pot import dpot_dequantize
+            return dpot_dequantize(leaf)
+        return leaf
+
+    def deq_dict(leaf):
+        if isinstance(leaf, dict) and set(leaf) == {"codes", "scale"}:
+            return uniform_dequantize(leaf["codes"], leaf["scale"])
+        return leaf
+
+    tree = jax.tree_util.tree_map(
+        deq, qparams, is_leaf=lambda x: isinstance(x, DPotQuantized))
+    return jax.tree_util.tree_map(
+        deq_dict, tree,
+        is_leaf=lambda x: isinstance(x, dict) and set(x) == {"codes", "scale"})

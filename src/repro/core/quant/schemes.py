@@ -1,0 +1,93 @@
+"""Baseline quantization schemes for the Table-1 ablation.
+
+The paper compares its Δ-PoT scheme against three baselines, all "simulating
+the precision loss of an equivalent W9A9 quantization":
+
+  RTN  — round-to-nearest uniform symmetric (Jacob et al. 2017)
+  PoT  — single power-of-two level per weight (INQ, Zhou et al. 2017)
+  LogQ — logarithmic quantization with a fractional log step
+         (LogNet, Lee et al. 2017 / Cai et al. 2018)
+
+Each is exposed as a fake-quant `f(w, bits, axis) -> w_hat` so the ablation
+harness can swap schemes over the same model.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant.uniform import uniform_fake_quant
+from repro.core.quant.delta_pot import dpot_fake_quant, DPotFormat
+
+
+def rtn_fake_quant(w: jnp.ndarray, bits: int = 9, axis=None) -> jnp.ndarray:
+    """Round-to-nearest uniform — identical to uniform symmetric quant."""
+    return uniform_fake_quant(w, bits, axis)
+
+
+def _amax(x, axis):
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    reduce_axes = tuple(i for i in range(x.ndim)
+                        if i not in tuple(a % x.ndim for a in axes))
+    return jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+
+
+def pot_fake_quant(w: jnp.ndarray, bits: int = 9, axis=None) -> jnp.ndarray:
+    """Single-term powers-of-two: w_hat = s * sign(w) * 2^round(log2|w|/s).
+
+    The exponent is clipped to the (bits-1)-bit range below the per-channel
+    max, and an all-zero code exists for |w| below the smallest level — the
+    standard PoT grid {0} ∪ {±s·2^-e : e ∈ [0, 2^(bits-1)-2]}.
+    """
+    w32 = jnp.asarray(w, jnp.float32)
+    s = _amax(w32, axis)
+    s = jnp.where(s <= 0, 1.0, s)
+    n_exp = (1 << (bits - 1)) - 1  # exponent codes incl. the zero code
+    a = jnp.abs(w32) / s
+    loga = jnp.log2(jnp.maximum(a, 1e-38))
+    e = jnp.clip(jnp.round(-loga), 0, n_exp - 1)
+    lvl = jnp.exp2(-e)
+    # zero code: values closer to 0 than to the smallest level
+    smallest = 2.0 ** (-(n_exp - 1))
+    lvl = jnp.where(a < smallest / 2, 0.0, lvl)
+    return (jnp.sign(w32) * lvl * s).astype(w.dtype)
+
+
+def logq_fake_quant(w: jnp.ndarray, bits: int = 9, axis=None,
+                    log_step: float = 0.5) -> jnp.ndarray:
+    """Logarithmic quantization with fractional step: levels s·2^(-i·step).
+
+    With step < 1 the grid is denser than PoT near the max (LogNet's
+    "finer-grained log" variant); still a single multiplicative level so the
+    hardware cost story matches the paper's LogQ row.
+    """
+    w32 = jnp.asarray(w, jnp.float32)
+    s = _amax(w32, axis)
+    s = jnp.where(s <= 0, 1.0, s)
+    n_codes = (1 << (bits - 1)) - 1
+    a = jnp.abs(w32) / s
+    loga = jnp.log2(jnp.maximum(a, 1e-38)) / log_step
+    i = jnp.clip(jnp.round(-loga), 0, n_codes - 1)
+    lvl = jnp.exp2(-i * log_step)
+    smallest = 2.0 ** (-(n_codes - 1) * log_step)
+    lvl = jnp.where(a < smallest / 2, 0.0, lvl)
+    return (jnp.sign(w32) * lvl * s).astype(w.dtype)
+
+
+def proposed_fake_quant(w: jnp.ndarray, bits: int = 9, axis=None
+                        ) -> jnp.ndarray:
+    """The paper's scheme at the Table-1 operating point: Δ-PoT with
+    sign + ks=(4,4) (9 bits total) and per-channel MSE-refined scales."""
+    del bits  # fixed by the format
+    return dpot_fake_quant(w, (4, 4), axis, True)
+
+
+# name -> fake-quant fn, as compared in Table 1
+SCHEMES = {
+    "fp": lambda w, bits=9, axis=None: w,
+    "rtn": rtn_fake_quant,
+    "pot": pot_fake_quant,
+    "logq": logq_fake_quant,
+    "proposed": proposed_fake_quant,
+}

@@ -1,0 +1,106 @@
+"""Packed-weight serving: the paper's deployment mode on TPU.
+
+The accelerator stores Δ-PoT codes in (HBM-equivalent) memory and decodes
+on-chip (§3.1, §4.1).  TPU translation: matmul weights live in device HBM as
+ONE uint8 per weight (sign + ks=(3,4) codes, FORMAT_W8) plus an f32 scale
+per output channel; `unpack_params` runs INSIDE the jitted serve step, so
+XLA reads int8 from HBM and fuses the decode into the consumer matmuls —
+weight traffic halves vs bf16 (the paper's bandwidth win), at the Table-1
+accuracy cost.
+
+API:
+  pack_params(params)          -> packed tree (+ additive leaves cast bf16)
+  unpack_params(packed)        -> compute tree (call inside jit)
+  packed_abstract(spec)        -> ShapeDtypeStruct tree (dry-run input)
+  packed_axes(spec_axes)       -> logical-sharding tree for the packed form
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.delta_pot import (
+    FORMAT_W8, dpot_decode_codes, dpot_pack_int8, dpot_quantize)
+from repro.core.quant.policy import classify_param
+
+
+def _is_packed(leaf) -> bool:
+    return isinstance(leaf, dict) and set(leaf) == {"packed", "scale"}
+
+
+def pack_params(params):
+    """Quantize every matmul weight to packed Δ-PoT W8; cast the rest bf16."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if classify_param(key, leaf) == "matmul":
+            q = dpot_quantize(leaf, FORMAT_W8, axis=-1)
+            out.append({"packed": dpot_pack_int8(q),
+                        "scale": q.scale.astype(jnp.float32)})
+        else:
+            out.append(leaf.astype(jnp.bfloat16)
+                       if hasattr(leaf, "astype") else leaf)
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def unpack_params(packed):
+    """Packed tree -> bf16 compute tree.  Runs inside jit: the uint8 codes
+    are what crosses HBM; the exp2 decode fuses into the matmul."""
+    def deq(leaf):
+        if not _is_packed(leaf):
+            return leaf
+        p = leaf["packed"]
+        codes = (p & 0x7F).astype(jnp.uint8)
+        sign = jnp.where((p >> 7) & 1, -1.0, 1.0)
+        lvl = dpot_decode_codes(codes, FORMAT_W8.ks)
+        return (sign * lvl * leaf["scale"]).astype(jnp.bfloat16)
+    return jax.tree_util.tree_map(deq, packed, is_leaf=_is_packed)
+
+
+def packed_abstract(spec_tree, abstract_params):
+    """ShapeDtypeStruct tree of the packed form (for the dry-run)."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if classify_param(key, leaf) == "matmul":
+            scale_shape = tuple(1 for _ in leaf.shape[:-1]) + \
+                (leaf.shape[-1],)
+            out.append({
+                "packed": jax.ShapeDtypeStruct(leaf.shape, jnp.uint8),
+                "scale": jax.ShapeDtypeStruct(scale_shape, jnp.float32),
+            })
+        else:
+            out.append(jax.ShapeDtypeStruct(leaf.shape, jnp.bfloat16))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def serving_axes(param_axes_tree, abstract_packed_tree):
+    """Axes tree matching the *packed* structure: for packed leaves the
+    codes get the original axes and the scale gets (None..., last-axis)."""
+    flat_axes, adef = jax.tree_util.tree_flatten(
+        param_axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_pk = adef.flatten_up_to(abstract_packed_tree)
+    out = []
+    for axes, leaf in zip(flat_axes, flat_pk):
+        if isinstance(leaf, dict) and set(leaf) == {"packed", "scale"}:
+            out.append({
+                "packed": axes,
+                "scale": tuple([None] * (len(axes) - 1)) + (axes[-1],),
+            })
+        else:
+            out.append(axes)
+    return jax.tree_util.tree_unflatten(adef, out)
+
+
+def replicate_fsdp(axes_tree):
+    """Serving sharding policy: drop the FSDP axis (weights replicated over
+    'data'; TP only).  Kills the per-step weight all-gather that FSDP
+    sharding would force during decode — see EXPERIMENTS.md §Perf."""
+    def strip(axes):
+        return tuple(None if a == "fsdp" else a for a in axes)
+    return jax.tree_util.tree_map(
+        strip, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))

@@ -1,0 +1,58 @@
+"""9-bit uniform symmetric quantization (paper §3.2).
+
+Used for: additive weights (token-shift μ, decay w, bonus u, LN γ/β) and all
+activations / intermediate results.  "9-bit" = sign + 8 magnitude bits, i.e.
+the integer grid [−255, +255] (symmetric, no negative-max asymmetry), exactly
+the W9A9 setting the paper's Table-1 baselines simulate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _qmax(bits: int) -> int:
+    # sign + (bits-1) magnitude bits, symmetric grid
+    return (1 << (bits - 1)) - 1
+
+
+def _amax(x: jnp.ndarray, axis) -> jnp.ndarray:
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    reduce_axes = tuple(i for i in range(x.ndim)
+                        if i not in tuple(a % x.ndim for a in axes))
+    return jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+
+
+def uniform_quantize(x: jnp.ndarray, bits: int = 9, *, axis=None):
+    """x -> (int32 codes in [-qmax, qmax], f32 scale)."""
+    x = jnp.asarray(x, jnp.float32)
+    qmax = _qmax(bits)
+    amax = _amax(x, axis)
+    scale = jnp.where(amax <= 0, 1.0, amax / qmax)
+    codes = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return codes, scale
+
+
+def uniform_dequantize(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def uniform_fake_quant(x, bits: int = 9, axis=None):
+    codes, scale = uniform_quantize(x, bits, axis=axis)
+    return uniform_dequantize(codes, scale).astype(x.dtype)
+
+
+def _ufq_fwd(x, bits, axis):
+    return uniform_fake_quant(x, bits, axis), None
+
+
+def _ufq_bwd(bits, axis, _, g):
+    return (g,)
+
+
+uniform_fake_quant.defvjp(_ufq_fwd, _ufq_bwd)

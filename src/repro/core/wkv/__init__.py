@@ -1,0 +1,21 @@
+"""Recurrent state operators.
+
+  wkv4 — the paper's RWKV-4 WKV weighted average (Eq. 2), numerically-stable
+         running-max form; scan (sequence) + single-step (decode) variants.
+  wkv6 — RWKV-6 "Finch" data-dependent-decay linear attention; scan,
+         single-step, and chunked (sub-quadratic prefill) variants.
+  ssd  — Mamba-2 state-space-duality recurrence (scalar per-head decay) for
+         the zamba2 hybrid; scan, single-step and chunked variants.
+"""
+from repro.core.wkv.wkv4 import (
+    wkv4_scan, wkv4_step, WKV4State, wkv4_init_state)
+from repro.core.wkv.wkv6 import (
+    wkv6_scan, wkv6_step, wkv6_chunked, wkv6_init_state)
+from repro.core.wkv.ssd import (
+    ssd_scan, ssd_step, ssd_chunked, ssd_init_state)
+
+__all__ = [
+    "wkv4_scan", "wkv4_step", "WKV4State", "wkv4_init_state",
+    "wkv6_scan", "wkv6_step", "wkv6_chunked", "wkv6_init_state",
+    "ssd_scan", "ssd_step", "ssd_chunked", "ssd_init_state",
+]

@@ -1,0 +1,95 @@
+"""Mamba-2 SSD recurrence (for the zamba2 hybrid blocks).
+
+Per head with state dim N and head (value) dim P:
+
+    h_t = a_t · h_{t-1} + B_t ⊗ x_t          a_t ∈ (0,1) scalar per head
+    y_t = C_t @ h_t  (+ D ⊙ x_t skip)
+
+Shapes:
+    x : (B, T, H, P)    a : (B, T, H)    Bc, Cc : (B, T, H, N)
+    h : (B, H, N, P)
+
+The scalar-per-head decay (vs. RWKV-6's vector decay) is what makes the
+chunked "state-space duality" form a plain masked attention matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_init_state(batch: int, heads: int, state_dim: int, head_dim: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros((batch, heads, state_dim, head_dim), dtype)
+
+
+def ssd_step(h, x, a, Bc, Cc):
+    """Decode step. x:(B,H,P) a:(B,H) Bc,Cc:(B,H,N); h:(B,H,N,P)."""
+    h = a[..., None, None] * h + Bc[..., :, None] * x[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Cc, h)
+    return h, y
+
+
+def ssd_scan(x, a, Bc, Cc, state=None):
+    """Reference scan. x:(B,T,H,P) a:(B,T,H) Bc,Cc:(B,T,H,N)."""
+    B, T, H, P = x.shape
+    N = Bc.shape[-1]
+    if state is None:
+        state = ssd_init_state(B, H, N, P, jnp.float32)
+    f32 = lambda z: z.astype(jnp.float32)
+
+    def body(h, inp):
+        xt, at, bt, ct = inp
+        h, y = ssd_step(h, xt, at, bt, ct)
+        return h, y
+
+    xs = jnp.moveaxis(f32(x), 1, 0)
+    as_ = jnp.moveaxis(f32(a), 1, 0)
+    bs = jnp.moveaxis(f32(Bc), 1, 0)
+    cs = jnp.moveaxis(f32(Cc), 1, 0)
+    final, ys = jax.lax.scan(body, state, (xs, as_, bs, cs))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def ssd_chunked(x, a, Bc, Cc, state=None, *, chunk: int = 64):
+    """Chunked SSD: y_t = C_t Σ_{i<=t} (Π_{j=i+1..t} a_j) B_i x_i^T.
+
+    With scalar decay, Π a_j = e^{La_t - La_i} where La = cumsum(log a); the
+    intra-chunk part is a (C×C)-masked matmul and the inter-chunk part a
+    state bmm — the MXU-friendly "dual" form of the scan.
+    """
+    B, T, H, P = x.shape
+    N = Bc.shape[-1]
+    C = chunk
+    if T % C != 0:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    G = T // C
+    if state is None:
+        state = ssd_init_state(B, H, N, P, jnp.float32)
+    f32 = lambda z: z.astype(jnp.float32)
+    resh4 = lambda z: jnp.moveaxis(f32(z).reshape(B, G, C, *z.shape[2:]), 1, 0)
+    xs, as_, bs, cs = resh4(x), resh4(a), resh4(Bc), resh4(Cc)
+    mask = jnp.tril(jnp.ones((C, C), jnp.float32))  # inclusive i <= t
+
+    def body(h, inp):
+        xc, ac, bc, cc = inp                         # (B,C,H,·)
+        la = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-38)), axis=1)  # (B,C,H)
+        # inter-chunk: decay from chunk start to t inclusive = e^{la_t}
+        y = jnp.einsum("bchn,bhnp->bchp", cc * jnp.exp(la)[..., None], h)
+        # intra-chunk masked attention: the decay is SCALAR per head, so the
+        # exact pair-ratio matrix e^{la_t - la_i} is only (B,C,C,H).  Mask
+        # (i <= t) BEFORE the exp so every live exponent is <= 0 — this can
+        # only underflow (the true limit), never overflow.
+        D = la[:, :, None, :] - la[:, None, :, :]    # (B,C,C,H) = la_t - la_i
+        D = jnp.where(mask[None, :, :, None].astype(bool), D, -1e30)
+        att = jnp.einsum("bchn,bdhn->bcdh", cc, bc) * jnp.exp(D)
+        y = y + jnp.einsum("bcdh,bdhp->bchp", att, xc)
+        # state update: h' = e^{la_C} h + Σ_i e^{la_C - la_i} B_i x_i^T
+        ltot = la[:, -1, :]                          # (B,H)
+        b_fut = bc * jnp.exp(ltot[:, None, :] - la)[..., None]
+        h = jnp.exp(ltot)[..., None, None] * h + jnp.einsum(
+            "bchn,bchp->bhnp", b_fut, xc)
+        return h, y
+
+    final, ys = jax.lax.scan(body, state, (xs, as_, bs, cs))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P).astype(x.dtype), final

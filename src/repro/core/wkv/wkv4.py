@@ -1,0 +1,83 @@
+"""RWKV-4 WKV operator (paper Eq. 2), numerically-stable running-max form.
+
+The mathematical definition
+
+    wkv_t = ( Σ_{i<t} e^{-(t-1-i)w + k_i} ⊙ v_i  +  e^{u+k_t} ⊙ v_t )
+            / ( Σ_{i<t} e^{-(t-1-i)w + k_i}      +  e^{u+k_t} )
+
+is evaluated with the official implementation's stable recurrence: carry
+(a, b, o) where a/b are the exponent-shifted numerator/denominator sums and
+o is the running max exponent, so no e^{·} ever overflows.
+
+Shapes (channel-parallel, exactly the hardware's element-wise dataflow):
+    k, v : (..., T, C)      w, u : (C,)   with w > 0 the decay rate
+    state: a, b, o : (..., C)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WKV4State(NamedTuple):
+    a: jnp.ndarray  # shifted numerator
+    b: jnp.ndarray  # shifted denominator
+    o: jnp.ndarray  # running max exponent
+
+
+def wkv4_init_state(batch_shape, channels: int, dtype=jnp.float32
+                    ) -> WKV4State:
+    shape = tuple(batch_shape) + (channels,)
+    return WKV4State(
+        a=jnp.zeros(shape, dtype),
+        b=jnp.zeros(shape, dtype),
+        o=jnp.full(shape, -1e38, dtype),
+    )
+
+
+def wkv4_step(state: WKV4State, k: jnp.ndarray, v: jnp.ndarray,
+              w: jnp.ndarray, u: jnp.ndarray,
+              *, exp=jnp.exp, div=None) -> tuple[WKV4State, jnp.ndarray]:
+    """One decode step.  `exp`/`div` are injectable so the quantized model
+    can substitute the paper's LUT units (repro.core.approx)."""
+    a, b, o = state
+    if div is None:
+        div = lambda x, y: x / y
+    # output: include the bonus u for the current token
+    no = jnp.maximum(o, u + k)
+    A = exp(o - no)
+    B = exp(u + k - no)
+    wkv = div(A * a + B * v, A * b + B)
+    # state update: decay the history by w, absorb the current token
+    no2 = jnp.maximum(o - w, k)
+    A2 = exp(o - w - no2)
+    B2 = exp(k - no2)
+    new = WKV4State(a=A2 * a + B2 * v, b=A2 * b + B2, o=no2)
+    return new, wkv
+
+
+def wkv4_scan(k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+              u: jnp.ndarray, state: WKV4State | None = None,
+              *, exp=jnp.exp, div=None
+              ) -> tuple[jnp.ndarray, WKV4State]:
+    """Sequence form: k, v are (..., T, C); scans over T (axis -2)."""
+    T = k.shape[-2]
+    C = k.shape[-1]
+    if state is None:
+        state = wkv4_init_state(k.shape[:-2], C, jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+
+    def body(carry, kv):
+        kt, vt = kv
+        new, out = wkv4_step(carry, kt, vt, w32, u32, exp=exp, div=div)
+        return new, out
+
+    ks = jnp.moveaxis(k32, -2, 0)
+    vs = jnp.moveaxis(v32, -2, 0)
+    final, outs = jax.lax.scan(body, state, (ks, vs), length=T)
+    return jnp.moveaxis(outs, 0, -2).astype(k.dtype), final

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic token streams, host-sharded."""
+from repro.data.pipeline import (
+    SyntheticLM, make_batch_iterator, batch_specs)
+
+__all__ = ["SyntheticLM", "make_batch_iterator", "batch_specs"]

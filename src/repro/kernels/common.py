@@ -1,0 +1,17 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default(interpret: bool | None) -> bool:
+    """Pallas kernels target TPU; everywhere else (this CPU container)
+    they run in interpret mode, which executes the kernel body in Python —
+    the correctness-validation path required by the assignment."""
+    if interpret is None:
+        return not on_tpu()
+    return interpret

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: matmul with Δ-PoT-packed weights (paper C1 -> TPU).
+
+The paper replaces DSP multipliers with shift-add over Δ-PoT codes; the TPU
+translation (DESIGN.md §2-C1) is: weights live in HBM as *packed int8 codes*
+(sign bit + ks=(3,4) differential exponents = 8 bits/weight vs 16 for bf16),
+are streamed HBM->VMEM tile-by-tile by the pallas grid pipeline (the paper's
+ping-pong URAM double-buffering — same mechanism, same purpose), decoded to
+f32 *inside VMEM* with VPU integer ops + exp2 (the barrel-shifter analogue),
+and fed to the MXU as dense tiles.  HBM weight traffic halves; the matmul
+itself stays systolic.
+
+    out[M, N] = x[M, K] @ decode(wq[K, N]) * scale[N]
+
+Block tiling: (bm x bk) @ (bk x bn) -> (bm x bn), grid (M/bm, N/bn, K/bk)
+with the K axis innermost so the f32 accumulator tile stays resident in VMEM
+across the K sweep (revisiting semantics), initialized at k==0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+K0_BITS, K1_BITS = 3, 4  # FORMAT_W8 = sign + ks=(3,4) packed into int8
+
+
+def _decode_w8(codes_u8: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """uint8 packed Δ-PoT -> f32, fully vectorized (VPU-friendly).
+
+    bit 7 = sign; bits 2:0 = Δq0; bits 6:3 = Δq1.  Δq_i = 0 kills term i and
+    all later terms (paper Eq. 6)."""
+    c = codes_u8.astype(jnp.int32)
+    sign = jnp.where((c >> 7) & 1, -1.0, 1.0)
+    dq0 = c & ((1 << K0_BITS) - 1)
+    dq1 = (c >> K0_BITS) & ((1 << K1_BITS) - 1)
+    alive0 = dq0 > 0
+    q0 = dq0.astype(jnp.float32)
+    t0 = jnp.where(alive0, jnp.exp2(-q0), 0.0)
+    alive1 = alive0 & (dq1 > 0)
+    t1 = jnp.where(alive1, jnp.exp2(-(q0 + dq1.astype(jnp.float32))), 0.0)
+    return sign * (t0 + t1) * scale
+
+
+def _kernel(x_ref, wq_ref, scale_ref, o_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _decode_w8(wq_ref[...], scale_ref[...][None, :])
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dpot_matmul(x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray, *,
+                bm: int = 128, bn: int = 128, bk: int = 512,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """x: (M, K) f32/bf16; wq: (K, N) uint8 packed; scale: (N,) f32."""
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2 and scale.shape == (N,)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret_default(interpret),
+    )(x, wq, scale)
+    return out.astype(x.dtype)

@@ -1,0 +1,322 @@
+"""Pallas TPU kernel: fused causal flash attention (beyond-paper opt #1).
+
+Motivation from the roofline (EXPERIMENTS.md §Perf): in the XLA-lowered
+attention the (B,H,Sq,Skv) score/softmax intermediates materialize to HBM —
+at train_4k they are the DOMINANT memory-roofline term for every attention
+arch.  The paper's fully-on-chip principle (C4) applied to attention: tile
+Q into VMEM, stream KV blocks through VMEM, keep scores/softmax state in
+registers — HBM traffic collapses to Q+K+V+O.
+
+Grid (B*H, Sq/bq, Skv/bkv), KV innermost; the (m, l, acc) online-softmax
+state lives in VMEM scratch across the KV sweep.  Causality: KV blocks
+strictly above the diagonal are skipped via pl.when (their writes would be
+masked anyway, this saves the compute).
+
+GQA is handled by the wrapper (q heads grouped per kv head).  The oracle is
+repro.models.layers._plain_attention via ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bq: int, bkv: int, causal: bool):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = q_idx * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 0)
+            kpos = kv_idx * bkv + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bkv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    if causal:
+        # skip KV blocks entirely above the diagonal
+        pl.when(kv_idx * bkv <= q_idx * bq + bq - 1)(_block)
+    else:
+        _block()
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def _kernel_fwd(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr,
+                *, scale: float, bq: int, bkv: int, causal: bool):
+    """Forward that also emits the log-sum-exp rows for the backward."""
+    _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            scale=scale, bq=bq, bkv=bkv, causal=causal)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _emit_lse():
+        lse_ref[0] = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+
+
+def _blocks(Sq, Skv, bq, bkv):
+    bq = min(bq, Sq)
+    while Sq % bq != 0:
+        bq //= 2
+    bkv = min(bkv, Skv)
+    while Skv % bkv != 0:
+        bkv //= 2
+    return bq, bkv
+
+
+def _fwd_call(qh, kh, vh, *, causal, bq, bkv, interpret):
+    BH, Sq, d = qh.shape
+    Skv = kh.shape[1]
+    bq, bkv = _blocks(Sq, Skv, bq, bkv)
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel_fwd, scale=1.0 / math.sqrt(d), bq=bq,
+                          bkv=bkv, causal=causal),
+        grid=(BH, Sq // bq, Skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, d), qh.dtype),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m: running max
+            pltpu.VMEM((bq,), jnp.float32),       # l: running denom
+            pltpu.VMEM((bq, d), jnp.float32),     # acc: running numerator
+        ],
+        interpret=interpret_default(interpret),
+    )(qh, kh, vh)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels.  dS = P ∘ (dP − D) with P = exp(S − lse),
+# D_i = rowsum(dO_i ∘ O_i):
+#   dQ_i = scale · Σ_j dS_ij K_j      (grid: j innermost, dQ accumulates)
+#   dK_j = scale · Σ_i dS_ij^T Q_i    (grid: i innermost, dK/dV accumulate)
+#   dV_j = Σ_i P_ij^T dO_i
+# ---------------------------------------------------------------------------
+
+
+def _scores(q, k, scale, causal, q_idx, kv_idx, bq, bkv):
+    s = jnp.dot(q.astype(jnp.float32) * scale, k.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32)
+    if causal:
+        qpos = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = kv_idx * bkv + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bkv), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    return s
+
+
+def _kernel_dq(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref, dq_ref,
+               *, scale: float, bq: int, bkv: int, causal: bool):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_ref[0] = jnp.zeros_like(dq_ref[0])
+
+    @pl.when(jnp.logical_not(causal) | (j * bkv <= i * bq + bq - 1))
+    def _block():
+        s = _scores(q_ref[0], k_ref[0], scale, causal, i, j, bq, bkv)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        dp = jnp.dot(do_ref[0].astype(jnp.float32),
+                     v_ref[0].astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+        ds = p * (dp - dlt_ref[0][:, None])
+        dq_ref[0] += (scale * jnp.dot(
+            ds, k_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)).astype(dq_ref.dtype)
+
+
+def _kernel_dkv(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref,
+                dk_ref, dv_ref, *, scale: float, bq: int, bkv: int,
+                causal: bool):
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_ref[0] = jnp.zeros_like(dk_ref[0])
+        dv_ref[0] = jnp.zeros_like(dv_ref[0])
+
+    @pl.when(jnp.logical_not(causal) | (j * bkv <= i * bq + bq - 1))
+    def _block():
+        s = _scores(q_ref[0], k_ref[0], scale, causal, i, j, bq, bkv)
+        p = jnp.exp(s - lse_ref[0][:, None])
+        do = do_ref[0].astype(jnp.float32)
+        dv_ref[0] += jnp.dot(p.T, do,
+                             preferred_element_type=jnp.float32
+                             ).astype(dv_ref.dtype)
+        dp = jnp.dot(do, v_ref[0].astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+        ds = p * (dp - dlt_ref[0][:, None])
+        dk_ref[0] += (scale * jnp.dot(
+            ds.T, q_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)).astype(dk_ref.dtype)
+
+
+def _bwd_call(qh, kh, vh, oh, lse, doh, *, causal, bq, bkv, interpret):
+    BH, Sq, d = qh.shape
+    Skv = kh.shape[1]
+    bq, bkv = _blocks(Sq, Skv, bq, bkv)
+    delta = jnp.sum(doh.astype(jnp.float32) * oh.astype(jnp.float32),
+                    axis=-1)                                  # (BH, Sq)
+    q_spec = pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0))
+    row_spec = pl.BlockSpec((1, bq), lambda b, i, j: (b, i))
+    dq = pl.pallas_call(
+        functools.partial(_kernel_dq, scale=1.0 / math.sqrt(d), bq=bq,
+                          bkv=bkv, causal=causal),
+        grid=(BH, Sq // bq, Skv // bkv),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), jnp.float32),
+        interpret=interpret_default(interpret),
+    )(qh, kh, vh, doh, lse, delta)
+    # swapped grid: (b, j, i) so dk/dv accumulate over the innermost i
+    q_spec2 = pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0))
+    kv_spec2 = pl.BlockSpec((1, bkv, d), lambda b, j, i: (b, j, 0))
+    row_spec2 = pl.BlockSpec((1, bq), lambda b, j, i: (b, i))
+    dk, dv = pl.pallas_call(
+        functools.partial(_kernel_dkv, scale=1.0 / math.sqrt(d), bq=bq,
+                          bkv=bkv, causal=causal),
+        grid=(BH, Skv // bkv, Sq // bq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2,
+                  row_spec2],
+        out_specs=[kv_spec2, kv_spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Skv, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Skv, d), jnp.float32),
+        ],
+        interpret=interpret_default(interpret),
+    )(qh, kh, vh, doh, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API with custom VJP (forward + backward both fully fused)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_core(qh, kh, vh, causal, bq, bkv, interpret):
+    out, _ = _fwd_call(qh, kh, vh, causal=causal, bq=bq, bkv=bkv,
+                       interpret=interpret)
+    return out
+
+
+def _flash_core_fwd(qh, kh, vh, causal, bq, bkv, interpret):
+    out, lse = _fwd_call(qh, kh, vh, causal=causal, bq=bq, bkv=bkv,
+                         interpret=interpret)
+    return out, (qh, kh, vh, out, lse)
+
+
+def _flash_core_bwd(causal, bq, bkv, interpret, res, do):
+    qh, kh, vh, out, lse = res
+    dq, dk, dv = _bwd_call(qh, kh, vh, out, lse, do, causal=causal,
+                           bq=bq, bkv=bkv, interpret=interpret)
+    return dq.astype(qh.dtype), dk.astype(kh.dtype), dv.astype(vh.dtype)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def kernel_traffic(B: int, H: int, Sq: int, Skv: int, d: int, *,
+                   bq: int = 512, bkv: int = 512, causal: bool = True,
+                   train: bool = True, elem_bytes: int = 2) -> dict:
+    """Analytic HBM traffic + flops of the fused kernels, derived directly
+    from the BlockSpecs above (the assignment's structural-reasoning rule:
+    the BlockSpec shapes ARE the traffic claim — interpret mode cannot
+    measure this because its functional grid loop copies whole arrays).
+
+    Per the index maps:
+      fwd : Q block resident per row (read once);   K,V re-read per q-row
+            -> Q + (Sq/bq)·(K+V) + O writes (+lse)
+      dq  : same pattern, + dO reads, dQ f32 writes
+      dkv : K,V resident per column; Q,dO re-read per kv-col
+            -> (Skv/bkv)·(Q+dO) + K + V + dK,dV f32 writes
+    Causality halves the streamed re-reads (blocks above the diagonal are
+    skipped by pl.when).  Flops: 2·B·H·Sq·Skv·d per dot, dots counted from
+    the kernel bodies (fwd 2; dq 3; dkv 4; remat re-runs fwd).
+    """
+    bq, bkv = _blocks(Sq, Skv, bq, bkv)
+    half = 0.5 if causal else 1.0
+    qb = B * H * Sq * d * elem_bytes
+    kb = B * H * Skv * d * elem_bytes
+    f32 = 2 * elem_bytes
+    n_row = Sq // bq
+    n_col = Skv // bkv
+    fwd_bytes = qb + half * n_row * 2 * kb + qb  # Q in, KV stream, O out
+    dot = 2.0 * B * H * Sq * Skv * d * half
+    fwd_flops = 2 * dot
+    if not train:
+        return {"bytes": fwd_bytes, "flops": fwd_flops}
+    dq_bytes = (qb + half * n_row * 2 * kb + qb          # Q, KV, dO reads
+                + qb * 2)                                # dQ f32 out
+    dkv_bytes = (2 * kb + half * n_col * 2 * qb          # KV + Q,dO stream
+                 + 2 * kb * 2)                           # dK,dV f32 out
+    total_bytes = 2 * fwd_bytes + dq_bytes + dkv_bytes   # fwd + remat fwd
+    total_flops = 2 * fwd_flops + 3 * dot + 4 * dot
+    return {"bytes": total_bytes, "flops": total_flops}
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bkv: int = 512, interpret: bool | None = None):
+    """q: (B, Sq, H, d); k, v: (B, Skv, KVH, d), H % KVH == 0.
+    Returns (B, Sq, H, d).  Scores/softmax never touch HBM, forward OR
+    backward (custom VJP with fused dq / dkv kernels)."""
+    B, Sq, H, d = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    rep = H // KVH
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # (B*H, S, d) layout: one grid row per (batch, head)
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, d)
+    out = _flash_core(qh, kh, vh, causal, bq, bkv, interpret)
+    return out.reshape(B, H, Sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: fused cross-entropy over a large vocabulary.
+
+Cell-A's residual memory term (EXPERIMENTS §Perf) is the loss head: XLA's
+`log_softmax` materializes f32 logits + f32 log-probs (2 x N x V x 4 bytes)
+before the label gather.  Fused version: stream vocab blocks through VMEM,
+keep the online (max, sumexp, target-logit) state per row in scratch —
+per-row loss comes out with ONE read of the logits and nothing else.
+
+Backward (custom VJP): dlogits = (softmax(x) - onehot(label)) * g, computed
+block-wise from the saved per-row logsumexp — again one logits read and one
+dlogits write, no f32 intermediates.
+
+    loss = fused_cross_entropy(logits (N,V), labels (N,)) -> (N,) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_default
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(x_ref, lbl_ref, loss_ref, lse_ref, m_scr, l_scr, t_scr,
+                *, bv: int):
+    j = pl.program_id(1)
+    n_v = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        t_scr[...] = jnp.zeros_like(t_scr)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bn, bv)
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1))
+    l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(x - m_new[:, None]), axis=-1)
+    m_scr[...], l_scr[...] = m_new, l_new
+    # target logit if the label lands in this vocab block
+    lbl = lbl_ref[...]                                    # (bn,)
+    local = lbl - j * bv
+    in_blk = (local >= 0) & (local < bv)
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    hit = cols == local[:, None]
+    t_scr[...] += jnp.sum(jnp.where(hit & in_blk[:, None], x, 0.0), axis=-1)
+
+    @pl.when(j == n_v - 1)
+    def _finish():
+        lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        lse_ref[...] = lse
+        loss_ref[...] = lse - t_scr[...]
+
+
+def _bwd_kernel(x_ref, lbl_ref, lse_ref, g_ref, dx_ref, *, bv: int):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)
+    p = jnp.exp(x - lse_ref[...][:, None])
+    local = lbl_ref[...] - j * bv
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    hit = (cols == local[:, None]) & \
+        ((local >= 0) & (local < bv))[:, None]
+    dx = (p - hit.astype(jnp.float32)) * g_ref[...][:, None]
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+
+
+def _blocks(N, V, bn, bv):
+    bn = min(bn, N)
+    while N % bn != 0:
+        bn //= 2
+    bv = min(bv, V)
+    while V % bv != 0:
+        bv -= 128 if bv > 128 else 1
+    return max(bn, 1), max(bv, 1)
+
+
+def _fwd_call(x, labels, bn, bv, interpret):
+    N, V = x.shape
+    bn, bv = _blocks(N, V, bn, bv)
+    loss, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, bv=bv),
+        grid=(N // bn, V // bv),
+        in_specs=[pl.BlockSpec((bn, bv), lambda i, j: (i, j)),
+                  pl.BlockSpec((bn,), lambda i, j: (i,))],
+        out_specs=[pl.BlockSpec((bn,), lambda i, j: (i,)),
+                   pl.BlockSpec((bn,), lambda i, j: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.float32),
+                   jax.ShapeDtypeStruct((N,), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32),
+                        pltpu.VMEM((bn,), jnp.float32),
+                        pltpu.VMEM((bn,), jnp.float32)],
+        interpret=interpret_default(interpret),
+    )(x, labels)
+    return loss, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _ce_core(x, labels, bn, bv, interpret):
+    loss, _ = _fwd_call(x, labels, bn, bv, interpret)
+    return loss
+
+
+def _ce_fwd(x, labels, bn, bv, interpret):
+    loss, lse = _fwd_call(x, labels, bn, bv, interpret)
+    return loss, (x, labels, lse)
+
+
+def _ce_bwd(bn, bv, interpret, res, g):
+    x, labels, lse = res
+    N, V = x.shape
+    bn, bv = _blocks(N, V, bn, bv)
+    dx = pl.pallas_call(
+        functools.partial(_bwd_kernel, bv=bv),
+        grid=(N // bn, V // bv),
+        in_specs=[pl.BlockSpec((bn, bv), lambda i, j: (i, j)),
+                  pl.BlockSpec((bn,), lambda i, j: (i,)),
+                  pl.BlockSpec((bn,), lambda i, j: (i,)),
+                  pl.BlockSpec((bn,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((bn, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, V), x.dtype),
+        interpret=interpret_default(interpret),
+    )(x, labels, lse, g.astype(jnp.float32))
+    return dx, None
+
+
+_ce_core.defvjp(_ce_fwd, _ce_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bv", "interpret"))
+def fused_cross_entropy(logits, labels, *, bn: int = 256, bv: int = 2048,
+                        interpret: bool | None = None):
+    """logits: (..., V); labels: (...) int32 -> per-example NLL (...) f32."""
+    V = logits.shape[-1]
+    lead = logits.shape[:-1]
+    x = logits.reshape(-1, V)
+    lbl = labels.reshape(-1).astype(jnp.int32)
+    loss = _ce_core(x, lbl, bn, bv, interpret)
+    return loss.reshape(lead)

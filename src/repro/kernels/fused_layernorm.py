@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: single-pass fused LayerNorm (paper §4.5 -> TPU).
+
+The paper's LayerNorm module computes mean and E[x²] with parallel ATAC
+(addition-tree + accumulator) units in ONE pass over the data (Eq. 12:
+σ² = E[x²] − μ²) and normalizes as the blocks stream through.  The TPU
+mapping: each grid step holds a (rows x D) tile in VMEM, the VPU reduces
+sum(x) and sum(x²) simultaneously (two live registers — the two ATAC trees),
+then normalizes in-place — one HBM read, one HBM write, zero intermediate
+round-trips, which is exactly the bandwidth story of the paper's module.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    # the two ATAC trees: Σx and Σx² in the same pass
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    ex2 = jnp.mean(x * x, axis=-1, keepdims=True)
+    var = ex2 - mu * mu
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...][None, :] +
+                  b_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def fused_layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                    *, eps: float = 1e-5, block_rows: int = 256,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """x: (..., D) -> LayerNorm over the last dim."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    br = min(block_rows, R)
+    while R % br != 0:
+        br -= 1
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret_default(interpret),
+    )(xf, gamma, beta)
+    return out.reshape(orig_shape)

@@ -1,0 +1,16 @@
+"""Public jit'd wrappers around the Pallas kernels (the `ops.py` contract).
+
+These are what model code imports; each dispatches to the Pallas kernel on
+TPU and to interpret mode elsewhere (repro.kernels.common).
+"""
+from repro.kernels.dpot_matmul import dpot_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_layernorm import fused_layernorm
+from repro.kernels.wkv4 import wkv4_pallas
+from repro.kernels.wkv6 import wkv6_pallas
+from repro.kernels.expsig import exp_kernel, sigmoid_kernel
+from repro.kernels.fused_ce import fused_cross_entropy
+
+__all__ = ["dpot_matmul", "flash_attention", "fused_cross_entropy",
+           "fused_layernorm", "wkv4_pallas", "wkv6_pallas", "exp_kernel",
+           "sigmoid_kernel"]

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function computes exactly what the corresponding kernel computes, with
+plain jax.numpy — used by tests/test_kernels_*.py for allclose sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx.units import exp_lut, sigmoid_pwl
+from repro.core.quant.delta_pot import dpot_unpack_int8, dpot_dequantize
+from repro.core.wkv.wkv4 import wkv4_scan, wkv4_init_state, WKV4State
+from repro.core.wkv.wkv6 import wkv6_scan
+
+
+def dpot_matmul_ref(x, wq, scale, ks=(3, 4)):
+    """x (M,K) @ decode(wq (K,N) int8-packed) * scale (N,)."""
+    q = dpot_unpack_int8(wq, scale[None, :], ks)
+    w = dpot_dequantize(q)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def wkv4_ref(k, v, w, u, a0=None, b0=None, o0=None):
+    state = None
+    if a0 is not None:
+        state = WKV4State(a=a0, b=b0, o=o0)
+    y, final = wkv4_scan(k, v, w, u, state)
+    return y.astype(jnp.float32), (final.a, final.b, final.o)
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    y, s = wkv6_scan(r, k, v, w, u, s0)
+    return y.astype(jnp.float32), s
+
+
+def fused_layernorm_ref(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    ex2 = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    var = ex2 - mu * mu
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return y.astype(x.dtype)
+
+
+exp_ref = exp_lut
+sigmoid_ref = sigmoid_pwl
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """GQA-aware full-score attention (oracle for the flash kernel)."""
+    import jax.numpy as _jnp
+    from repro.models.layers import _plain_attention
+    H, KVH = q.shape[2], k.shape[2]
+    if H != KVH:
+        k = _jnp.repeat(k, H // KVH, axis=2)
+        v = _jnp.repeat(v, H // KVH, axis=2)
+    return _plain_attention(q, k, v, causal, 0)
+
+
+def fused_cross_entropy_ref(logits, labels):
+    """Per-example NLL via plain log_softmax (oracle for fused_ce)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    return -jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32),
+                                -1)[..., 0]

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused RWKV-4 WKV scan (paper C4 -> TPU).
+
+The paper's headline systems idea: keep the recurrent state fully on-chip
+and stream the sequence through.  TPU mapping: grid (B, C/bc); each cell
+owns a bc-wide channel slice whose (a, b, o) state lives in VREGs/VMEM for
+the WHOLE sequence — zero HBM state round-trips between timesteps (on GPU
+each step is a kernel launch reading state from HBM; that gap is the
+paper's motivation §1-(1)).  k/v stream in as one VMEM-resident block.
+
+Numerics: the official stable running-max recurrence (never overflows),
+identical to repro.core.wkv.wkv4 — which is this kernel's oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+
+def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref,
+            y_ref, af_ref, bf_ref, of_ref, *, T: int):
+    w = w_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+
+    def body(t, carry):
+        a, b, o = carry
+        kt = pl.load(k_ref, (0, pl.dslice(t, 1), slice(None)))[0]
+        vt = pl.load(v_ref, (0, pl.dslice(t, 1), slice(None)))[0]
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        # output (includes the bonus u for the current token)
+        no = jnp.maximum(o, u + kt)
+        A = jnp.exp(o - no)
+        Bf = jnp.exp(u + kt - no)
+        y = (A * a + Bf * vt) / (A * b + Bf)
+        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
+                 y[None].astype(y_ref.dtype))
+        # state update
+        no2 = jnp.maximum(o - w, kt)
+        A2 = jnp.exp(o - w - no2)
+        B2 = jnp.exp(kt - no2)
+        return (A2 * a + B2 * vt, A2 * b + B2, no2)
+
+    a, b, o = jax.lax.fori_loop(
+        0, T, body, (a0_ref[0].astype(jnp.float32),
+                     b0_ref[0].astype(jnp.float32),
+                     o0_ref[0].astype(jnp.float32)))
+    af_ref[0, :] = a
+    bf_ref[0, :] = b
+    of_ref[0, :] = o
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def wkv4_pallas(k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+                u: jnp.ndarray, a0=None, b0=None, o0=None, *,
+                bc: int = 128, interpret: bool | None = None):
+    """k, v: (B, T, C); w, u: (C,) -> (y (B,T,C) f32, (a,b,o) finals (B,C))."""
+    B, T, C = k.shape
+    bc = min(bc, C)
+    while C % bc != 0:
+        bc //= 2
+    if a0 is None:
+        a0 = jnp.zeros((B, C), jnp.float32)
+        b0 = jnp.zeros((B, C), jnp.float32)
+        o0 = jnp.full((B, C), -1e38, jnp.float32)
+    grid = (B, C // bc)
+    seq_spec = pl.BlockSpec((1, T, bc), lambda b, c: (b, 0, c))
+    vec_spec = pl.BlockSpec((bc,), lambda b, c: (c,))
+    st_spec = pl.BlockSpec((1, bc), lambda b, c: (b, c))
+    y, af, bf, of = pl.pallas_call(
+        functools.partial(_kernel, T=T),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, vec_spec, vec_spec,
+                  st_spec, st_spec, st_spec],
+        out_specs=[seq_spec, st_spec, st_spec, st_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+        ],
+        interpret=interpret_default(interpret),
+    )(k, v, w, u, a0, b0, o0)
+    return y, (af, bf, of)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV (data-dependent decay).
+
+Grid (B, H): each cell owns one head's (N x N) state, resident in a VMEM
+scratch across all chunks (the paper's on-chip state principle).  Per chunk
+of C tokens the work is dense (C,N)x(N,N) and (C,C,N) contractions — MXU
+food — with the exact per-pair decay tensor masked strictly-lower BEFORE the
+exp, so every live exponent is <= 0: underflow-only stability (same scheme
+as the ref's diagonal blocks, applied chunk-wide).
+
+Oracle: repro.core.wkv.wkv6.wkv6_scan / wkv6_chunked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_default
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+            y_ref, sf_ref, *, T: int, C: int, N: int):
+    n_chunks = T // C
+    u = u_ref[...].astype(jnp.float32)[0]                 # (1,N) -> (N,)
+    mask = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)  # strict lower
+
+    def chunk_body(g, S):
+        sl = (0, 0, pl.dslice(g * C, C), slice(None))
+        rc = pl.load(r_ref, sl).astype(jnp.float32)        # (C,N)
+        kc = pl.load(k_ref, sl).astype(jnp.float32)
+        vc = pl.load(v_ref, sl).astype(jnp.float32)
+        wc = pl.load(w_ref, sl).astype(jnp.float32)
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        L = jnp.cumsum(logw, axis=0)                      # inclusive (C,N)
+        Lprev = L - logw                                  # exclusive
+        # inter-chunk: exponents Lprev <= 0
+        y = jnp.dot(rc * jnp.exp(Lprev), S,
+                    preferred_element_type=jnp.float32)   # (C,N)
+        # intra-chunk: exact pairwise decay, strictly-lower masked pre-exp
+        D = Lprev[:, None, :] - L[None, :, :]             # (C,C,N)
+        D = jnp.where(mask[:, :, None] > 0, D, -1e30)
+        att = jnp.einsum("sn,in,sin->si", rc, kc, jnp.exp(D))
+        y = y + jnp.dot(att, vc, preferred_element_type=jnp.float32)
+        # bonus (current token)
+        y = y + jnp.sum(rc * u[None] * kc, axis=-1, keepdims=True) * vc
+        pl.store(y_ref, sl, y.astype(y_ref.dtype))
+        # state update: exponents Ltot - L <= 0 and Ltot <= 0
+        Ltot = L[-1:, :]                                  # (1,N)
+        k_fut = kc * jnp.exp(Ltot - L)
+        return jnp.exp(Ltot[0])[:, None] * S + jnp.dot(
+            k_fut.T, vc, preferred_element_type=jnp.float32)
+
+    S = jax.lax.fori_loop(0, n_chunks, chunk_body,
+                          s0_ref[0, 0].astype(jnp.float32))
+    sf_ref[0, 0] = S
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, s0=None, *, chunk: int = 64,
+                interpret: bool | None = None):
+    """r,k,v,w: (B,T,H,N); u: (H,N) -> (y (B,T,H,N) f32, S (B,H,N,N))."""
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    while T % C != 0:
+        C //= 2
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    # head-major layout so each grid cell reads a contiguous (T, N) strip
+    tr = lambda x: jnp.transpose(x, (0, 2, 1, 3))         # (B,H,T,N)
+    seq_spec = pl.BlockSpec((1, 1, T, N), lambda b, h: (b, h, 0, 0))
+    u_spec = pl.BlockSpec((1, N), lambda b, h: (h, 0))
+    st_spec = pl.BlockSpec((1, 1, N, N), lambda b, h: (b, h, 0, 0))
+    y, sf = pl.pallas_call(
+        functools.partial(_kernel, T=T, C=C, N=N),
+        grid=(B, H),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec, st_spec],
+        out_specs=[seq_spec, st_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        interpret=interpret_default(interpret),
+    )(tr(r), tr(k), tr(v), tr(w), u, s0)
+    return jnp.transpose(y, (0, 2, 1, 3)), sf

@@ -1,0 +1,1 @@
+"""Launch layer: meshes, step builders, dry-run, roofline."""

@@ -1,0 +1,158 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines (before ANY other import): jax locks the
+device count on first init, and only the dry-run wants 512 placeholder
+devices."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import (   # noqa: E402
+    ASSIGNED_ARCHS, RWKV4_ARCHS, SHAPES, get_config, supported_shapes)
+from repro.launch import roofline as RL                   # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+from repro.launch.steps import build_step_for_cell        # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mem_dict(mem) -> dict:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        if hasattr(mem, k):
+            out[k] = int(getattr(mem, k))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             smoke: bool = False, save: bool = True,
+             keep_text: bool = False, serve_variant: str = "base",
+             cfg_overrides: dict | None = None,
+             variant_tag: str = "") -> dict:
+    cfg = get_config(arch)
+    support = supported_shapes(cfg)[shape_name]
+    mesh_tag = "multi" if multi_pod else "single"
+    cell_id = f"{arch}__{shape_name}__{mesh_tag}"
+    if serve_variant != "base":
+        cell_id += f"__{serve_variant}"
+    if variant_tag:
+        cell_id += f"__{variant_tag}"
+    if support != "ok":
+        rec = {"cell": cell_id, "status": "skip", "reason": support}
+        if save:
+            _save(cell_id, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    try:
+        jitted, args, kind = build_step_for_cell(
+            arch, shape_name, mesh, smoke=smoke,
+            serve_variant=serve_variant, cfg_overrides=cfg_overrides)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        shape = SHAPES[shape_name]
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind in ("train", "prefill")
+                  else shape.global_batch)
+        mf = RL.model_flops_estimate(cfg, shape.kind, tokens)
+        text = compiled.as_text()
+        roof = RL.analyze(compiled, chips=chips, model_flops=mf,
+                          hlo_text=text)
+        rec = {
+            "cell": cell_id, "status": "ok", "kind": kind,
+            "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+            "chips": chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": _mem_dict(mem),
+            "roofline": roof.as_dict(),
+        }
+        if keep_text:
+            rec["hlo_len"] = len(text)
+    except Exception as e:  # a failing cell is a bug in our sharding
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    if save:
+        _save(cell_id, rec)
+    return rec
+
+
+def _save(cell_id: str, rec: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{cell_id}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def all_cells(include_rwkv4: bool = False):
+    archs = list(ASSIGNED_ARCHS) + (RWKV4_ARCHS if include_rwkv4 else [])
+    for arch in archs:
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (machinery test)")
+    ap.add_argument("--rwkv4", action="store_true",
+                    help="include the paper's rwkv4-* family")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells with an existing ok/skip record")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = [(a, s) for a, s in all_cells(args.rwkv4)
+             if (args.arch is None or a == args.arch)
+             and (args.shape is None or s == args.shape)]
+    n_ok = n_skip = n_err = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = "multi" if multi else "single"
+            cell_id = f"{arch}__{shape_name}__{tag}"
+            if args.skip_done:
+                p = os.path.join(OUT_DIR, f"{cell_id}.json")
+                if os.path.exists(p):
+                    with open(p) as f:
+                        old = json.load(f)
+                    if old.get("status") in ("ok", "skip"):
+                        continue
+            rec = run_cell(arch, shape_name, multi, smoke=args.smoke)
+            if rec["status"] == "ok":
+                n_ok += 1
+                r = rec["roofline"]
+                print(f"[ok]   {cell_id}: bottleneck={r['bottleneck']} "
+                      f"compute={r['compute_s']:.2e}s "
+                      f"memory={r['memory_s']:.2e}s "
+                      f"coll={r['collective_s']:.2e}s "
+                      f"(compile {rec['compile_s']}s)", flush=True)
+            elif rec["status"] == "skip":
+                n_skip += 1
+                print(f"[skip] {cell_id}: {rec['reason']}", flush=True)
+            else:
+                n_err += 1
+                print(f"[ERR]  {cell_id}: {rec['error']}", flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skip, {n_err} error")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,375 @@
+"""Loop-aware HLO analysis: exact FLOPs / HBM bytes / collective bytes.
+
+`compiled.cost_analysis()` counts a while-loop body ONCE, but every layer
+scan (and flash-attention KV scan, and wkv chunk scan) is a while loop — so
+for scanned models it under-counts flops and collective bytes by the trip
+count.  This module re-derives the three roofline inputs from
+`compiled.as_text()` with loop multipliers:
+
+  * computations are parsed into blocks; `while` ops link body/condition;
+  * the trip count is read from the loop condition's `s32[] constant(N)`
+    (jax lowers `lax.scan` to a 0..N counter loop);
+  * metrics are accumulated over ENTRY + while bodies, each weighted by the
+    product of enclosing trip counts (nested loops compose);
+  * FLOPs: 2 * numel(result) * K for every `dot` (K = product of the lhs
+    contracting dims) — matmul flops dominate all our workloads;
+  * HBM bytes: sum of operand + result bytes per top-level op (fusion
+    internals excluded — a fusion reads its operands and writes its result
+    once), layout-only ops (tuple/gte/bitcast/parameter/constant) free;
+  * collective bytes: result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (start ops only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota"}
+
+# Ops the TPU compiler fuses into producers/consumers (no HBM round-trip of
+# their own).  The CPU-backend HLO we analyze leaves many of these unfused;
+# counting them would claim HBM traffic a TPU never pays.  Bytes are counted
+# only at fusion boundaries: `fusion` ops, dots, convs, data movement
+# (copy/slice/dus/gather/scatter/sort/reduce), collectives, while carries.
+_FUSABLE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "negate", "abs", "compare", "select", "convert", "rsqrt", "sqrt",
+    "power", "and", "or", "not", "xor", "clamp", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "cosine", "sine", "atan2",
+    "is-finite", "popcnt", "clz", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "rem", "map", "broadcast", "reshape",
+    "transpose", "rev", "pad", "expm1", "log1p", "erf", "cbrt", "logistic",
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_WHILE_RE = re.compile(r"condition=%([\w\.\-]+), body=%([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    return sum(_nelem(d) * _DTYPE_BYTES.get(t, 0)
+               for t, d in _SHAPE_RE.findall(type_str))
+
+
+def _nelem(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return m.group(1), m.group(2)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # everything after the '('
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict          # op name -> type_str
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line[0] not in " }":
+            # computation header: `%name (...` or `ENTRY %name ...`
+            m = re.match(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[m.group(1)] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if cur is None or line.startswith("}"):
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = Op(name=m.group(1), type_str=m.group(2), opcode=m.group(3),
+                rest=m.group(4))
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.type_str
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant" and op.type_str.strip() == "s32[]":
+            m = re.match(r"([0-9]+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    out_elems = sum(_nelem(d) for _, d in _SHAPE_RE.findall(op.type_str))
+    operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+    k = 1
+    mc = _LHS_CONTRACT_RE.search(op.rest)
+    if operands and mc is not None:
+        lhs_type = symbols.get(operands[0])
+        if lhs_type:
+            sh = _first_shape(lhs_type)
+            if sh and sh[1]:
+                dims = [int(x) for x in sh[1].split(",")]
+                for ci in (int(x) for x in mc.group(1).split(",") if x):
+                    if ci < len(dims):
+                        k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+_PARAM_IDX_RE = re.compile(r"^(\d+)\)")
+
+
+def _fusion_operand_bytes(op: Op, symbols: dict, comps: dict,
+                          alias: dict | None = None) -> int:
+    """Operand bytes of a fusion, slice-aware: a fusion parameter whose only
+    consumers are dynamic-slice/gather reads its *slice*, not the whole
+    array — this is how scanned layer stacks are accessed (one layer per
+    trip), and charging the full stack per trip would overcount by n_layers.
+    Slice bytes are scaled to the operand's STORED dtype (convert aliases).
+    """
+    alias = alias or {}
+    mcall = _CALLS_RE.search(op.rest)
+    callee = comps.get(mcall.group(1)) if mcall else None
+    arg_str = op.rest.split("), ")[0]
+    names = _OPERAND_RE.findall(arg_str)
+    if callee is None:
+        return sum(_stored_bytes(n, symbols, alias) for n in names)
+    # parameter index -> op name inside the callee
+    param_names = {}
+    for cop in callee.ops:
+        if cop.opcode == "parameter":
+            m = _PARAM_IDX_RE.match(cop.rest)
+            if m:
+                param_names[int(m.group(1))] = cop.name
+    total = 0
+    for i, n in enumerate(names):
+        observed = _shapes_bytes(symbols.get(n, ""))
+        stored = _stored_bytes(n, symbols, alias)
+        ratio = stored / observed if observed else 1.0
+        pname = param_names.get(i)
+        if pname is None:
+            total += stored
+            continue
+        consumers = [c for c in callee.ops
+                     if c.opcode != "parameter"
+                     and pname in _OPERAND_RE.findall(
+                         c.rest.split("), ")[0])]
+        if consumers and all(c.opcode in ("dynamic-slice", "gather")
+                             for c in consumers):
+            total += ratio * sum(_shapes_bytes(c.type_str)
+                                 for c in consumers)
+        else:
+            total += stored
+    return int(total)
+
+
+def _op_bytes(op: Op, symbols: dict, comps: dict | None = None,
+              alias: dict | None = None) -> int:
+    alias = alias or {}
+    # in-place / windowed ops touch only the moved region, not the full
+    # aliased operand (XLA performs DUS in place; DS reads its window):
+    if op.opcode == "dynamic-update-slice":
+        arg_str = op.rest.split("), ")[0]
+        names = _OPERAND_RE.findall(arg_str)
+        upd = symbols.get(names[1]) if len(names) > 1 else None
+        return 2 * _shapes_bytes(upd) if upd else 0
+    if op.opcode == "dynamic-slice":
+        return 2 * _shapes_bytes(op.type_str)
+    total = _shapes_bytes(op.type_str)
+    if op.opcode == "fusion" and comps is not None:
+        return total + _fusion_operand_bytes(op, symbols, comps, alias)
+    # operand names up to the closing paren of the operand list
+    arg_str = op.rest.split("), ")[0]
+    for name in _OPERAND_RE.findall(arg_str):
+        if name in symbols:
+            total += _stored_bytes(name, symbols, alias)
+    return total
+
+
+@dataclasses.dataclass
+class HloMetrics:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: dict = dataclasses.field(default_factory=dict)
+    loops: list = dataclasses.field(default_factory=list)
+
+
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+
+
+def _elementwise_only(comp: Computation) -> bool:
+    """True if every op in the computation would fuse away on TPU."""
+    return all(op.opcode in _FUSABLE_OPS or op.opcode in _FREE_OPS
+               for op in comp.ops)
+
+
+def _build_aliases(comps: dict, pure_elem: set) -> dict:
+    """name -> source-name for dtype-changing pass-through ops.
+
+    The CPU backend legalizes bf16 (and would-be int8) dots by hoisting a
+    `convert` of the whole operand to f32; a TPU reads the STORED dtype and
+    widens in registers.  Counting the converted copy would charge f32
+    traffic for bf16/int8 storage, so byte lookups follow these aliases
+    back to the stored tensor."""
+    alias = {}
+    seen_comps = set()
+    for comp in comps.values():
+        if id(comp) in seen_comps:      # skip the __entry__ duplicate
+            continue
+        seen_comps.add(id(comp))
+        tuples = {}                      # tuple-op name -> element names
+        for op in comp.ops:
+            src = None
+            if op.opcode == "convert":
+                names = _OPERAND_RE.findall(op.rest.split("), ")[0])
+                src = names[0] if names else None
+            elif op.opcode == "fusion":
+                mc = _CALLS_RE.search(op.rest)
+                if mc and mc.group(1) in pure_elem:
+                    names = _OPERAND_RE.findall(op.rest.split("), ")[0])
+                    if len(names) == 1:
+                        src = names[0]
+            elif op.opcode == "tuple":
+                tuples[op.name] = _OPERAND_RE.findall(
+                    op.rest.split("), ")[0])
+            elif op.opcode == "while":
+                # bridge loop-invariant carries: body gte(param, i) aliases
+                # the i-th element of the init tuple
+                names = _OPERAND_RE.findall(op.rest.split("), ")[0])
+                init = names[0] if names else None
+                m = _WHILE_RE.search(op.rest)
+                body = comps.get(m.group(2)) if m else None
+                if init in tuples and body is not None:
+                    elems = tuples[init]
+                    for bop in body.ops:
+                        if bop.opcode == "get-tuple-element":
+                            mi = re.search(r"index=(\d+)", bop.rest)
+                            if mi and int(mi.group(1)) < len(elems):
+                                alias.setdefault(
+                                    bop.name, elems[int(mi.group(1))])
+            if src:
+                alias[op.name] = src
+    return alias
+
+
+def _stored_bytes(name: str, symbols: dict, alias: dict) -> int:
+    """Bytes of `name` at its stored dtype (following convert aliases),
+    never larger than the observed type."""
+    observed = _shapes_bytes(symbols.get(name, ""))
+    seen = set()
+    cur = name
+    best = observed if observed else 1 << 62
+    while cur in alias and cur not in seen:
+        seen.add(cur)
+        cur = alias[cur]
+        b = _shapes_bytes(symbols.get(cur, ""))
+        if b:
+            best = min(best, b)
+    return best if best < (1 << 62) else 0
+
+
+def analyze_text(text: str) -> HloMetrics:
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloMetrics()
+    # CPU-backend HLO wraps single elementwise ops into their own fusions;
+    # on TPU those chains fuse into the adjacent dot/reduce, so their
+    # boundary traffic is already covered by the dot's operands/results.
+    pure_elem = {name for name, c in comps.items() if _elementwise_only(c)}
+    alias = _build_aliases(comps, pure_elem)
+    # module-global symbol table (names are unique in post-opt dumps)
+    gsym: dict = {}
+    for c in comps.values():
+        gsym.update(c.symbols)
+    metrics = HloMetrics()
+    work = [(entry, 1.0)]
+    seen_pairs = set()
+    while work:
+        comp, mult = work.pop()
+        for op in comp.ops:
+            if op.opcode == "while":
+                m = _WHILE_RE.search(op.rest)
+                if m and m.group(2) in comps:
+                    trips = _trip_count(comps[m.group(1)]) \
+                        if m.group(1) in comps else 1
+                    key = (comp.name, op.name)
+                    if key not in seen_pairs:
+                        seen_pairs.add(key)
+                        metrics.loops.append((op.name, trips, mult))
+                        work.append((comps[m.group(2)], mult * trips))
+                # the while op itself: carried tuple touched once per entry
+                metrics.hbm_bytes += _shapes_bytes(op.type_str) * mult
+                continue
+            if op.opcode in _FREE_OPS:
+                continue
+            base = op.opcode.replace("-start", "")
+            if op.opcode.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                b = _shapes_bytes(op.type_str) * mult
+                metrics.coll_bytes += b
+                metrics.coll_breakdown[base] = \
+                    metrics.coll_breakdown.get(base, 0.0) + b
+                metrics.hbm_bytes += _op_bytes(op, gsym, comps,
+                                               alias) * mult
+                continue
+            if op.opcode == "dot":
+                metrics.flops += _dot_flops(op, comp.symbols) * mult
+            if op.opcode == "convolution":
+                # rare here; approximate with output*2*window elems parsed
+                metrics.flops += 2.0 * _shapes_bytes(op.type_str) * mult
+            if op.opcode in _FUSABLE_OPS:
+                continue
+            if op.opcode == "fusion":
+                mcall = _CALLS_RE.search(op.rest)
+                callee = comps.get(mcall.group(1)) if mcall else None
+                if mcall and mcall.group(1) in pure_elem:
+                    continue
+                if callee is not None and all(
+                        c.opcode in _FREE_OPS or c.opcode in _FUSABLE_OPS
+                        or c.opcode in ("dynamic-slice", "gather")
+                        for c in callee.ops):
+                    # slice(+convert) fusion: a TPU reads the sliced input
+                    # bytes at the STORED dtype and widens in-register —
+                    # the widened result never round-trips HBM
+                    metrics.hbm_bytes += _fusion_operand_bytes(
+                        op, gsym, comps, alias) * mult
+                    continue
+            metrics.hbm_bytes += _op_bytes(op, gsym, comps, alias) * mult
+    return metrics

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked at first jax init, and only
+dryrun.py sets the 512-placeholder-device XLA flag).
+
+Topology model (TPU v5e-class):
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+"model" is the intra-pod high-bandwidth ICI axis (TP/EP); "data" carries
+FSDP + DP; "pod" is pure DP across the slow inter-pod links (gradient
+all-reduce only — see repro.parallel.sharding's AXIS_RULES).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh over the real local device (smoke tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

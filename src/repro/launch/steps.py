@@ -1,0 +1,216 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+These are the units the dry-run lowers and the launcher runs.  Every builder
+returns (jitted_fn, input_specs, in_shardings) so dryrun.py can call
+`.lower(*specs)` uniformly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models.registry import Model, get_model, loss_fn
+from repro.optim import adamw, adafactor, cosine_schedule
+from repro.parallel.sharding import (
+    batch_spec, sharding_for, spec_for_axes, tree_shardings, use_mesh)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding: derive logical axes for moment trees
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: ModelConfig, *, lr=None):
+    lr = lr if lr is not None else cosine_schedule(3e-4, 200, 10_000)
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr)
+    return adamw(lr)
+
+
+def opt_state_axes(cfg: ModelConfig, param_axes, abstract_opt_state):
+    """Moment trees inherit parameter axes; adafactor's factored vectors
+    inherit the matching prefix/suffix of the parameter axes; scalars are
+    replicated."""
+    if cfg.optimizer == "adafactor":
+        flat_p, tdef = jax.tree_util.tree_flatten(
+            param_axes, is_leaf=lambda x: isinstance(x, tuple))
+        flat_nu = tdef.flatten_up_to(abstract_opt_state.nu)
+
+        def nu_axes(p_axes, nu_leaf):
+            if "vr" in nu_leaf:
+                return {"vr": p_axes[:-1],
+                        "vc": p_axes[:-2] + p_axes[-1:]}
+            return {"v": p_axes}
+        nu = jax.tree_util.tree_unflatten(
+            tdef, [nu_axes(p, n) for p, n in zip(flat_p, flat_nu)])
+        return type(abstract_opt_state)(mu=None, nu=nu, count=())
+    return type(abstract_opt_state)(
+        mu=param_axes, nu=param_axes, count=())
+
+
+def _axes_shardings(axes_tree, abstract_tree, mesh):
+    """NamedSharding tree from (logical-axes tree, abstract tree)."""
+    def leafify(axes, sds):
+        return sharding_for(axes, sds.shape, mesh)
+    return jax.tree_util.tree_map(
+        leafify, axes_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch x shape)
+# ---------------------------------------------------------------------------
+
+
+def batch_abstract(model: Model, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for a full-sequence batch (train / prefill)."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.n_patches:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def batch_shardings(model: Model, shape: ShapeConfig, mesh) -> dict:
+    ab = batch_abstract(model, shape)
+    return {k: NamedSharding(mesh, batch_spec(v.shape, mesh))
+            for k, v in ab.items()}
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(model: Model, mesh, shape: ShapeConfig):
+    """-> (jit(train_step), (abstract args), donate-aware shardings)."""
+    cfg = model.cfg
+    init_opt, update_opt = make_optimizer(cfg)
+    param_axes = model.param_axes()
+    abstract_params = model.abstract_params()
+    p_sh = _axes_shardings(param_axes, abstract_params, mesh)
+    abstract_opt = jax.eval_shape(init_opt, abstract_params)
+    o_axes = opt_state_axes(cfg, param_axes, abstract_opt)
+    o_sh = _axes_shardings(o_axes, abstract_opt, mesh)
+    b_sh = batch_shardings(model, shape, mesh)
+
+    def train_step(params, opt_state, batch):
+        with use_mesh(mesh):
+            grad_fn = jax.value_and_grad(
+                lambda p: loss_fn(model, p, batch), has_aux=True)
+            (loss, metrics), grads = grad_fn(params)
+            new_params, new_opt = update_opt(grads, opt_state, params)
+            return new_params, new_opt, metrics
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    args = (abstract_params, abstract_opt, batch_abstract(model, shape))
+    return jitted, args, (p_sh, o_sh, b_sh), (init_opt, update_opt)
+
+
+def build_prefill_step(model: Model, mesh, shape: ShapeConfig):
+    """Inference prefill: forward pass producing logits (no state capture —
+    the roofline subject is the forward compute)."""
+    param_axes = model.param_axes()
+    abstract_params = model.abstract_params()
+    p_sh = _axes_shardings(param_axes, abstract_params, mesh)
+    b_sh = batch_shardings(model, shape, mesh)
+
+    def prefill_step(params, batch):
+        with use_mesh(mesh):
+            logits, _ = model.forward(params, batch)
+            return logits
+
+    jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+    args = (abstract_params, batch_abstract(model, shape))
+    return jitted, args, (p_sh, b_sh)
+
+
+def build_serve_step(model: Model, mesh, shape: ShapeConfig, *,
+                     variant: str = "base"):
+    """One decode step: new token against a seq_len-deep cache/state.
+
+    variant:
+      "base"       — bf16 weights, training sharding (FSDP+TP)     [paper-ø]
+      "replicated" — bf16 weights replicated over 'data' (TP-only) [§Perf]
+      "quantized"  — packed Δ-PoT W8 weights, TP-only: the paper's
+                     deployment mode (half the weight HBM traffic) [paper ✓]
+    """
+    from repro.core.quant.serving import (
+        packed_abstract, replicate_fsdp, serving_axes, unpack_params)
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    param_axes = model.param_axes()
+    # serving takes bf16 weights (f32 masters are a training artifact)
+    abstract_params = model.abstract_params(dtype=jnp.bfloat16)
+    if variant in ("replicated", "quantized"):
+        param_axes = replicate_fsdp(param_axes)
+    if variant == "quantized":
+        abstract_in = packed_abstract(model.spec(), abstract_params)
+        axes_in = serving_axes(param_axes, abstract_in)
+    else:
+        abstract_in, axes_in = abstract_params, param_axes
+    p_sh = _axes_shardings(axes_in, abstract_in, mesh)
+    abstract_state = jax.eval_shape(
+        lambda: model.init_decode_state(B, S))
+    st_axes = model.decode_state_axes()
+    st_sh = _axes_shardings(st_axes, abstract_state, mesh)
+    tok_sh = NamedSharding(mesh, batch_spec((B, 1), mesh))
+
+    def serve_step(params, state, tokens, pos):
+        with use_mesh(mesh):
+            if variant == "quantized":
+                params = unpack_params(params)  # int8 -> bf16 inside jit
+            logits, new_state = model.decode_step(params, state, tokens, pos)
+            return logits, new_state
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, st_sh, tok_sh, None),
+        out_shardings=(None, st_sh),
+        donate_argnums=(1,),
+    )
+    args = (abstract_in, abstract_state,
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jitted, args, (p_sh, st_sh)
+
+
+def build_step_for_cell(arch: str, shape_name: str, mesh, *,
+                        smoke: bool = False, serve_variant: str = "base",
+                        cfg_overrides: dict | None = None):
+    """The dry-run entry: (arch, shape) -> (jitted, abstract args, kind)."""
+    model = get_model(arch, smoke=smoke)
+    if cfg_overrides:
+        import dataclasses
+        model = Model(cfg=dataclasses.replace(model.cfg, **cfg_overrides),
+                      module=model.module)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        jitted, args, _, _ = build_train_step(model, mesh, shape)
+        return jitted, args, "train_step"
+    if shape.kind == "prefill":
+        jitted, args, _ = build_prefill_step(model, mesh, shape)
+        return jitted, args, "prefill_step"
+    jitted, args, _ = build_serve_step(model, mesh, shape,
+                                       variant=serve_variant)
+    return jitted, args, f"serve_step[{serve_variant}]"

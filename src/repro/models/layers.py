@@ -1,0 +1,472 @@
+"""Shared layer library: norms, RoPE, attention (GQA / MLA / cross),
+MLPs, and capacity-based MoE.  Functional style — every layer is a
+`spec_*(cfg) -> {name: P}` plus an `apply_*` taking the materialized params.
+
+Activation convention: (batch, seq, d_model). All math in f32 unless the
+input dtype is wider; outputs cast back to the input dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import P
+from repro.parallel.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def spec_norm(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": P((d,), (None,), init="ones")}
+    return {"scale": P((d,), (None,), init="ones"),
+            "bias": P((d,), (None,), init="zeros")}
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        # single-pass form the paper's LayerNorm module uses (Eq. 12):
+        # sigma^2 = E[x^2] - mu^2
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        ex2 = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        var = ex2 - mu * mu
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (S,) or (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core: memory-efficient (online-softmax over KV blocks)
+# ---------------------------------------------------------------------------
+
+
+def _plain_attention(q, k, v, causal: bool, q_offset) -> jnp.ndarray:
+    """q: (B,Sq,H,hd) k,v: (B,Skv,H,hd) — full score matrix (small seqs)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _flash_attention(q, k, v, causal: bool, q_offset,
+                     kv_block: int = 1024) -> jnp.ndarray:
+    """Online-softmax over KV blocks via lax.scan — O(Sq·block) live memory.
+
+    This is the pure-JAX oracle of the fused-attention idea; q stays
+    resident (the paper's "activations on-chip"), k/v stream block-wise
+    (the paper's chunked double-buffered weight streaming, applied to KV).
+    """
+    B, Sq, H, hd = q.shape
+    dv = v.shape[-1]            # MLA: value head dim may differ from qk dim
+    Skv = k.shape[1]
+    blk = min(kv_block, Skv)
+    while Skv % blk != 0:  # shapes here are powers of two or small
+        blk //= 2
+    nblk = Skv // blk
+    scale = 1.0 / math.sqrt(hd)
+    q32 = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(Sq) + q_offset
+
+    kb = jnp.moveaxis(k.reshape(B, nblk, blk, H, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, blk, H, dv), 1, 0)
+
+    def body(carry, kv_blk):
+        m, l, acc, start = carry
+        kblk, vblk = kv_blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kblk.astype(jnp.float32))
+        if causal:
+            kpos = start + jnp.arange(blk)
+            mask = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", pexp, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new, start + blk), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, 0), (kb, vb))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(o, 1, 2).astype(q.dtype)  # (B,Sq,H,hd)
+
+
+def _flash_kernel_sharded(q, k, v, causal: bool) -> jnp.ndarray:
+    """Route through the Pallas fused kernel, per-device via shard_map.
+
+    The kernel is a per-device program (batch/head-parallel grid); under a
+    production mesh each device runs it on its local (batch, head) shard —
+    exactly how a Pallas kernel executes on a real pod.  Without a mesh
+    (CPU smoke tests) it runs directly."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.parallel.sharding import get_current_mesh, spec_for_axes
+    H, KVH = q.shape[2], k.shape[2]
+    if H != KVH:
+        k = jnp.repeat(k, H // KVH, axis=2)
+        v = jnp.repeat(v, H // KVH, axis=2)
+    mesh = get_current_mesh()
+    if mesh is None:
+        return flash_attention(q, k, v, causal=causal)
+    spec = spec_for_axes(("batch", None, "tp", None), q.shape, mesh)
+    fn = jax.shard_map(
+        lambda a, b, c: flash_attention(a, b, c, causal=causal),
+        mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_vma=False)   # pallas_call out_shapes carry no vma info
+    return fn(q, k, v)
+
+
+def attention(q, k, v, *, causal: bool = True, q_offset=0,
+              flash_threshold: int = 2048,
+              use_flash_kernel: bool = False) -> jnp.ndarray:
+    """GQA-aware attention: k/v may have fewer heads (H % KVH == 0).
+
+    use_flash_kernel routes full-sequence attention through the Pallas
+    fused kernel (scores stay in VMEM — EXPERIMENTS.md §Perf); the XLA
+    paths below are the baseline and the oracle."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    if use_flash_kernel == "stub":
+        # dry-run instrumentation: same output shape, ~zero flops/bytes
+        vm = jnp.mean(v, axis=(1, 2), keepdims=True)      # (B,1,1,dv)
+        return jnp.broadcast_to(vm, (B, Sq, H, v.shape[-1])).astype(q.dtype)
+    if (use_flash_kernel and q_offset == 0 and Sq == k.shape[1]
+            and Sq >= 512):
+        return _flash_kernel_sharded(q, k, v, causal)
+    if H != KVH:
+        rep = H // KVH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if k.shape[1] <= flash_threshold:
+        return _plain_attention(q, k, v, causal, q_offset)
+    return _flash_attention(q, k, v, causal, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (with KV-cache decode)
+# ---------------------------------------------------------------------------
+
+
+def spec_attention(cfg) -> dict:
+    d, H, KVH = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": P((d, H, hd), ("fsdp", "tp", None)),
+        "wk": P((d, KVH, hd), ("fsdp", "tp", None)),
+        "wv": P((d, KVH, hd), ("fsdp", "tp", None)),
+        "wo": P((H, hd, d), ("tp", None, "fsdp")),
+    }
+
+
+def apply_attention(p, x, cfg, *, positions=None, causal=True,
+                    kv_cache=None, cache_pos=None, memory=None):
+    """x: (B,S,D).  Modes:
+      * training/prefill: kv_cache None — full-sequence attention
+      * decode: kv_cache {"k","v"} (B,Smax,KVH,hd), cache_pos scalar —
+        writes this step's K/V at cache_pos, attends to the prefix
+      * cross-attention: memory = (B,Sm,D) (k/v from memory; no cache here —
+        enc-dec decode precomputes memory K/V via precompute_cross_kv)
+    """
+    B, S, D = x.shape
+    kv_src = memory if memory is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    q = constrain(q, ("batch", None, "tp", None))
+    if positions is None:
+        positions = jnp.arange(S)
+    if memory is None and getattr(cfg, "rope_theta", 0):
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        kc = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        Smax = kc.shape[1]
+        # attend to [0, cache_pos]; causal mask via q_offset
+        o = attention(q, kc, vc, causal=True, q_offset=cache_pos)
+    else:
+        ufk = ("stub" if getattr(cfg, "attn_stub", False)
+               else getattr(cfg, "use_flash_kernel", False))
+        o = attention(q, k, v, causal=causal and memory is None, q_offset=0,
+                      use_flash_kernel=ufk)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, ("batch", None, None)), new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    KVH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    z = lambda: jnp.zeros((batch, max_len, KVH, hd), dtype)
+    return {"k": z(), "v": z()}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek style)
+# ---------------------------------------------------------------------------
+
+
+def spec_mla(cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": P((d, qr), ("fsdp", None)),
+        "q_norm": spec_norm(qr, "rmsnorm"),
+        "wq_b": P((qr, H, dn + dr), (None, "tp", None)),
+        "wkv_a": P((d, kvr + dr), ("fsdp", None)),
+        "kv_norm": spec_norm(kvr, "rmsnorm"),
+        "wkv_b": P((kvr, H, dn + dv), (None, "tp", None)),
+        "wo": P((H, dv, d), ("tp", None, "fsdp")),
+    }
+
+
+def apply_mla(p, x, cfg, *, positions=None, kv_cache=None, cache_pos=None):
+    """MLA with the compressed-latent cache: what is cached is the kv_lora
+    latent + the shared rope key (kvr + dr per token), NOT full K/V — the
+    memory win that makes MiniCPM3's long-context decode cheap."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q_lat = apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm")
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])      # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                   # (B,S,kvr+dr)
+    c_kv = apply_norm(p["kv_norm"], kv_a[..., :kvr], "rmsnorm")
+    k_rope = apply_rope(kv_a[..., kvr:][:, :, None, :], positions,
+                        cfg.rope_theta)                     # (B,S,1,dr)
+
+    new_cache = None
+    if kv_cache is not None:
+        cc = jax.lax.dynamic_update_slice(
+            kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype),
+            (0, cache_pos, 0))
+        rc = jax.lax.dynamic_update_slice(
+            kv_cache["k_rope"], k_rope[:, :, 0].astype(
+                kv_cache["k_rope"].dtype), (0, cache_pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": rc}
+        c_kv, k_rope = cc, rc[:, :, None, :]
+        q_offset = cache_pos
+    else:
+        q_offset = 0
+
+    # expand latents to per-head K (nope part) and V
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv.astype(x.dtype), p["wkv_b"])
+    k_nope, vv = kv[..., :dn], kv[..., dn:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope.astype(x.dtype),
+                                  (*k_nope.shape[:-1], dr))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    o = attention(q_full, k_full, vv, causal=True, q_offset=q_offset)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, ("batch", None, None)), new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def spec_mlp(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"wi": P((d, f), ("fsdp", "tp")),
+                "wg": P((d, f), ("fsdp", "tp")),
+                "wo": P((f, d), ("tp", "fsdp"))}
+    return {"wi": P((d, f), ("fsdp", "tp")),
+            "wo": P((f, d), ("tp", "fsdp"))}
+
+
+def apply_mlp(p, x, cfg):
+    h = x @ p["wi"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"])
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.act == "relu_sq":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.act)
+    h = constrain(h, ("batch", None, "tp"))
+    return constrain(h @ p["wo"], ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# MoE with capacity-based dispatch (Switch/T5X style)
+# ---------------------------------------------------------------------------
+
+
+def spec_moe(cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": P((d, E), ("fsdp", None), scale=0.02),
+        "wi": P((E, d, f), ("ep", "fsdp", None)),
+        "wg": P((E, d, f), ("ep", "fsdp", None)),
+        "wo": P((E, f, d), ("ep", None, "fsdp")),
+    }
+
+
+def apply_moe_grouped(p, x, cfg):
+    """Grouped-dispatch MoE (EXPERIMENTS.md §Perf, beyond-paper opt):
+    each sequence is a dispatch group, so the position-in-expert cumsum and
+    the capacity scatter are LOCAL to the data shard (no all-gather of the
+    one-hot, no partial-sum all-reduce of the global buffer).  The only
+    cross-device movement is the (B,E,C,D) buffer resharding
+    data->model and back — which SPMD lowers to all-to-alls — and the
+    payloads stay bf16 (gates applied in low precision at combine)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(int(math.ceil(S * K * cfg.capacity_factor / E)), 1)
+
+    logits = (x @ p["router"]).astype(jnp.float32)          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (B * S * K))
+    aux = E * jnp.sum(me * ce)
+
+    # position within expert, per group (cumsum over the LOCAL S*K axis)
+    e_flat = idx.reshape(B, S * K)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)         # (B,S*K,E)
+    pos = jnp.sum(jnp.cumsum(oh, axis=1) * oh, axis=-1) - 1
+    keep = pos < C
+    e_safe = jnp.where(keep, e_flat, 0)
+    pos_safe = jnp.where(keep, pos, 0)
+
+    tok = jnp.arange(S * K) // K
+    src = jnp.where(keep[..., None], x[:, tok], 0)          # (B,S*K,D) bf16
+    bidx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E, C, D), x.dtype).at[
+        bidx, e_safe, pos_safe].add(src)
+    buf = constrain(buf, ("batch", None, None, None))       # local dispatch
+    # 2-D parallel expert compute: experts over "model" x groups over
+    # "data" — the (E,B,C,D) buffer is sliced along BOTH axes, weights are
+    # ep-sharded, so the FFN einsums are fully local (no reshape that
+    # would defeat SPMD's all-to-all pattern matching)
+    ebuf = jnp.transpose(buf, (1, 0, 2, 3))                 # (E,B,C,D)
+    ebuf = constrain(ebuf, ("ep", "batch", None, None))
+    h = jnp.einsum("ebcd,edf->ebcf", ebuf, p["wi"])
+    h = jax.nn.silu(h) * jnp.einsum("ebcd,edf->ebcf", ebuf, p["wg"])
+    out_ebuf = jnp.einsum("ebcf,efd->ebcd", h, p["wo"])
+    out_ebuf = constrain(out_ebuf, ("ep", "batch", None, None))
+    out_buf = jnp.transpose(out_ebuf, (1, 0, 2, 3))
+    out_buf = constrain(out_buf, ("batch", None, None, None))
+    gathered = out_buf[bidx, e_safe, pos_safe]              # (B,S*K,D)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = jnp.sum(
+        (gathered * gate_vals.reshape(B, S * K, 1).astype(x.dtype)
+         ).reshape(B, S, K, D), axis=2)
+    return out.astype(x.dtype), aux
+
+
+def apply_moe(p, x, cfg):
+    """Returns (out, aux_loss). Top-k routing, per-expert capacity buffers,
+    dropped-token overflow — experts shard over "model" (EP) so the
+    dispatch/combine reshards become all-to-alls under SPMD."""
+    if getattr(cfg, "moe_grouped", False):
+        return apply_moe_grouped(p, x, cfg)
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = max(int(math.ceil(T * K * cfg.capacity_factor / E)), 1)
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)         # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                # (T,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, choice) within its expert
+    e_flat = idx.reshape(-1)                                # (T*K,)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1  # (T*K,)
+    keep = pos < C
+    e_safe = jnp.where(keep, e_flat, 0)
+    pos_safe = jnp.where(keep, pos, 0)
+
+    tok = jnp.arange(T * K) // K
+    src = jnp.where(keep[:, None], xf[tok], 0).astype(x.dtype)
+    buf = jnp.zeros((E, C, D), x.dtype).at[e_safe, pos_safe].add(src)
+    buf = constrain(buf, ("ep", None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_buf = constrain(out_buf, ("ep", None, None))
+
+    gathered = out_buf[e_safe, pos_safe]                    # (T*K,D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    # combine in the activation dtype: f32 gates would upcast every token
+    # payload crossing the EP reshard collectives (§Perf: 2x wire bytes)
+    gates = gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = jnp.sum((gathered * gates).reshape(T, K, D), axis=1)
+    return out.reshape(B, S, D).astype(x.dtype), aux

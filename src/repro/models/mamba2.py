@@ -1,0 +1,144 @@
+"""Mamba-2 block (arXiv:2405.21060) — used by the zamba2 hybrid.
+
+Block: in_proj -> (z | x | B | C | dt), short causal depthwise conv over
+(x,B,C), softplus(dt)-scaled SSD recurrence with scalar-per-head decay,
+D-skip, gated RMSNorm, out_proj.  The recurrence (scan / chunked / step)
+lives in repro.core.wkv.ssd.
+
+Shapes: d_inner = ssm_expand * d_model; H = d_inner / ssm_head_dim heads,
+state dim N = ssm_state, n_groups = 1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.wkv.ssd import ssd_chunked, ssd_init_state, ssd_scan, ssd_step
+from repro.models import layers as L
+from repro.models.param import P
+from repro.parallel.sharding import constrain
+
+CONV_K = 4  # causal conv kernel width (mamba2 default)
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N  # x, B, C share the conv
+    return d_inner, H, N, conv_dim
+
+
+def spec_mamba2(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H, N, conv_dim = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * N + H  # z | x | B | C | dt
+    return {
+        "in_proj": P((d, proj_out), ("fsdp", "tp")),
+        "conv_w": P((CONV_K, conv_dim), (None, None), scale=0.2),
+        "conv_b": P((conv_dim,), (None,), init="zeros"),
+        "a_log": P((H,), (None,), init="uniform", scale=1.0),
+        "dt_bias": P((H,), (None,), init="zeros"),
+        "d_skip": P((H,), (None,), init="ones"),
+        "out_norm": {"scale": P((d_inner,), (None,), init="ones")},
+        "out_proj": P((d_inner, d), ("tp", "fsdp")),
+    }
+
+
+def _split(zxbcdt, cfg):
+    d_inner, H, N, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xc = zxbcdt[..., d_inner:2 * d_inner + 2 * N]   # conv input: x|B|C
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, xc, dt
+
+
+def _split_conv(xc, cfg):
+    d_inner, _, N, _ = _dims(cfg)
+    return (xc[..., :d_inner], xc[..., d_inner:d_inner + N],
+            xc[..., d_inner + N:])
+
+
+def _gated_norm(p, y, z, eps=1e-5):
+    """RMSNorm(y * silu(z)) — the mamba2 gated output norm."""
+    y32 = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * p["scale"]).astype(y.dtype)
+
+
+def _ssm_inputs(p, xc, dt, cfg):
+    """Post-conv tensors -> SSD inputs (x (B,T,H,P), a (B,T,H), Bc, Cc)."""
+    d_inner, H, N, _ = _dims(cfg)
+    Pd = cfg.ssm_head_dim
+    x, Bc, Cc = _split_conv(jax.nn.silu(xc), cfg)
+    lead = x.shape[:-1]
+    xh = x.reshape(*lead, H, Pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (...,H)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)    # (...,H)
+    xdt = xh * dt[..., None]
+    return xdt, a, Bc, Cc, xh, dt
+
+
+def apply_mamba2_seq(p, x, cfg: ModelConfig, *, chunk: int = 64):
+    """x: (B,S,D) -> (B,S,D).  Chunked SSD when S divides the chunk."""
+    Bsz, S, D = x.shape
+    d_inner, H, N, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xc, dt = _split(zxbcdt, cfg)
+    z = constrain(z, ("batch", None, "tp"))
+    # causal depthwise conv along S (kernel CONV_K)
+    pad = jnp.zeros((Bsz, CONV_K - 1, conv_dim), xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)
+    xconv = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(CONV_K))
+    xconv = xconv + p["conv_b"]
+    xdt, a, Bc, Cc, xh, _ = _ssm_inputs(p, xconv, dt, cfg)
+    Bc = jnp.broadcast_to(Bc[..., None, :], (Bsz, S, H, N))
+    Cc = jnp.broadcast_to(Cc[..., None, :], (Bsz, S, H, N))
+    ssd = (lambda *args: ssd_chunked(*args, chunk=chunk)
+           ) if S % chunk == 0 and S > chunk else ssd_scan
+    y, _ = ssd(xdt, a, Bc, Cc)
+    y = y.astype(x.dtype) + xh * p["d_skip"][:, None]
+    y = _gated_norm(p["out_norm"], y.reshape(Bsz, S, d_inner), z)
+    return constrain(y @ p["out_proj"], ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Decode — conv ring state + SSD state
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, N, conv_dim = _dims(cfg)
+    Pd = cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, H, N, Pd), dtype),
+    }
+
+
+def mamba2_state_axes():
+    return {"conv": ("batch", None, None),
+            "ssd": ("batch", "tp", None, None)}
+
+
+def apply_mamba2_step(p, x, state, cfg: ModelConfig):
+    """x: (B,D) one token; state {"conv","ssd"} -> (y (B,D), new_state)."""
+    Bsz, D = x.shape
+    d_inner, H, N, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xc, dt = _split(zxbcdt, cfg)
+    hist = state["conv"].astype(xc.dtype)               # (B, K-1, conv)
+    window = jnp.concatenate([hist, xc[:, None]], axis=1)  # (B, K, conv)
+    xconv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    new_conv = window[:, 1:]
+    xdt, a, Bc, Cc, xh, _ = _ssm_inputs(p, xconv, dt, cfg)
+    h, y = ssd_step(state["ssd"].astype(jnp.float32),
+                    xdt.astype(jnp.float32), a,
+                    Bc.astype(jnp.float32)[..., None, :].repeat(H, -2),
+                    Cc.astype(jnp.float32)[..., None, :].repeat(H, -2))
+    y = y.astype(x.dtype) + xh * p["d_skip"][:, None]
+    y = _gated_norm(p["out_norm"], y.reshape(Bsz, d_inner), z)
+    new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                 "ssd": h.astype(state["ssd"].dtype)}
+    return (y @ p["out_proj"]).astype(x.dtype), new_state

@@ -1,0 +1,94 @@
+"""Tiny parameter-spec system.
+
+Every model defines `spec(cfg) -> nested dict of P`; from that single source
+we derive:
+  * materialized parameters  (init_params — works under jax.eval_shape)
+  * abstract parameters      (abstract_params — ShapeDtypeStruct tree)
+  * logical sharding axes    (logical_axes — tree of tuples)
+
+Logical axis vocabulary (mapped to mesh axes by repro.parallel.sharding):
+  "fsdp"   — fully-sharded-data-parallel dim (usually the embed/input dim)
+  "tp"     — tensor-parallel dim (heads / ffn hidden / vocab)
+  "ep"     — expert-parallel dim (MoE expert axis)
+  "layers" — stacked-layer leading axis (scan dim; never sharded)
+  None     — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declarative parameter spec."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | uniform | const
+    scale: float | None = None    # stddev override (default fan-in)
+    const: float = 0.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+
+
+def _init_leaf(p: P, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "const":
+        return jnp.full(p.shape, p.const, dtype)
+    if p.init == "uniform":
+        s = p.scale if p.scale is not None else 1.0
+        return jax.random.uniform(key, p.shape, dtype, -s, s)
+    # default: truncated-normal, fan-in scaled over the non-output dims
+    if p.scale is not None:
+        std = p.scale
+    else:
+        fan_in = p.shape[0] if len(p.shape) == 1 else int(
+            np.prod(p.shape[:-1]))
+        # stacked-layer tensors: exclude the leading layer axis from fan-in
+        if p.axes and p.axes[0] == "layers" and len(p.shape) > 2:
+            fan_in = int(np.prod(p.shape[1:-1]))
+        std = 1.0 / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, p.shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(spec, rng, dtype=jnp.float32):
+    """Materialize a spec tree; deterministic per-leaf keys via fold_in."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=_is_p)
+    out = []
+    for i, p in enumerate(leaves):
+        key = jax.random.fold_in(rng, i)
+        out.append(_init_leaf(p, key, dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec, is_leaf=_is_p)
+
+
+def logical_axes(spec):
+    return jax.tree_util.tree_map(lambda p: p.axes, spec, is_leaf=_is_p)
+
+
+def param_count(spec) -> int:
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=_is_p)
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+def param_bytes(spec, bytes_per_elem: int = 2) -> int:
+    return param_count(spec) * bytes_per_elem

@@ -1,0 +1,123 @@
+"""Model registry: arch family -> module implementing the uniform model API.
+
+Every model module exposes:
+  spec(cfg)                         -> P tree
+  forward(params, batch, cfg)       -> (logits, aux_loss)
+  init_decode_state(cfg, B, maxlen) -> state tree            (decoders only)
+  decode_state_axes(cfg)            -> logical-axes tree
+  decode_step(params, state, tokens, pos, cfg) -> (logits, new_state)
+
+`get_model(cfg)` dispatches on the config family / rwkv_version and returns
+a Model handle bundling those functions with the config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import ModuleType
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config, smoke_config
+from repro.models import param as PM
+
+
+def _module_for(cfg: ModelConfig) -> ModuleType:
+    if cfg.rwkv_version == 4:
+        from repro.models import rwkv4
+        return rwkv4
+    if cfg.rwkv_version == 6:
+        from repro.models import rwkv6
+        return rwkv6
+    if cfg.family == "hybrid":
+        from repro.models import zamba2
+        return zamba2
+    if cfg.family == "audio":
+        from repro.models import encdec
+        return encdec
+    from repro.models import transformer
+    return transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    module: ModuleType
+
+    # -- parameters --------------------------------------------------------
+    def spec(self):
+        return self.module.spec(self.cfg)
+
+    def init_params(self, rng, dtype=jnp.float32):
+        return PM.init_params(self.spec(), rng, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return PM.abstract_params(self.spec(), dtype)
+
+    def param_axes(self):
+        return PM.logical_axes(self.spec())
+
+    def param_count(self) -> int:
+        return PM.param_count(self.spec())
+
+    # -- compute -----------------------------------------------------------
+    def forward(self, params, batch):
+        return self.module.forward(self.cast_params(params), batch, self.cfg)
+
+    def cast_params(self, params):
+        """f32 master params -> compute dtype (standard mixed precision;
+        grads flow back to the f32 masters through the cast). Leaves that
+        must stay f32 are re-cast inside the model where it matters."""
+        dt = jnp.dtype(self.cfg.dtype)
+
+        def cast(a):
+            if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating):
+                return a.astype(dt)
+            return a
+        return jax.tree_util.tree_map(cast, params)
+
+    @property
+    def has_decode(self) -> bool:
+        return hasattr(self.module, "decode_step")
+
+    def init_decode_state(self, batch: int, max_len: int,
+                          dtype=jnp.bfloat16):
+        return self.module.init_decode_state(self.cfg, batch, max_len, dtype)
+
+    def decode_state_axes(self):
+        return self.module.decode_state_axes(self.cfg)
+
+    def decode_step(self, params, state, tokens, pos):
+        return self.module.decode_step(self.cast_params(params), state,
+                                       tokens, pos, self.cfg)
+
+
+def get_model(cfg_or_id: ModelConfig | str, *, smoke: bool = False) -> Model:
+    if isinstance(cfg_or_id, str):
+        cfg = smoke_config(cfg_or_id) if smoke else get_config(cfg_or_id)
+    else:
+        cfg = cfg_or_id
+    return Model(cfg=cfg, module=_module_for(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Loss / step builders shared by the launcher, examples and dry-run
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(model: Model, params, batch):
+    """Causal-LM cross-entropy (mean over non-masked tokens) + MoE aux."""
+    logits, aux = model.forward(params, batch)
+    labels = batch["labels"]
+    # VLM: logits cover [patches + tokens]; labels align to the text tail
+    if logits.shape[1] != labels.shape[1]:
+        logits = logits[:, -labels.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}

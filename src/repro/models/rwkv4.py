@@ -1,0 +1,224 @@
+"""RWKV-4 — the paper's model (BlinkDL RWKV-4, faithful block structure).
+
+Block = TimeMix (token-shift → r/k/v projections → WKV recurrence →
+sigmoid(r)-gated output) + ChannelMix (token-shift → squared-ReLU FFN with
+sigmoid(r) gate), each preceded by LayerNorm, plus the pre-block ln0.
+
+Two numerics modes:
+  * standard  — f32/bf16 math (training + FP baseline)
+  * hw        — the accelerator's numerics (paper §3–4): Δ-PoT-dequantized
+    weights are supplied by the caller; activations fake-quantized to 9-bit;
+    exp/sigmoid/division via the LUT/PWL units (repro.core.approx).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.approx import exp_lut, sigmoid_pwl, div_lut
+from repro.core.quant.uniform import uniform_fake_quant
+from repro.core.wkv.wkv4 import wkv4_scan, wkv4_step, WKV4State
+from repro.models import layers as L
+from repro.models.param import P
+from repro.parallel.sharding import constrain
+
+
+def _stack(spec, n: int):
+    return jax.tree_util.tree_map(
+        lambda p: P((n, *p.shape), ("layers", *p.axes), init=p.init,
+                    scale=p.scale, const=p.const),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def _block_spec(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": L.spec_norm(d, "layernorm"),
+        "ln2": L.spec_norm(d, "layernorm"),
+        "att": {
+            "time_mix_r": P((d,), (None,), init="uniform", scale=0.5),
+            "time_mix_k": P((d,), (None,), init="uniform", scale=0.5),
+            "time_mix_v": P((d,), (None,), init="uniform", scale=0.5),
+            "time_decay": P((d,), (None,), init="zeros"),   # w = exp(·)
+            "time_first": P((d,), (None,), init="zeros"),   # bonus u
+            "wr": P((d, d), ("fsdp", "tp")),
+            "wk": P((d, d), ("fsdp", "tp")),
+            "wv": P((d, d), ("fsdp", "tp")),
+            "wo": P((d, d), ("tp", "fsdp")),
+        },
+        "ffn": {
+            "time_mix_r": P((d,), (None,), init="uniform", scale=0.5),
+            "time_mix_k": P((d,), (None,), init="uniform", scale=0.5),
+            "wr": P((d, d), ("fsdp", "tp")),
+            "wk": P((d, f), ("fsdp", "tp")),
+            "wv": P((f, d), ("tp", "fsdp")),
+        },
+    }
+
+
+def spec(cfg: ModelConfig) -> dict:
+    return {
+        "embed": P((cfg.vocab, cfg.d_model), ("tp", "fsdp"), scale=0.02),
+        "ln0": L.spec_norm(cfg.d_model, "layernorm"),
+        "blocks": _stack(_block_spec(cfg), cfg.n_layers),
+        "ln_f": L.spec_norm(cfg.d_model, "layernorm"),
+        "head": P((cfg.d_model, cfg.vocab), ("fsdp", "tp")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Numerics contexts
+# ---------------------------------------------------------------------------
+
+
+class _Std:
+    exp = staticmethod(jnp.exp)
+    sigmoid = staticmethod(jax.nn.sigmoid)
+    div = staticmethod(lambda a, b: a / b)
+    act_q = staticmethod(lambda x: x)
+
+
+class _Hw:
+    """Paper numerics: LUT exp, PWL sigmoid, LUT division, A9 activations."""
+    exp = staticmethod(exp_lut)
+    sigmoid = staticmethod(sigmoid_pwl)
+    div = staticmethod(div_lut)
+    act_q = staticmethod(lambda x: uniform_fake_quant(x, 9, None))
+
+
+def _numerics(hw: bool):
+    return _Hw if hw else _Std
+
+
+# ---------------------------------------------------------------------------
+# Block application — sequence mode
+# ---------------------------------------------------------------------------
+
+
+def _token_shift_seq(x, prev):
+    """(B,S,D) -> previous-token tensor; prev (B,D) is x_{-1}."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix_seq(p, x, prev, cfg, nm):
+    xx = _token_shift_seq(x, prev)
+    mix = lambda m: nm.act_q(x * p[m] + xx * (1.0 - p[m]))
+    r = mix("time_mix_r") @ p["wr"]
+    k = mix("time_mix_k") @ p["wk"]
+    v = mix("time_mix_v") @ p["wv"]
+    r = constrain(r, ("batch", None, "tp"))
+    w = jnp.exp(p["time_decay"].astype(jnp.float32))
+    if getattr(cfg, "wkv_stub", False):
+        out = v          # dry-run instrumentation: zero-cost recurrence
+    else:
+        out, _ = wkv4_scan(k, v, w, p["time_first"].astype(jnp.float32),
+                           exp=nm.exp, div=nm.div)
+    out = nm.act_q(nm.sigmoid(r) * out.astype(r.dtype))
+    return constrain(out @ p["wo"], ("batch", None, None)), x[:, -1]
+
+
+def _channel_mix_seq(p, x, prev, cfg, nm):
+    xx = _token_shift_seq(x, prev)
+    mix = lambda m: nm.act_q(x * p[m] + xx * (1.0 - p[m]))
+    r = nm.sigmoid(mix("time_mix_r") @ p["wr"])
+    k = mix("time_mix_k") @ p["wk"]
+    k = constrain(k, ("batch", None, "tp"))
+    k = jnp.square(jax.nn.relu(k))
+    out = nm.act_q(r * (nm.act_q(k) @ p["wv"]))
+    return constrain(out, ("batch", None, None)), x[:, -1]
+
+
+def forward(params, batch: dict, cfg: ModelConfig, *, hw: bool = False):
+    nm = _numerics(hw)
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", None, None))
+    x = L.apply_norm(params["ln0"], x, "layernorm")
+    zeros_prev = jnp.zeros((B, cfg.d_model), x.dtype)
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, "layernorm")
+        att, _ = _time_mix_seq(lp["att"], h, zeros_prev, cfg, nm)
+        x = x + att.astype(x.dtype)   # hw-numerics units emit f32
+        h = L.apply_norm(lp["ln2"], x, "layernorm")
+        ffn, _ = _channel_mix_seq(lp["ffn"], h, zeros_prev, cfg, nm)
+        return x + ffn.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+    blk = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(blk, x, params["blocks"])
+    x = L.apply_norm(params["ln_f"], x, "layernorm")
+    logits = x @ params["head"].astype(x.dtype)
+    return constrain(logits, ("batch", None, "tp")), jnp.zeros(
+        (), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode — the paper's serving mode (token-by-token, state carried)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0,
+                      dtype=jnp.float32):
+    """State per layer: att token-shift x, ffn token-shift x, wkv (a,b,o).
+    max_len is ignored (O(1) state — the paper's linear-memory claim)."""
+    Lc, D = cfg.n_layers, cfg.d_model
+    z = lambda: jnp.zeros((Lc, batch, D), dtype)
+    return {
+        "att_x": z(), "ffn_x": z(),
+        "wkv_a": z(), "wkv_b": z(),
+        "wkv_o": jnp.full((Lc, batch, D), -1e38, dtype),
+    }
+
+
+def decode_state_axes(cfg: ModelConfig):
+    ax = ("layers", "batch", None)
+    return {k: ax for k in ("att_x", "ffn_x", "wkv_a", "wkv_b", "wkv_o")}
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
+                hw: bool = False):
+    """tokens: (B,1). Returns (logits (B,1,V), new_state)."""
+    del pos  # RWKV state is position-free
+    nm = _numerics(hw)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(
+        jnp.dtype(cfg.dtype))                              # (B,D)
+    x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
+
+    def body(x, xs):
+        lp, st = xs
+        att_x, ffn_x = st["att_x"], st["ffn_x"]
+        wkv = WKV4State(st["wkv_a"].astype(jnp.float32),
+                        st["wkv_b"].astype(jnp.float32),
+                        st["wkv_o"].astype(jnp.float32))
+        h = L.apply_norm(lp["ln1"], x[:, None], "layernorm")[:, 0]
+        p = lp["att"]
+        mix = lambda m: nm.act_q(h * p[m] + att_x * (1.0 - p[m]))
+        r = mix("time_mix_r") @ p["wr"]
+        k = mix("time_mix_k") @ p["wk"]
+        v = mix("time_mix_v") @ p["wv"]
+        w = jnp.exp(p["time_decay"].astype(jnp.float32))
+        new_wkv, out = wkv4_step(wkv, k.astype(jnp.float32),
+                                 v.astype(jnp.float32), w,
+                                 p["time_first"].astype(jnp.float32),
+                                 exp=nm.exp, div=nm.div)
+        att = nm.act_q(nm.sigmoid(r) * out.astype(r.dtype)) @ p["wo"]
+        x2 = x + att.astype(x.dtype)
+        h2 = L.apply_norm(lp["ln2"], x2[:, None], "layernorm")[:, 0]
+        p = lp["ffn"]
+        mix2 = lambda m: nm.act_q(h2 * p[m] + ffn_x * (1.0 - p[m]))
+        rr = nm.sigmoid(mix2("time_mix_r") @ p["wr"])
+        kk = jnp.square(jax.nn.relu(mix2("time_mix_k") @ p["wk"]))
+        ffn = nm.act_q(rr * (nm.act_q(kk) @ p["wv"]))
+        new_st = {"att_x": h.astype(att_x.dtype),
+                  "ffn_x": h2.astype(ffn_x.dtype),
+                  "wkv_a": new_wkv.a.astype(st["wkv_a"].dtype),
+                  "wkv_b": new_wkv.b.astype(st["wkv_b"].dtype),
+                  "wkv_o": new_wkv.o.astype(st["wkv_o"].dtype)}
+        return x2 + ffn.astype(x2.dtype), new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
+    logits = x @ params["head"].astype(x.dtype)
+    return logits, new_state

@@ -1,0 +1,241 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — data-dependent decay linear attention.
+
+Block = TimeMix (ddlerp token-shift -> r/k/v/w/g projections -> multi-head
+WKV-6 recurrence -> GroupNorm -> SiLU(g) gate) + ChannelMix (same squared-ReLU
+gated FFN as RWKV-4), each preceded by LayerNorm, plus the pre-block ln0.
+
+The data-dependent parts follow the published formulation:
+  ddlerp: xxx = x + dx * mu_x;  d = tanh(xxx @ maa_w1) @ maa_w2 -> 5 deltas
+          x_s  = x + dx * (mu_s + d_s)        for s in {w,k,v,r,g}
+  decay:  w_t  = exp(-exp(time_decay + tanh(x_w @ td_w1) @ td_w2))
+The recurrence itself lives in repro.core.wkv.wkv6 (scan / chunked / step);
+training & prefill use the chunked sub-quadratic form, decode the O(1) step —
+this model is the closest assigned architecture to the paper's RWKV-4 and is
+the primary target of its technique.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.wkv.wkv6 import (
+    wkv6_chunked, wkv6_init_state, wkv6_scan, wkv6_step)
+from repro.models import layers as L
+from repro.models.param import P
+from repro.parallel.sharding import constrain
+
+_MAA_RANK = 32   # low-rank dims of the data-dependent mixes (HF config: 32)
+_TD_RANK = 64    # low-rank dim of the data-dependent decay
+
+
+def _stack(spec, n: int):
+    return jax.tree_util.tree_map(
+        lambda p: P((n, *p.shape), ("layers", *p.axes), init=p.init,
+                    scale=p.scale, const=p.const),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def _block_spec(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads
+    N = cfg.rwkv_head_dim
+    assert H * N == d, f"heads {H} x head_dim {N} != d_model {d}"
+    return {
+        "ln1": L.spec_norm(d, "layernorm"),
+        "ln2": L.spec_norm(d, "layernorm"),
+        "att": {
+            "time_maa_x": P((d,), (None,), init="uniform", scale=0.5),
+            # per-stream mus: w, k, v, r, g
+            "time_maa": P((5, d), (None, None), init="uniform", scale=0.5),
+            "maa_w1": P((d, 5 * _MAA_RANK), (None, None), scale=0.01),
+            "maa_w2": P((5, _MAA_RANK, d), (None, None, None), scale=0.01),
+            "time_decay": P((d,), (None,), init="zeros"),
+            "td_w1": P((d, _TD_RANK), (None, None), scale=0.01),
+            "td_w2": P((_TD_RANK, d), (None, None), scale=0.01),
+            "time_faaaa": P((H, N), (None, None), init="zeros"),  # bonus u
+            "wr": P((d, d), ("fsdp", "tp")),
+            "wk": P((d, d), ("fsdp", "tp")),
+            "wv": P((d, d), ("fsdp", "tp")),
+            "wg": P((d, d), ("fsdp", "tp")),
+            "wo": P((d, d), ("tp", "fsdp")),
+            "ln_x": {"scale": P((d,), (None,), init="ones"),
+                     "bias": P((d,), (None,), init="zeros")},
+        },
+        "ffn": {
+            "time_mix_r": P((d,), (None,), init="uniform", scale=0.5),
+            "time_mix_k": P((d,), (None,), init="uniform", scale=0.5),
+            "wr": P((d, d), ("fsdp", "tp")),
+            "wk": P((d, f), ("fsdp", "tp")),
+            "wv": P((f, d), ("tp", "fsdp")),
+        },
+    }
+
+
+def spec(cfg: ModelConfig) -> dict:
+    return {
+        "embed": P((cfg.vocab, cfg.d_model), ("tp", "fsdp"), scale=0.02),
+        "ln0": L.spec_norm(cfg.d_model, "layernorm"),
+        "blocks": _stack(_block_spec(cfg), cfg.n_layers),
+        "ln_f": L.spec_norm(cfg.d_model, "layernorm"),
+        "head": P((cfg.d_model, cfg.vocab), ("fsdp", "tp")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# TimeMix internals (shared between sequence and step forms)
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, dx):
+    """Data-dependent token-shift mixes.  x, dx: (..., D).
+    Returns (xw, xk, xv, xr, xg)."""
+    xxx = x + dx * p["time_maa_x"]
+    lead = xxx.shape[:-1]
+    dmix = jnp.tanh(xxx @ p["maa_w1"])                 # (..., 5R)
+    dmix = dmix.reshape(*lead, 5, _MAA_RANK)
+    deltas = jnp.einsum("...sr,srd->...sd", dmix, p["maa_w2"])  # (...,5,D)
+    mus = p["time_maa"] + deltas                       # (...,5,D)
+    return tuple(x + dx * mus[..., i, :] for i in range(5))
+
+
+def _decay(p, xw):
+    """w_t in (0,1): exp(-exp(time_decay + lora(x_w)))."""
+    dd = p["time_decay"] + jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]
+    return jnp.exp(-jnp.exp(dd.astype(jnp.float32)))
+
+
+def _group_norm(p, y, H, eps=64e-5):
+    """Per-head LayerNorm (the official ln_x GroupNorm(H))."""
+    lead = y.shape[:-1]
+    yh = y.reshape(*lead, H, -1).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    out = yh.reshape(*lead, -1) * p["scale"] + p["bias"]
+    return out.astype(y.dtype)
+
+
+def _time_mix_seq(p, x, prev, cfg, wkv_fn):
+    """x: (B,S,D); prev: (B,D) token-shift carry."""
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    dx = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1) - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, dx)
+    r = (xr @ p["wr"]).reshape(B, S, H, N)
+    k = (xk @ p["wk"]).reshape(B, S, H, N)
+    v = (xv @ p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(B, S, H, N)
+    r = constrain(r, ("batch", None, "tp", None))
+    y, _ = wkv_fn(r, k, v, w, p["time_faaaa"].astype(jnp.float32))
+    y = _group_norm(p["ln_x"], y.reshape(B, S, D), H)
+    out = (y * g) @ p["wo"]
+    return constrain(out, ("batch", None, None)), x[:, -1]
+
+
+def _channel_mix_seq(p, x, prev):
+    xx = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    mix = lambda m: x * p[m] + xx * (1.0 - p[m])
+    r = jax.nn.sigmoid(mix("time_mix_r") @ p["wr"])
+    k = constrain(mix("time_mix_k") @ p["wk"], ("batch", None, "tp"))
+    k = jnp.square(jax.nn.relu(k))
+    return constrain(r * (k @ p["wv"]), ("batch", None, None)), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill): chunked sub-quadratic WKV
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch: dict, cfg: ModelConfig, *, chunk: int = 64):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", None, None))
+    x = L.apply_norm(params["ln0"], x, "layernorm")
+    zeros_prev = jnp.zeros((B, cfg.d_model), x.dtype)
+    wkv_fn = (lambda r, k, v, w, u: wkv6_chunked(r, k, v, w, u, chunk=chunk)
+              ) if S % chunk == 0 and S > chunk else wkv6_scan
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, "layernorm")
+        att, _ = _time_mix_seq(lp["att"], h, zeros_prev, cfg, wkv_fn)
+        x = x + att
+        h = L.apply_norm(lp["ln2"], x, "layernorm")
+        ffn, _ = _channel_mix_seq(lp["ffn"], h, zeros_prev)
+        return x + ffn, jnp.zeros((), jnp.float32)
+
+    blk = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(blk, x, params["blocks"])
+    x = L.apply_norm(params["ln_f"], x, "layernorm")
+    logits = x @ params["head"].astype(x.dtype)
+    return constrain(logits, ("batch", None, "tp")), jnp.zeros(
+        (), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode — O(1) state per token (the linear-inference story)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0,
+                      dtype=jnp.float32):
+    del max_len  # O(1) state
+    Lc, D = cfg.n_layers, cfg.d_model
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    return {
+        "att_x": jnp.zeros((Lc, batch, D), dtype),
+        "ffn_x": jnp.zeros((Lc, batch, D), dtype),
+        "wkv_s": jnp.zeros((Lc, batch, H, N, N), dtype),
+    }
+
+
+def decode_state_axes(cfg: ModelConfig):
+    return {"att_x": ("layers", "batch", None),
+            "ffn_x": ("layers", "batch", None),
+            "wkv_s": ("layers", "batch", "tp", None, None)}
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig):
+    """tokens: (B,1) -> (logits (B,1,V), new_state)."""
+    del pos
+    B = tokens.shape[0]
+    H, N, D = cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
+
+    def body(x, xs):
+        lp, st = xs
+        h = L.apply_norm(lp["ln1"], x[:, None], "layernorm")[:, 0]
+        p = lp["att"]
+        dx = st["att_x"].astype(h.dtype) - h
+        xw, xk, xv, xr, xg = _ddlerp(p, h, dx)
+        r = (xr @ p["wr"]).reshape(B, H, N)
+        k = (xk @ p["wk"]).reshape(B, H, N)
+        v = (xv @ p["wv"]).reshape(B, H, N)
+        g = jax.nn.silu(xg @ p["wg"])
+        w = _decay(p, xw).reshape(B, H, N)
+        S_new, y = wkv6_step(st["wkv_s"].astype(jnp.float32),
+                             r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), w,
+                             p["time_faaaa"].astype(jnp.float32))
+        y = _group_norm(p["ln_x"], y.reshape(B, D).astype(h.dtype), H)
+        x2 = x + (y * g) @ p["wo"]
+        h2 = L.apply_norm(lp["ln2"], x2[:, None], "layernorm")[:, 0]
+        p2 = lp["ffn"]
+        ffn_x = st["ffn_x"].astype(h2.dtype)
+        mix = lambda m: h2 * p2[m] + ffn_x * (1.0 - p2[m])
+        rr = jax.nn.sigmoid(mix("time_mix_r") @ p2["wr"])
+        kk = jnp.square(jax.nn.relu(mix("time_mix_k") @ p2["wk"]))
+        ffn = rr * (kk @ p2["wv"])
+        new_st = {"att_x": h.astype(st["att_x"].dtype),
+                  "ffn_x": h2.astype(st["ffn_x"].dtype),
+                  "wkv_s": S_new.astype(st["wkv_s"].dtype)}
+        return x2 + ffn, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
+    logits = x @ params["head"].astype(x.dtype)
+    return logits, new_state

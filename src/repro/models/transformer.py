@@ -1,0 +1,211 @@
+"""Generic decoder-only LM covering the dense / MoE / MLA / VLM assigned
+architectures (smollm, phi3, minitron, minicpm3, moonshot, llama4,
+internvl2-backbone).
+
+Layers are stacked with a leading "layers" axis and executed with
+jax.lax.scan (optionally remat'd) — this keeps the compiled HLO small and
+compile time bounded even for the 400B config, and is what a production
+framework does anyway.
+
+MoE interleaving: with moe_every = g, layers are grouped into n_layers/g
+"super-blocks" of (g-1) dense layers + 1 MoE layer, scanned over groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import P
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+
+def _stack(spec, n: int):
+    """Prepend a stacked-layer axis to every P in a spec tree."""
+    return jax.tree_util.tree_map(
+        lambda p: P((n, *p.shape), ("layers", *p.axes), init=p.init,
+                    scale=p.scale, const=p.const),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def _block_spec(cfg: ModelConfig, moe: bool) -> dict:
+    attn = L.spec_mla(cfg) if cfg.use_mla else L.spec_attention(cfg)
+    d = {
+        "ln1": L.spec_norm(cfg.d_model, cfg.norm),
+        "attn": attn,
+        "ln2": L.spec_norm(cfg.d_model, cfg.norm),
+    }
+    d["mlp"] = L.spec_moe(cfg) if moe else L.spec_mlp(cfg)
+    return d
+
+
+def spec(cfg: ModelConfig) -> dict:
+    g = cfg.moe_every if cfg.is_moe else 1
+    if cfg.n_layers % g != 0:
+        raise ValueError(f"n_layers={cfg.n_layers} % moe_every={g} != 0")
+    n_groups = cfg.n_layers // g
+    group = {}
+    if cfg.is_moe:
+        if g > 1:
+            group["dense"] = _stack(_block_spec(cfg, moe=False), g - 1)
+        group["moe"] = _block_spec(cfg, moe=True)
+    else:
+        group["dense"] = _stack(_block_spec(cfg, moe=False), 1)
+    sp = {
+        "embed": P((cfg.vocab, cfg.d_model), ("tp", "fsdp"), scale=0.02),
+        "blocks": _stack(group, n_groups),
+        "ln_f": L.spec_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        sp["head"] = P((cfg.d_model, cfg.vocab), ("fsdp", "tp"))
+    if cfg.n_patches:
+        sp["patch_proj"] = P((cfg.d_model, cfg.d_model), ("fsdp", "tp"))
+        sp["patch_norm"] = L.spec_norm(cfg.d_model, cfg.norm)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, x, cfg, moe: bool, *, positions=None,
+                 kv_cache=None, cache_pos=None):
+    attn_fn = L.apply_mla if cfg.use_mla else L.apply_attention
+    h, new_cache = attn_fn(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                           cfg, positions=positions,
+                           kv_cache=kv_cache, cache_pos=cache_pos)
+    x = x + h
+    y = L.apply_norm(p["ln2"], x, cfg.norm)
+    if moe:
+        m, aux = L.apply_moe(p["mlp"], y, cfg)
+    else:
+        m, aux = L.apply_mlp(p["mlp"], y, cfg), jnp.zeros((), jnp.float32)
+    return x + m, aux, new_cache
+
+
+def _embed(params, tokens, cfg, patches=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    if patches is not None:
+        pe = patches.astype(x.dtype) @ params["patch_proj"]
+        pe = L.apply_norm(params["patch_norm"], pe, cfg.norm)
+        x = jnp.concatenate([pe, x], axis=1)
+    return constrain(x, ("batch", None, None))
+
+
+def forward(params, batch: dict, cfg: ModelConfig):
+    """batch: {"tokens": (B,S) int32, optional "patches": (B,P,D)}.
+    Returns (logits over the full (possibly patch-prefixed) sequence, aux)."""
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg, batch.get("patches"))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    g = cfg.moe_every if cfg.is_moe else 1
+
+    def group_body(carry, gp):
+        x, aux = carry
+        if "dense" in gp:
+            def dense_body(x, lp):
+                xo, a, _ = _apply_block(lp, x, cfg, moe=False,
+                                        positions=positions)
+                return xo, a
+            body = jax.checkpoint(dense_body) if cfg.remat else dense_body
+            x, _ = jax.lax.scan(body, x, gp["dense"])
+        if "moe" in gp:
+            def moe_body(x):
+                return _apply_block(gp["moe"], x, cfg, moe=True,
+                                    positions=positions)[:2]
+            if cfg.remat:
+                moe_body = jax.checkpoint(moe_body)
+            x, a = moe_body(x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, ("batch", None, "tp")), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    mk = L.init_mla_cache if cfg.use_mla else L.init_kv_cache
+    one = mk(cfg, batch, max_len, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)).copy(),
+        one)
+
+
+def decode_state_axes(cfg: ModelConfig):
+    """Logical axes for the decode state (per-leaf tuples)."""
+    seq = "seq" if cfg.shard_kv_seq else None
+    if cfg.use_mla:
+        return {"c_kv": ("layers", "batch", seq, None),
+                "k_rope": ("layers", "batch", seq, None)}
+    return {"k": ("layers", "batch", seq, "tp", None),
+            "v": ("layers", "batch", seq, "tp", None)}
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B,1); pos: scalar int32 (current write
+    index). Returns (logits (B,1,V), new_state)."""
+    x = _embed(params, tokens, cfg)
+    positions = pos + jnp.arange(1)
+    g = cfg.moe_every if cfg.is_moe else 1
+    n_groups = cfg.n_layers // g
+
+    # reshape stacked cache (L, ...) -> (n_groups, g, ...) to scan by group
+    def regroup(c):
+        return c.reshape(n_groups, g, *c.shape[1:])
+    cache = jax.tree_util.tree_map(regroup, state)
+
+    def group_body(x, xs):
+        gp, gcache = xs
+        new_parts = []
+        if "dense" in gp:
+            n_dense = g - 1 if cfg.is_moe and g > 1 else 1
+            def dense_body(x, xs2):
+                lp, lc = xs2
+                xo, _, nc = _apply_block(lp, x, cfg, moe=False,
+                                         positions=positions,
+                                         kv_cache=lc, cache_pos=pos)
+                return xo, nc
+            dcache = jax.tree_util.tree_map(lambda c: c[:n_dense], gcache)
+            x, ncache = jax.lax.scan(dense_body, x, (gp["dense"], dcache))
+            new_parts.append(ncache)
+        if "moe" in gp:
+            mcache = jax.tree_util.tree_map(lambda c: c[-1], gcache)
+            x, _, nc = _apply_block(gp["moe"], x, cfg, moe=True,
+                                    positions=positions,
+                                    kv_cache=mcache, cache_pos=pos)
+            new_parts.append(jax.tree_util.tree_map(
+                lambda a: a[None], nc))
+        merged = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, 0), *new_parts) \
+            if len(new_parts) > 1 else new_parts[0]
+        return x, merged
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["blocks"], cache))
+    new_state = jax.tree_util.tree_map(
+        lambda c: c.reshape(cfg.n_layers, *c.shape[2:]), new_cache)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ head.astype(x.dtype)
+    return logits, new_state

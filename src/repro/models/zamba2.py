@@ -1,0 +1,192 @@
+"""Zamba2 (arXiv:2411.15242) — Mamba-2 backbone + ONE shared attention block.
+
+The Zamba trick: a single transformer block (attention + MLP at width
+2*d_model) is *weight-shared* across all its invocations; every
+`shared_attn_every` mamba layers it runs on concat(hidden, embedding) and is
+projected back to d_model by a per-invocation (unshared) linear.
+
+Layout for n_layers = G*g + r (g = shared_attn_every):
+  G groups of [g mamba layers  ->  shared block (with per-group down-proj)]
+  followed by r trailing mamba layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.param import P
+from repro.parallel.sharding import constrain
+
+
+def _stack(spec, n: int):
+    return jax.tree_util.tree_map(
+        lambda p: P((n, *p.shape), ("layers", *p.axes), init=p.init,
+                    scale=p.scale, const=p.const),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def _mamba_layer_spec(cfg) -> dict:
+    return {"ln": L.spec_norm(cfg.d_model, cfg.norm),
+            "mixer": M.spec_mamba2(cfg)}
+
+
+def _wide_cfg(cfg: ModelConfig) -> ModelConfig:
+    """The shared block runs at width 2*d_model (concat trick)."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, d_model=2 * cfg.d_model, d_ff=2 * cfg.d_ff,
+        head_dim=2 * cfg.d_model // cfg.n_heads)
+
+
+def _shared_block_spec(cfg: ModelConfig) -> dict:
+    wide = _wide_cfg(cfg)
+    return {
+        "ln1": L.spec_norm(wide.d_model, cfg.norm),
+        "attn": L.spec_attention(wide),
+        "ln2": L.spec_norm(wide.d_model, cfg.norm),
+        "mlp": L.spec_mlp(wide),
+    }
+
+
+def _layout(cfg: ModelConfig):
+    g = cfg.shared_attn_every
+    G, r = divmod(cfg.n_layers, g)
+    return g, G, r
+
+
+def spec(cfg: ModelConfig) -> dict:
+    g, G, r = _layout(cfg)
+    d = cfg.d_model
+    sp = {
+        "embed": P((cfg.vocab, d), ("tp", "fsdp"), scale=0.02),
+        "groups": {
+            "mamba": _stack(_stack(_mamba_layer_spec(cfg), g), G),
+            "down_proj": P((G, 2 * d, d), ("layers", "fsdp", "tp")),
+        },
+        "shared": _shared_block_spec(cfg),       # weight-shared, not stacked
+        "ln_f": L.spec_norm(d, cfg.norm),
+        "head": P((d, cfg.vocab), ("fsdp", "tp")),
+    }
+    if r:
+        sp["tail"] = _stack(_mamba_layer_spec(cfg), r)
+    return sp
+
+
+def _apply_shared(shared, down_proj, x, x0, cfg, *, kv_cache=None,
+                  cache_pos=None, positions=None):
+    """x, x0: (B,S,D) hidden + original embedding; runs the wide block."""
+    wide = _wide_cfg(cfg)
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = L.apply_norm(shared["ln1"], cat, cfg.norm)
+    att, new_cache = L.apply_attention(
+        shared["attn"], h, wide, positions=positions,
+        kv_cache=kv_cache, cache_pos=cache_pos)
+    cat = cat + att
+    h = L.apply_norm(shared["ln2"], cat, cfg.norm)
+    cat = cat + L.apply_mlp(shared["mlp"], h, wide)
+    return x + cat @ down_proj, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch: dict, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    g, G, r = _layout(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", None, None))
+    x0 = x
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    shared = params["shared"]
+
+    def mamba_body(x, lp):
+        h = L.apply_norm(lp["ln"], x, cfg.norm)
+        return x + M.apply_mamba2_seq(lp["mixer"], h, cfg), None
+
+    mb = jax.checkpoint(mamba_body) if cfg.remat else mamba_body
+
+    def group_body(x, gp):
+        x, _ = jax.lax.scan(mb, x, gp["mamba"])
+        x, _ = _apply_shared(shared, gp["down_proj"], x, x0, cfg,
+                             positions=positions)
+        return x, None
+
+    gb = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(gb, x, params["groups"])
+    if r:
+        x, _ = jax.lax.scan(mb, x, params["tail"])
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = x @ params["head"].astype(x.dtype)
+    return constrain(logits, ("batch", None, "tp")), jnp.zeros(
+        (), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode — mamba states are O(1); the shared block keeps a KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    g, G, r = _layout(cfg)
+    one = M.init_mamba2_state(cfg, batch, jnp.float32)
+    stackn = lambda st, n: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(), st)
+    wide = _wide_cfg(cfg)
+    kv = L.init_kv_cache(wide, batch, max_len, dtype)
+    return {
+        "mamba": stackn(stackn(one, g), G),
+        "tail": stackn(one, max(r, 1)),
+        "kv": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (G, *a.shape)).copy(), kv),
+    }
+
+
+def decode_state_axes(cfg: ModelConfig):
+    m = {k: ("layers", "layers") + v for k, v in M.mamba2_state_axes().items()}
+    return {
+        "mamba": m,
+        "tail": {k: ("layers",) + v
+                 for k, v in M.mamba2_state_axes().items()},
+        "kv": {"k": ("layers", "batch", "seq", "tp", None),
+               "v": ("layers", "batch", "seq", "tp", None)},
+    }
+
+
+def decode_step(params, state, tokens, pos, cfg: ModelConfig):
+    g, G, r = _layout(cfg)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x0 = x
+    shared = params["shared"]
+    positions = pos + jnp.arange(1)
+
+    def mamba_body(x, xs):
+        lp, st = xs
+        h = L.apply_norm(lp["ln"], x, cfg.norm)
+        y, new_st = M.apply_mamba2_step(lp["mixer"], h, st, cfg)
+        return x + y, new_st
+
+    def group_body(x, xs):
+        gp, gst, kv = xs
+        x, new_mamba = jax.lax.scan(mamba_body, x, (gp["mamba"], gst))
+        x, new_kv = _apply_shared(
+            shared, gp["down_proj"], x[:, None], x0[:, None], cfg,
+            kv_cache=kv, cache_pos=pos, positions=positions)
+        return x[:, 0], (new_mamba, new_kv)
+
+    x, (new_mamba, new_kv) = jax.lax.scan(
+        group_body, x, (params["groups"], state["mamba"], state["kv"]))
+    new_tail = state["tail"]
+    if r:
+        x, new_tail = jax.lax.scan(mamba_body, x,
+                                   (params["tail"], state["tail"]))
+    x = L.apply_norm(params["ln_f"], x[:, None], cfg.norm)
+    logits = x @ params["head"].astype(x.dtype)
+    return logits, {"mamba": new_mamba, "tail": new_tail, "kv": new_kv}

@@ -1,0 +1,12 @@
+"""Optimizers and distributed-training tricks (pure-JAX, optax-style)."""
+from repro.optim.optimizers import (
+    adamw, adafactor, OptState, clip_by_global_norm)
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.compression import (
+    compress_grads_int8, decompress_grads_int8, ErrorFeedback)
+
+__all__ = [
+    "adamw", "adafactor", "OptState", "clip_by_global_norm",
+    "cosine_schedule", "linear_warmup",
+    "compress_grads_int8", "decompress_grads_int8", "ErrorFeedback",
+]

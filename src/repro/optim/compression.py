@@ -1,0 +1,57 @@
+"""Gradient compression with error feedback (distributed-opt trick).
+
+Int8 symmetric per-tensor quantization of gradients before the cross-pod
+all-reduce (4x less inter-pod traffic at bf16->int8... here f32->int8 = 8x),
+with an error-feedback accumulator so the quantization error is re-injected
+next step (Seide et al. 2014 / EF-SGD): convergence is preserved because the
+error is bounded and averaged out, while the collective term of the roofline
+drops by the compression ratio.
+
+Usage in a train step (the launcher wires this when cfg enables it):
+
+    ef, cg = compress_grads_int8(grads, ef)
+    cg     = jax.lax.pmean(cg, "pod")        # or psum under pjit
+    grads  = decompress_grads_int8(cg)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # same tree as grads, f32
+
+
+def init_error_feedback(params) -> ErrorFeedback:
+    return ErrorFeedback(residual=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _q_leaf(g, r):
+    g32 = g.astype(jnp.float32) + r
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(amax <= 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def compress_grads_int8(grads, ef: ErrorFeedback):
+    """-> (new_ef, {"q": int8 tree, "scale": f32 tree})."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    qs, scales, errs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, e = _q_leaf(g, r)
+        qs.append(q), scales.append(s), errs.append(e)
+    unf = lambda xs: jax.tree_util.tree_unflatten(tdef, xs)
+    return (ErrorFeedback(residual=unf(errs)),
+            {"q": unf(qs), "scale": unf(scales)})
+
+
+def decompress_grads_int8(cg) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, cg["q"], cg["scale"])

@@ -1,0 +1,136 @@
+"""Optimizers, optax-style (init/update pairs) but self-contained.
+
+  adamw     — AdamW with decoupled weight decay; moments in f32
+  adafactor — factored second moments (row/col) for the 400B-class configs
+              where full Adam moments would not fit HBM
+
+Both return `(init_fn, update_fn)`:
+  init_fn(params)                         -> OptState
+  update_fn(grads, state, params, step)   -> (new_params, new_state)
+
+Sharding: moment trees inherit the parameter logical axes (the launcher
+applies the same tree_shardings to them), so FSDP shards optimizer state too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any        # first moment  (adamw) | None
+    nu: Any        # second moment (adamw) | factored dict (adafactor)
+    count: jnp.ndarray
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw(lr: Callable | float, *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1, clip_norm: float | None = 1.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(mu=zeros(), nu=zeros(),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step=None):
+        count = state.count + 1
+        step = count if step is None else step
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        g32 = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if p.ndim >= 2:  # decay matrices only (standard practice)
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, OptState(mu=mu, nu=nu, count=count)
+
+    return init, update
+
+
+def adafactor(lr: Callable | float, *, decay=0.8, eps=1e-30,
+              clip_threshold=1.0, weight_decay=0.0,
+              min_dim_size_to_factor=128):
+    """Factored Adafactor (Shazeer & Stern 2018), no first moment.
+
+    Tensors whose two trailing dims are both >= min_dim_size_to_factor keep
+    only row/col second-moment vectors — O(n+m) instead of O(nm) state, the
+    trick that lets a 400B-param optimizer fit a (16,16) pod's HBM.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor
+                and p.shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def per_leaf(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(mu=None, nu=jax.tree_util.tree_map(
+            per_leaf, params), count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step=None):
+        count = state.count + 1
+        step = count if step is None else step
+        t = count.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)          # increasing-decay schedule
+        lr_t = lr_fn(step)
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta * v["v"] + (1 - beta) * g2
+                new_v = {"v": vhat}
+            u = g32 / jnp.sqrt(vhat + eps)
+            # update clipping (RMS-capped), the adafactor stabilizer
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state.nu)
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_nu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        return new_params, OptState(mu=None, nu=new_nu, count=count)
+
+    return init, update

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return peak * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.1):
+    """Linear warmup -> cosine decay to floor*peak."""
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * warm * cos
+    return fn

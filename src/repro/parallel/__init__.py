@@ -1,0 +1,11 @@
+from repro.parallel.sharding import (
+    AXIS_RULES, spec_for_axes, sharding_for, tree_shardings,
+    batch_spec, shard_divisible, with_sharding_constraint_tree,
+    set_current_mesh, get_current_mesh, use_mesh, constrain,
+)
+
+__all__ = [
+    "AXIS_RULES", "spec_for_axes", "sharding_for", "tree_shardings",
+    "batch_spec", "shard_divisible", "with_sharding_constraint_tree",
+    "set_current_mesh", "get_current_mesh", "use_mesh", "constrain",
+]

@@ -1,0 +1,175 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Production mesh axes: ("pod", "data", "model") (multi-pod) or
+("data", "model") (single pod).
+
+Rules (see DESIGN.md §4):
+  * batch dims of activations shard over ("pod", "data") jointly (pure DP
+    across pods, DP within a pod).
+  * "fsdp" param dims shard over "data" only — parameters are replicated
+    across pods so cross-pod traffic is gradient all-reduce only, which is
+    the right trade for the slow inter-pod links.
+  * "tp" and "ep" shard over "model" (intra-pod high-bandwidth axis).
+  * any dim whose size does not divide its mesh axis falls back to
+    replication instead of erroring — this is how batch=1 long-context or
+    kv_heads=8 < model=16 cases stay runnable.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AXIS_RULES: dict[str, str | tuple[str, ...]] = {
+    "fsdp": "data",
+    "tp": "model",
+    "ep": "model",
+    "batch": ("pod", "data"),
+    # sequence axis of KV caches / long activations (SP): prefers "model"
+    # (usually free during decode since kv_heads rarely divide it), falls
+    # back per the divisibility rule
+    "seq": ("model", "data"),
+    "layers": None,
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([_mesh_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.shape else 0
+
+
+def _resolve(mesh: Mesh, logical: str | None):
+    """logical axis -> mesh axis (or None), dropping axes absent from mesh."""
+    if logical is None:
+        return None
+    rule = AXIS_RULES.get(logical, None)
+    if rule is None:
+        return None
+    if isinstance(rule, tuple):
+        present = tuple(a for a in rule if a in mesh.shape)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+    return rule if rule in mesh.shape else None
+
+
+def spec_for_axes(axes: Sequence[str | None], shape: Sequence[int],
+                  mesh: Mesh) -> PartitionSpec:
+    """Build a PartitionSpec, replicating any non-divisible dim and never
+    reusing a mesh axis twice within one spec."""
+    used: set[str] = set()
+    out: list = [None] * len(tuple(axes))
+    # two passes: "seq" (sequence parallelism) only claims mesh axes the
+    # higher-priority logicals (tp/ep/batch/fsdp) left free — head-sharded
+    # KV beats seq-sharded KV whenever kv_heads divide the model axis
+    # (no per-step gather), so seq must not steal "model" from tp.
+    order = sorted(range(len(out)),
+                   key=lambda i: tuple(axes)[i] == "seq")
+    for i in order:
+        dim, logical = tuple(shape)[i], tuple(axes)[i]
+        mesh_axis = _resolve(mesh, logical)
+        if mesh_axis is None:
+            continue
+        flat = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        # drop axes already claimed by another dim of this tensor, then
+        # take the longest available prefix that divides the dim
+        avail = tuple(a for a in flat if a not in used)
+        for k in range(len(avail), 0, -1):
+            cand = avail[:k]
+            size = _mesh_axis_size(mesh, cand)
+            if size > 1 and dim % size == 0:
+                used.update(cand)
+                out[i] = cand if len(cand) > 1 else cand[0]
+                break
+    return PartitionSpec(*out)
+
+
+def sharding_for(axes: Sequence[str | None], shape: Sequence[int],
+                 mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for_axes(axes, shape, mesh))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh):
+    """Map (axes tree, abstract-shape tree) -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda axes, sds: sharding_for(axes, sds.shape, mesh),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def batch_spec(shape: Sequence[int], mesh: Mesh,
+               extra_axes: Sequence[str | None] | None = None
+               ) -> PartitionSpec:
+    """Shard dim 0 as the global batch; remaining dims per extra_axes."""
+    axes = ["batch"] + list(extra_axes or [None] * (len(shape) - 1))
+    return spec_for_axes(axes, shape, mesh)
+
+
+def shard_divisible(dim: int, mesh: Mesh, axis: str) -> str | None:
+    """The mesh axis if it divides dim, else None (replicate)."""
+    if axis in mesh.shape and dim % mesh.shape[axis] == 0:
+        return axis
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Current-mesh context: layer code calls `constrain(x, axes)` which becomes a
+# no-op outside any mesh (CPU smoke tests) and a with_sharding_constraint
+# under the production mesh (set by the launcher / dryrun).
+# ---------------------------------------------------------------------------
+
+_CURRENT_MESH: list[Mesh | None] = [None]
+
+
+def set_current_mesh(mesh: Mesh | None):
+    _CURRENT_MESH[0] = mesh
+
+
+def get_current_mesh() -> Mesh | None:
+    return _CURRENT_MESH[0]
+
+
+class use_mesh:
+    """Context manager: `with use_mesh(mesh): ...` activates both the JAX
+    mesh context and the repro sharding-constraint context."""
+
+    def __init__(self, mesh: Mesh | None):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = _CURRENT_MESH[0]
+        _CURRENT_MESH[0] = self.mesh
+        if self.mesh is not None:
+            self._mesh_ctx = self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _CURRENT_MESH[0] = self.prev
+        if self.mesh is not None:
+            self.mesh.__exit__(*exc)
+        return False
+
+
+def constrain(x, axes: Sequence[str | None]):
+    """Sharding constraint by logical axes; no-op when no mesh is active."""
+    mesh = _CURRENT_MESH[0]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(axes, x.shape, mesh))
+
+
+def with_sharding_constraint_tree(tree, axes_tree, mesh: Mesh):
+    def cons(x, axes):
+        return jax.lax.with_sharding_constraint(
+            x, sharding_for(axes, x.shape, mesh))
+    return jax.tree_util.tree_map(
+        cons, tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))

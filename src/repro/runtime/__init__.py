@@ -1,0 +1,6 @@
+"""Host-side distributed runtime: health, stragglers, elastic restarts."""
+from repro.runtime.monitor import (
+    HeartbeatMonitor, StragglerDetector, FailureInjector, TrainingSupervisor)
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "FailureInjector",
+           "TrainingSupervisor"]

@@ -1,0 +1,126 @@
+"""Fault-tolerance runtime (host-side; no device code).
+
+At thousands-of-nodes scale the failure model is: some host stops making
+progress (hardware fault, preemption, network partition) or makes progress
+anomalously slowly (straggler).  JAX SPMD programs cannot "route around" a
+dead participant mid-step — the recovery unit is the *job*: detect, restore
+the latest checkpoint onto the surviving topology (elastic reshard), resume.
+This module provides the detection half plus a supervisor loop implementing
+that policy, testable in-process via FailureInjector.
+
+  HeartbeatMonitor  — per-host last-seen tracking with a dead-host predicate
+  StragglerDetector — per-step duration EMA; flags hosts slower than
+                      `threshold` x the fleet median (mitigation hook: the
+                      caller re-balances or excludes the host at the next
+                      restart boundary)
+  FailureInjector   — deterministic fault schedule for tests/drills
+  TrainingSupervisor— retry-with-restore driver around a step function
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: list[int], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last = {h: clock() for h in hosts}
+
+    def beat(self, host: int, at: Optional[float] = None):
+        self._last[host] = self._clock() if at is None else at
+
+    def dead_hosts(self) -> list[int]:
+        now = self._clock()
+        return [h for h, t in self._last.items()
+                if now - t > self.timeout_s]
+
+    def alive_hosts(self) -> list[int]:
+        dead = set(self.dead_hosts())
+        return [h for h in self._last if h not in dead]
+
+
+class StragglerDetector:
+    """EMA of per-host step durations; flags hosts above threshold x median."""
+
+    def __init__(self, hosts: list[int], *, alpha: float = 0.2,
+                 threshold: float = 1.5, warmup_steps: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup_steps = warmup_steps
+        self._ema = {h: None for h in hosts}
+        self._n = collections.Counter()
+
+    def record(self, host: int, duration_s: float):
+        prev = self._ema[host]
+        self._ema[host] = (duration_s if prev is None
+                           else self.alpha * duration_s +
+                           (1 - self.alpha) * prev)
+        self._n[host] += 1
+
+    def stragglers(self) -> list[int]:
+        vals = [(h, e) for h, e in self._ema.items()
+                if e is not None and self._n[h] >= self.warmup_steps]
+        if len(vals) < 3:
+            return []
+        ordered = sorted(e for _, e in vals)
+        median = ordered[len(ordered) // 2]
+        return [h for h, e in vals if e > self.threshold * median]
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """step -> host failures, for drills. `check(step)` raises HostFailure."""
+
+    schedule: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+    enabled: bool = True
+
+    def check(self, step: int):
+        if self.enabled and step in self.schedule:
+            hosts = self.schedule.pop(step)
+            raise HostFailure(step=step, hosts=hosts)
+
+
+class HostFailure(RuntimeError):
+    def __init__(self, step: int, hosts: list[int]):
+        super().__init__(f"hosts {hosts} failed at step {step}")
+        self.step = step
+        self.hosts = hosts
+
+
+class TrainingSupervisor:
+    """Retry-with-restore driver.
+
+    run(n_steps) calls `step_fn(step)`; on HostFailure it invokes
+    `restore_fn(failed_hosts)` (which reloads the latest checkpoint, possibly
+    onto a smaller/elastic mesh) and resumes from the step the restore
+    reports.  Gives up after `max_restarts`.
+    """
+
+    def __init__(self, step_fn: Callable[[int], None],
+                 restore_fn: Callable[[list[int]], int],
+                 max_restarts: int = 3):
+        self.step_fn = step_fn
+        self.restore_fn = restore_fn
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.log: list[str] = []
+
+    def run(self, n_steps: int, start_step: int = 0) -> int:
+        step = start_step
+        while step < n_steps:
+            try:
+                self.step_fn(step)
+                step += 1
+            except HostFailure as f:
+                self.restarts += 1
+                self.log.append(f"failure at step {f.step}: hosts {f.hosts}")
+                if self.restarts > self.max_restarts:
+                    raise
+                step = self.restore_fn(f.hosts)
+                self.log.append(f"restored, resuming at step {step}")
+        return step

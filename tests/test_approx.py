@@ -1,0 +1,85 @@
+"""Complex-operation unit tests (paper §4.3-4.4): error bounds of the
+bit-accurate LUT/PWL models against true functions."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.approx import exp_lut, sigmoid_pwl, div_lut, lod
+
+
+class TestExpLut:
+    def test_relative_error_in_wkv_range(self):
+        """8-bit fraction LUT + hw log2e constant: the dominant error is the
+        1.4375 vs 1.442695 constant (paper's hardware uses exactly 1.0111_2);
+        relative error grows as |x| * 0.36%."""
+        x = jnp.linspace(-8.0, 8.0, 2001)
+        got = np.asarray(exp_lut(x))
+        want = np.exp(np.asarray(x))
+        rel = np.abs(got - want) / want
+        bound = np.abs(np.asarray(x)) * 0.0037 + 0.006
+        assert np.all(rel <= bound)
+
+    def test_monotone_nondecreasing(self):
+        x = jnp.linspace(-20.0, 20.0, 4001)
+        y = np.asarray(exp_lut(x))
+        assert np.all(np.diff(y) >= -1e-6)
+
+    def test_clamps_not_nan(self):
+        y = np.asarray(exp_lut(jnp.asarray([-1e9, 1e9])))
+        assert np.all(np.isfinite(y))
+
+
+class TestSigmoidPwl:
+    def test_max_abs_error(self):
+        """4-segment PWL (Eq. 9) has a known worst-case error ~2.45e-2."""
+        x = jnp.linspace(-10, 10, 10001)
+        err = np.abs(np.asarray(sigmoid_pwl(x)) -
+                     1 / (1 + np.exp(-np.asarray(x))))
+        assert err.max() < 0.025
+
+    def test_symmetry(self):
+        """f(-x) = 1 - f(x) exactly (the paper's mirror rule)."""
+        x = jnp.linspace(0, 6, 100)
+        a = np.asarray(sigmoid_pwl(x))
+        b = np.asarray(sigmoid_pwl(-x))
+        np.testing.assert_allclose(a + b, 1.0, atol=1e-6)
+
+    def test_saturation(self):
+        assert float(sigmoid_pwl(jnp.asarray(5.0))) == 1.0
+        assert float(sigmoid_pwl(jnp.asarray(-5.0))) == 0.0
+
+
+class TestDivLut:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_relative_error(self, seed):
+        """4+4-bit mantissa indexing -> worst-case relative error ~2^-4·0.5
+        on each mantissa plus LUT rounding: bound 8%."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.uniform(-100, 100, size=(64,)), jnp.float32)
+        y = jnp.asarray(rng.uniform(0.1, 100, size=(64,)), jnp.float32)
+        got = np.asarray(div_lut(x, y))
+        want = np.asarray(x) / np.asarray(y)
+        rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-6)
+        assert np.all(rel < 0.08)
+
+    def test_sign_handling(self):
+        assert float(div_lut(jnp.asarray(-1.0), jnp.asarray(2.0))) < 0
+        assert float(div_lut(jnp.asarray(-1.0), jnp.asarray(-2.0))) > 0
+
+    def test_div_by_zero_saturates(self):
+        q = float(div_lut(jnp.asarray(1.0), jnp.asarray(0.0)))
+        assert q == 2.0 ** 15
+
+    def test_zero_numerator(self):
+        assert float(div_lut(jnp.asarray(0.0), jnp.asarray(3.0))) == 0.0
+
+
+class TestLod:
+    @given(st.integers(1, (1 << 16) - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_matches_bit_length(self, v):
+        assert int(lod(jnp.asarray([v]), 16)[0]) == v.bit_length() - 1
+
+    def test_zero_returns_minus1(self):
+        assert int(lod(jnp.asarray([0]), 16)[0]) == -1

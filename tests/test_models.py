@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests (assignment requirement): reduced-config
+instantiation + one forward/train step on CPU, asserting shapes and no NaNs;
+plus decode-vs-forward parity for the recurrent models."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (
+    ASSIGNED_ARCHS, RWKV4_ARCHS, SHAPES, get_config, smoke_config,
+    supported_shapes)
+from repro.models.registry import get_model, loss_fn
+
+ALL_ARCHS = ASSIGNED_ARCHS + ["rwkv4-169m"]
+
+
+def _batch(model, rng, B=2, S=16):
+    cfg = model.cfg
+    tok = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": tok,
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.enc_frames, cfg.d_model))
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.n_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nan(self, arch):
+        model = get_model(arch, smoke=True)
+        params = model.init_params(jax.random.PRNGKey(0))
+        batch = _batch(model, jax.random.PRNGKey(1))
+        logits, aux = model.forward(params, batch)
+        B, S = batch["tokens"].shape
+        extra = model.cfg.n_patches
+        assert logits.shape == (B, S + extra, model.cfg.vocab)
+        assert not bool(jnp.any(jnp.isnan(logits)))
+
+    def test_train_step_reduces_loss(self, arch):
+        """A few SGD steps on a fixed batch must reduce the loss — catches
+        dead gradients anywhere in the block."""
+        model = get_model(arch, smoke=True)
+        params = model.init_params(jax.random.PRNGKey(0))
+        batch = _batch(model, jax.random.PRNGKey(1))
+
+        @jax.jit
+        def step(p):
+            (l, m), g = jax.value_and_grad(
+                lambda q: loss_fn(model, q, batch), has_aux=True)(p)
+            p = jax.tree_util.tree_map(lambda a, b: a - 0.5 * b, p, g)
+            return p, l
+
+        losses = []
+        for _ in range(5):
+            params, l = step(params)
+            losses.append(float(l))
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0]
+
+    def test_decode_step_shapes(self, arch):
+        model = get_model(arch, smoke=True)
+        cfg = model.cfg
+        params = model.init_params(jax.random.PRNGKey(0))
+        B = 2
+        state = model.init_decode_state(B, 32)
+        tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
+        logits, new_state = model.decode_step(params, state, tok,
+                                              jnp.int32(0))
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert not bool(jnp.any(jnp.isnan(logits)))
+        # state structure preserved
+        assert jax.tree_util.tree_structure(new_state) == \
+            jax.tree_util.tree_structure(state)
+
+
+@pytest.mark.parametrize("arch", ["rwkv4-169m", "rwkv6-7b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the sequence forward pass —
+    THE correctness property of the paper's O(1)-state serving mode."""
+    model = get_model(arch, smoke=True)
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 1, 12
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits_seq, _ = model.forward(params, {"tokens": tok})
+    state = model.init_decode_state(B, S)
+    outs = []
+    for t in range(S):
+        lg, state = model.decode_step(params, state, tok[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_seq, np.float32),
+        np.asarray(logits_dec, np.float32), rtol=0.06, atol=0.06)
+
+
+def test_transformer_decode_matches_forward():
+    """KV-cache decode parity for the attention family."""
+    model = get_model("smollm-135m", smoke=True)
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 1, 8
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    logits_seq, _ = model.forward(params, {"tokens": tok})
+    state = model.init_decode_state(B, S)
+    outs = []
+    for t in range(S):
+        lg, state = model.decode_step(params, state, tok[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_seq, np.float32),
+        np.asarray(logits_dec, np.float32), rtol=0.06, atol=0.06)
+
+
+def test_rwkv4_hw_numerics_close_to_std():
+    """The paper's accelerator numerics (LUT exp / PWL sigmoid / LUT div +
+    A9 activations) must stay close to the fp forward — the Table-1 claim."""
+    from repro.models import rwkv4 as R4
+    model = get_model("rwkv4-169m", smoke=True)
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    cp = model.cast_params(params)
+    l_std, _ = R4.forward(cp, {"tokens": tok}, cfg, hw=False)
+    l_hw, _ = R4.forward(cp, {"tokens": tok}, cfg, hw=True)
+    # logits within a few percent of each other in KL-relevant terms
+    p = jax.nn.softmax(l_std.astype(jnp.float32), -1)
+    q = jax.nn.log_softmax(l_hw.astype(jnp.float32), -1)
+    kl = float(jnp.mean(jnp.sum(p * (jnp.log(p + 1e-9) - q), -1)))
+    assert np.isfinite(kl) and kl < 0.05
+
+
+def test_full_configs_match_assignment():
+    """The exact published dims from the assignment table."""
+    c = get_config("smollm-135m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (30, 576, 9, 3, 1536, 49152)
+    c = get_config("llama4-maverick-400b-a17b")
+    assert (c.d_model, c.n_experts, c.top_k, c.vocab) == \
+        (5120, 128, 1, 202048)
+    c = get_config("rwkv6-7b")
+    assert (c.n_layers, c.d_model, c.vocab) == (32, 4096, 65536)
+    c = get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    c = get_config("minicpm3-4b")
+    assert c.use_mla and (c.n_layers, c.d_model) == (62, 2560)
+    c = get_config("whisper-medium")
+    assert (c.enc_layers, c.n_layers, c.d_model) == (24, 24, 1024)
+    c = get_config("moonshot-v1-16b-a3b")
+    assert (c.n_experts, c.top_k, c.vocab) == (64, 6, 163840)
+    c = get_config("minitron-4b")
+    assert (c.d_model, c.vocab) == (3072, 256000)
+    c = get_config("phi3-mini-3.8b")
+    assert (c.n_heads, c.n_kv_heads) == (32, 32)
+    c = get_config("internvl2-2b")
+    assert (c.d_model, c.n_kv_heads, c.vocab) == (2048, 8, 92553)
+
+
+def test_shape_skips_documented():
+    """long_500k is runnable exactly for the sub-quadratic families."""
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch) if arch != "rwkv4-169m" else \
+            get_config("rwkv4-169m")
+        sup = supported_shapes(cfg)["long_500k"]
+        if cfg.family in ("ssm", "hybrid", "rwkv"):
+            assert sup == "ok"
+        else:
+            assert sup.startswith("skip")

@@ -1,0 +1,221 @@
+"""Quantization library tests: Δ-PoT (paper C1), uniform (C2), baselines,
+and the mixed-precision policy — including hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant.delta_pot import (
+    DPotFormat, FORMAT_W9, FORMAT_W8, FORMAT_POT4, dpot_levels,
+    dpot_max_level, dpot_quantize, dpot_dequantize, dpot_fake_quant,
+    dpot_pack_int8, dpot_unpack_int8, dpot_decode_codes)
+from repro.core.quant.uniform import (
+    uniform_quantize, uniform_dequantize, uniform_fake_quant)
+from repro.core.quant.schemes import (
+    rtn_fake_quant, pot_fake_quant, logq_fake_quant, proposed_fake_quant)
+from repro.core.quant.policy import (
+    QuantPolicy, classify_param, fake_quantize_tree, quantize_tree,
+    dequantize_tree)
+
+
+# ---------------------------------------------------------------------------
+# Δ-PoT format / levels
+# ---------------------------------------------------------------------------
+
+
+class TestDPotLevels:
+    def test_paper_example(self):
+        """§3.1: Δ-PoT with ks=(2,2) can represent 2^-1 + 2^-3 exactly."""
+        lv = np.asarray(dpot_levels(DPotFormat((2, 2))))
+        assert np.any(np.isclose(lv, 0.5 + 0.125))
+
+    def test_zero_code_is_zero(self):
+        for fmt in (FORMAT_W9, FORMAT_W8, FORMAT_POT4):
+            assert float(dpot_levels(fmt)[0]) == 0.0
+
+    def test_terms_decreasing(self):
+        """Every level is a sum of strictly decreasing PoT terms => every
+        level is < 2 * first term <= 1."""
+        for fmt in (FORMAT_W9, FORMAT_W8):
+            lv = np.asarray(dpot_levels(fmt))
+            assert lv.max() <= 1.0
+            assert lv.min() >= 0.0
+
+    def test_pot_degenerate(self):
+        """Single-term Δ-PoT == classic PoT grid {0} ∪ {2^-q}."""
+        lv = sorted(set(np.asarray(dpot_levels(FORMAT_POT4)).tolist()))
+        expect = [0.0] + [2.0 ** (-q) for q in range(15, 0, -1)]
+        assert np.allclose(lv, expect)
+
+    def test_wider_range_than_apot_equal_bits(self):
+        """Differential encoding covers exponents down to 2^-(2^k0-1 + 2^k1-1),
+        deeper than APoT's fixed stride at the same bit budget."""
+        lv = np.asarray(dpot_levels(DPotFormat((4, 4))))
+        nz = lv[lv > 0]
+        assert nz.min() <= 2.0 ** -15
+
+
+class TestDPotQuantize:
+    def test_roundtrip_exact_levels(self, rng):
+        """Values that ARE representable levels must roundtrip exactly."""
+        fmt = FORMAT_W9
+        lv = np.asarray(dpot_levels(fmt))
+        scale = 1.7
+        # well-separated levels (the deepest ones differ at f32 epsilon and
+        # legitimately round to neighbours)
+        vals = np.unique(lv[lv >= 2.0 ** -8]) * scale
+        w = jnp.asarray(np.concatenate([vals, -vals]))
+        q = dpot_quantize(w, fmt, axis=None)
+        # scale covers max|w|; nearest-level must land on exact values
+        got = np.asarray(dpot_dequantize(q))
+        np.testing.assert_allclose(got, np.asarray(w), rtol=1e-6)
+
+    def test_error_bounded_by_half_gap(self, rng):
+        fmt = FORMAT_W9
+        w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        q = dpot_quantize(w, fmt, axis=1)
+        err = np.abs(np.asarray(dpot_dequantize(q)) - np.asarray(w))
+        # per-channel worst error <= half the largest level gap * scale
+        lv = np.sort(np.unique(np.asarray(dpot_levels(fmt))))
+        max_gap = np.max(np.diff(lv))
+        scale = np.asarray(q.scale)
+        assert np.all(err <= 0.5 * max_gap * scale + 1e-6)
+
+    def test_per_channel_scales(self, rng):
+        w = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        q = dpot_quantize(w, FORMAT_W9, axis=1)
+        assert q.scale.shape == (1, 32)
+
+    def test_mse_search_not_worse(self, rng):
+        w = jnp.asarray(rng.standard_t(3, size=(256,)), jnp.float32)
+        base = dpot_fake_quant(w, (4, 4), None, False)
+        ref = dpot_fake_quant(w, (4, 4), None, True)
+        e0 = float(jnp.mean((base - w) ** 2))
+        e1 = float(jnp.mean((ref - w) ** 2))
+        assert e1 <= e0 * 1.0001
+
+    def test_straight_through_gradient(self):
+        g = jax.grad(lambda w: jnp.sum(dpot_fake_quant(w, (4, 4), None,
+                                                       False)))(
+            jnp.ones((4, 4)))
+        np.testing.assert_allclose(np.asarray(g), 1.0)
+
+    @given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_decode_matches_table(self, k0, k1, seed):
+        """Property: vectorized decoder == enumerated level table."""
+        fmt = DPotFormat((k0, k1))
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, fmt.n_codes, size=(32,)).astype(np.uint8)
+        got = np.asarray(dpot_decode_codes(jnp.asarray(codes), fmt.ks))
+        want = np.asarray(dpot_levels(fmt))[codes]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_idempotent(self, seed):
+        """Property: fake-quant is idempotent (q(q(x)) == q(x))."""
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        q1 = dpot_fake_quant(w, (4, 4), None, False)
+        q2 = dpot_fake_quant(q1, (4, 4), None, False)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                                   rtol=1e-5, atol=1e-7)
+
+    def test_pack_unpack_int8(self, rng):
+        w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+        q = dpot_quantize(w, FORMAT_W8, axis=1)
+        packed = dpot_pack_int8(q)
+        q2 = dpot_unpack_int8(packed, q.scale, FORMAT_W8.ks)
+        np.testing.assert_array_equal(np.asarray(q.codes),
+                                      np.asarray(q2.codes))
+        np.testing.assert_array_equal(np.asarray(q.signs),
+                                      np.asarray(q2.signs))
+
+    def test_pack_rejects_w9(self, rng):
+        q = dpot_quantize(jnp.ones((4, 4)), FORMAT_W9)
+        with pytest.raises(ValueError):
+            dpot_pack_int8(q)
+
+    def test_bytes_accounting(self):
+        q = dpot_quantize(jnp.ones((128, 128)), FORMAT_W8, axis=1)
+        nb = q.nbytes_hardware()
+        assert nb == 128 * 128 * 8 // 8 + 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# Uniform + baseline schemes
+# ---------------------------------------------------------------------------
+
+
+class TestUniform:
+    def test_symmetric_grid(self):
+        codes, scale = uniform_quantize(jnp.asarray([-1.0, 0.0, 1.0]), 9)
+        assert int(codes[0]) == -255 and int(codes[2]) == 255
+
+    @given(st.integers(2, 12), st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_error_bound(self, bits, seed):
+        """Property: uniform quant error <= scale/2 everywhere."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+        codes, scale = uniform_quantize(x, bits)
+        err = np.abs(np.asarray(uniform_dequantize(codes, scale) - x))
+        assert np.all(err <= float(scale) / 2 + 1e-7)
+
+    def test_fake_quant_gradient(self):
+        g = jax.grad(lambda x: jnp.sum(uniform_fake_quant(x, 9, None)))(
+            jnp.linspace(-1, 1, 16))
+        np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+class TestSchemeOrdering:
+    def test_proposed_beats_pot_and_logq(self, rng):
+        """The paper's Table-1 ordering on weight-space MSE: Δ-PoT < LogQ,
+        PoT (heavier-tailed weights accentuate the gap)."""
+        w = jnp.asarray(rng.standard_t(4, size=(512, 64)), jnp.float32)
+        def mse(f):
+            return float(jnp.mean((f(w, 9, 1) - w) ** 2))
+        e_prop = mse(proposed_fake_quant)
+        e_pot = mse(pot_fake_quant)
+        e_logq = mse(logq_fake_quant)
+        assert e_prop < e_pot
+        assert e_prop < e_logq
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision policy (paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+class TestPolicy:
+    def test_classification(self):
+        assert classify_param("['blocks']['att']['wk']",
+                              jnp.ones((8, 8))) == "matmul"
+        assert classify_param("['blocks']['att']['time_decay']",
+                              jnp.ones((8,))) == "additive"
+        assert classify_param("['embed']", jnp.ones((100, 8))) == "additive"
+        assert classify_param("['ln0']['scale']",
+                              jnp.ones((8,))) == "additive"
+
+    def test_tree_roundtrip_and_compression(self, rng):
+        params = {
+            "embed": jnp.asarray(rng.normal(size=(64, 16)), jnp.float32),
+            "blocks": {"wk": jnp.asarray(rng.normal(size=(16, 16)),
+                                         jnp.float32),
+                       "time_decay": jnp.asarray(rng.normal(size=(16,)),
+                                                 jnp.float32)},
+        }
+        qt, stats = quantize_tree(params, QuantPolicy())
+        assert stats["compression"] > 1.5
+        deq = dequantize_tree(qt)
+        for k in ("embed",):
+            err = np.abs(np.asarray(deq[k]) - np.asarray(params[k]))
+            assert err.max() < 0.1 * np.abs(np.asarray(params[k])).max()
+
+    def test_fake_quant_preserves_structure(self, rng):
+        params = {"a": jnp.ones((4, 4)), "b": {"scale": jnp.ones((4,))}}
+        out = fake_quantize_tree(params)
+        assert jax.tree_util.tree_structure(out) == \
+            jax.tree_util.tree_structure(params)

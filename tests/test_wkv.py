@@ -1,0 +1,147 @@
+"""Recurrence-operator invariants: scan == composition of steps,
+chunked == scan, state continuity across sequence splits."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wkv.wkv4 import (
+    wkv4_scan, wkv4_step, wkv4_init_state, WKV4State)
+from repro.core.wkv.wkv6 import (
+    wkv6_scan, wkv6_step, wkv6_chunked, wkv6_init_state)
+from repro.core.wkv.ssd import ssd_scan, ssd_step, ssd_chunked
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestWkv4:
+    def test_scan_equals_steps(self, rng):
+        B, T, C = 2, 16, 8
+        k, v = _rand(rng, B, T, C), _rand(rng, B, T, C)
+        w = jnp.asarray(np.abs(rng.normal(size=(C,))) + 0.05, jnp.float32)
+        u = _rand(rng, C)
+        y_scan, final = wkv4_scan(k, v, w, u)
+        st = wkv4_init_state((B,), C)
+        outs = []
+        for t in range(T):
+            st, o = wkv4_step(st, k[:, t], v[:, t], w, u)
+            outs.append(o)
+        y_steps = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(y_scan),
+                                   np.asarray(y_steps), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(final.a), np.asarray(st.a),
+                                   rtol=1e-5)
+
+    def test_state_continuity(self, rng):
+        """scan(full) == scan(second half, state=scan(first half))."""
+        B, T, C = 1, 32, 4
+        k, v = _rand(rng, B, T, C), _rand(rng, B, T, C)
+        w = jnp.asarray(np.abs(rng.normal(size=(C,))) + 0.05, jnp.float32)
+        u = _rand(rng, C)
+        y_full, _ = wkv4_scan(k, v, w, u)
+        y1, mid = wkv4_scan(k[:, :16], v[:, :16], w, u)
+        y2, _ = wkv4_scan(k[:, 16:], v[:, 16:], w, u, state=mid)
+        np.testing.assert_allclose(
+            np.asarray(y_full), np.asarray(jnp.concatenate([y1, y2], 1)),
+            rtol=1e-5, atol=1e-6)
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_wkv_is_convex_average(self, seed):
+        """Property (paper Eq. 2): wkv_t is a weighted average of the v's
+        seen so far => min v <= wkv <= max v."""
+        rng = np.random.default_rng(seed)
+        B, T, C = 1, 12, 4
+        k = _rand(rng, B, T, C)
+        v = _rand(rng, B, T, C)
+        w = jnp.asarray(np.abs(rng.normal(size=(C,))) + 0.01, jnp.float32)
+        u = _rand(rng, C)
+        y, _ = wkv4_scan(k, v, w, u)
+        y = np.asarray(y)
+        vmax = np.maximum.accumulate(np.asarray(v), axis=1)
+        vmin = np.minimum.accumulate(np.asarray(v), axis=1)
+        assert np.all(y <= vmax + 1e-4)
+        assert np.all(y >= vmin - 1e-4)
+
+    def test_no_overflow_large_k(self, rng):
+        """The running-max form must survive k ~ +100 (e^100 overflows f32)."""
+        B, T, C = 1, 8, 4
+        k = _rand(rng, B, T, C) + 100.0
+        v = _rand(rng, B, T, C)
+        w = jnp.asarray(np.full((C,), 0.5), jnp.float32)
+        u = _rand(rng, C)
+        y, _ = wkv4_scan(k, v, w, u)
+        assert np.all(np.isfinite(np.asarray(y)))
+
+
+class TestWkv6:
+    @pytest.mark.parametrize("T,chunk,sub", [(64, 16, 8), (128, 32, 16)])
+    def test_chunked_equals_scan(self, rng, T, chunk, sub):
+        B, H, N = 2, 2, 8
+        r, k, v = (_rand(rng, B, T, H, N) for _ in range(3))
+        w = jnp.asarray(rng.uniform(0.2, 0.999, (B, T, H, N)), jnp.float32)
+        u = _rand(rng, H, N)
+        y1, s1 = wkv6_scan(r, k, v, w, u)
+        y2, s2 = wkv6_chunked(r, k, v, w, u, chunk=chunk, subchunk=sub)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_strong_decay_stable(self, rng):
+        """w near 0 (aggressive forgetting) must not produce inf/nan in the
+        chunked form (the stability property documented in wkv6.py)."""
+        B, T, H, N = 1, 64, 1, 4
+        r, k, v = (_rand(rng, B, T, H, N) for _ in range(3))
+        w = jnp.full((B, T, H, N), 1e-6, jnp.float32)
+        u = _rand(rng, H, N)
+        y, s = wkv6_chunked(r, k, v, w, u, chunk=16)
+        assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_scan_equals_steps(self, rng):
+        B, T, H, N = 1, 8, 2, 4
+        r, k, v = (_rand(rng, B, T, H, N) for _ in range(3))
+        w = jnp.asarray(rng.uniform(0.5, 0.99, (B, T, H, N)), jnp.float32)
+        u = _rand(rng, H, N)
+        y_scan, _ = wkv6_scan(r, k, v, w, u)
+        S = wkv6_init_state(B, H, N)
+        outs = []
+        for t in range(T):
+            S, y = wkv6_step(S, r[:, t], k[:, t], v[:, t], w[:, t], u)
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(y_scan),
+                                   np.asarray(jnp.stack(outs, 1)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("T,chunk", [(64, 16), (32, 32)])
+    def test_chunked_equals_scan(self, rng, T, chunk):
+        B, H, N, P = 2, 3, 4, 8
+        x = _rand(rng, B, T, H, P)
+        a = jnp.asarray(rng.uniform(0.3, 0.999, (B, T, H)), jnp.float32)
+        Bc, Cc = _rand(rng, B, T, H, N), _rand(rng, B, T, H, N)
+        y1, s1 = ssd_scan(x, a, Bc, Cc)
+        y2, s2 = ssd_chunked(x, a, Bc, Cc, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_scan_equals_steps(self, rng):
+        B, T, H, N, P = 1, 6, 2, 4, 4
+        x = _rand(rng, B, T, H, P)
+        a = jnp.asarray(rng.uniform(0.5, 0.99, (B, T, H)), jnp.float32)
+        Bc, Cc = _rand(rng, B, T, H, N), _rand(rng, B, T, H, N)
+        y_scan, _ = ssd_scan(x, a, Bc, Cc)
+        h = jnp.zeros((B, H, N, P))
+        outs = []
+        for t in range(T):
+            h, y = ssd_step(h, x[:, t], a[:, t], Bc[:, t], Cc[:, t])
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(y_scan),
+                                   np.asarray(jnp.stack(outs, 1)),
+                                   rtol=1e-4, atol=1e-5)
