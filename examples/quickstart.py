@@ -5,6 +5,11 @@
 Covers: picking an architecture, materializing parameters, a forward pass,
 the paper's Δ-PoT quantization of the weights, and one decode step with the
 quantized model.
+
+The decode loop below is the single-request form.  For serving many
+concurrent requests — slotted state pool, chunked prefill interleaved with
+fused batched decode, token streaming — use `repro.serving.ServingEngine`:
+see docs/serving.md and examples/serve_continuous.py.
 """
 import jax
 import jax.numpy as jnp

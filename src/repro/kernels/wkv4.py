@@ -28,8 +28,9 @@ def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref,
 
     def body(t, carry):
         a, b, o = carry
-        kt = pl.load(k_ref, (0, pl.dslice(t, 1), slice(None)))[0]
-        vt = pl.load(v_ref, (0, pl.dslice(t, 1), slice(None)))[0]
+        tsl = (pl.dslice(0, 1), pl.dslice(t, 1), slice(None))
+        kt = pl.load(k_ref, tsl)[0, 0]
+        vt = pl.load(v_ref, tsl)[0, 0]
         kt = kt.astype(jnp.float32)
         vt = vt.astype(jnp.float32)
         # output (includes the bonus u for the current token)
@@ -37,21 +38,23 @@ def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref,
         A = jnp.exp(o - no)
         Bf = jnp.exp(u + kt - no)
         y = (A * a + Bf * vt) / (A * b + Bf)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
-                 y[None].astype(y_ref.dtype))
+        pl.store(y_ref, tsl, y[None, None].astype(y_ref.dtype))
         # state update
         no2 = jnp.maximum(o - w, kt)
         A2 = jnp.exp(o - w - no2)
         B2 = jnp.exp(kt - no2)
         return (A2 * a + B2 * vt, A2 * b + B2, no2)
 
+    # int ref indices break jax 0.4.x interpret-mode discharge; use dslice
+    ld = lambda ref: pl.load(
+        ref, (pl.dslice(0, 1), slice(None)))[0].astype(jnp.float32)
     a, b, o = jax.lax.fori_loop(
-        0, T, body, (a0_ref[0].astype(jnp.float32),
-                     b0_ref[0].astype(jnp.float32),
-                     o0_ref[0].astype(jnp.float32)))
-    af_ref[0, :] = a
-    bf_ref[0, :] = b
-    of_ref[0, :] = o
+        0, T, body, (ld(a0_ref), ld(b0_ref), ld(o0_ref)))
+    st = lambda ref, x: pl.store(
+        ref, (pl.dslice(0, 1), slice(None)), x[None])
+    st(af_ref, a)
+    st(bf_ref, b)
+    st(of_ref, o)
 
 
 @functools.partial(jax.jit, static_argnames=("bc", "interpret"))

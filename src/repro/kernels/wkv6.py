@@ -27,11 +27,13 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
     mask = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)  # strict lower
 
     def chunk_body(g, S):
-        sl = (0, 0, pl.dslice(g * C, C), slice(None))
-        rc = pl.load(r_ref, sl).astype(jnp.float32)        # (C,N)
-        kc = pl.load(k_ref, sl).astype(jnp.float32)
-        vc = pl.load(v_ref, sl).astype(jnp.float32)
-        wc = pl.load(w_ref, sl).astype(jnp.float32)
+        # int ref indices break jax 0.4.x interpret-mode discharge; dslice
+        sl = (pl.dslice(0, 1), pl.dslice(0, 1),
+              pl.dslice(g * C, C), slice(None))
+        rc = pl.load(r_ref, sl).astype(jnp.float32)[0, 0]  # (C,N)
+        kc = pl.load(k_ref, sl).astype(jnp.float32)[0, 0]
+        vc = pl.load(v_ref, sl).astype(jnp.float32)[0, 0]
+        wc = pl.load(w_ref, sl).astype(jnp.float32)[0, 0]
         logw = jnp.log(jnp.maximum(wc, 1e-38))
         L = jnp.cumsum(logw, axis=0)                      # inclusive (C,N)
         Lprev = L - logw                                  # exclusive
@@ -45,16 +47,18 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
         y = y + jnp.dot(att, vc, preferred_element_type=jnp.float32)
         # bonus (current token)
         y = y + jnp.sum(rc * u[None] * kc, axis=-1, keepdims=True) * vc
-        pl.store(y_ref, sl, y.astype(y_ref.dtype))
+        pl.store(y_ref, sl, y[None, None].astype(y_ref.dtype))
         # state update: exponents Ltot - L <= 0 and Ltot <= 0
         Ltot = L[-1:, :]                                  # (1,N)
         k_fut = kc * jnp.exp(Ltot - L)
         return jnp.exp(Ltot[0])[:, None] * S + jnp.dot(
             k_fut.T, vc, preferred_element_type=jnp.float32)
 
+    # int ref indices break jax 0.4.x interpret-mode discharge; use dslice
+    s_sl = (pl.dslice(0, 1), pl.dslice(0, 1), slice(None), slice(None))
     S = jax.lax.fori_loop(0, n_chunks, chunk_body,
-                          s0_ref[0, 0].astype(jnp.float32))
-    sf_ref[0, 0] = S
+                          pl.load(s0_ref, s_sl)[0, 0].astype(jnp.float32))
+    pl.store(sf_ref, s_sl, S[None, None])
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,12 +1,20 @@
-"""Serving launcher — the paper's workload: token-by-token decode.
+"""Serving launcher — thin CLI over the continuous-batching engine.
 
-Implements the paper's serving mode on the JAX stack: load (or init)
-weights, optionally quantize them with the paper's mixed-precision policy
-(Δ-PoT matrices + W9 additive + A9 activations for RWKV-4's hw mode),
-prefill a prompt, then decode autoregressively with the O(1)/KV state.
+Default mode drives `repro.serving.ServingEngine`: N concurrent requests
+share one slotted state pool, chunked prefill interleaves with fused
+batched decode, and the run ends with a telemetry snapshot (tokens/s,
+TTFT, latency) from `runtime.monitor.ServingCounters`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m --smoke \
-        --tokens 64 --batch 4 [--quantized]
+        --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16]
+
+`--legacy` keeps the seed behavior — one jitted decode_step in a
+single-batch host loop — and is also the reference baseline for
+benchmarks/bench_serving.py.  `--hw-numerics` (rwkv4 only: LUT exp, PWL
+sigmoid, LUT division) implies the legacy loop, since the hw-numerics
+wrapper bypasses the registry Model contract the engine builds on.
+
+See docs/serving.md for the engine API.
 """
 from __future__ import annotations
 
@@ -18,15 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant.policy import QuantPolicy, fake_quantize_tree
-from repro.launch.mesh import make_host_mesh
 from repro.models.registry import get_model
 
 
 def greedy_decode(model, params, state, first_token, n_tokens: int,
                   start_pos: int = 0, *, sample_temp: float = 0.0,
                   rng=None):
-    """Autoregressive loop around decode_step (host loop — mirrors real
-    serving where each step is one device program)."""
+    """Autoregressive loop around decode_step (host loop — the seed's
+    single-request serving mode, kept as the engine's reference baseline)."""
     B = first_token.shape[0]
     tok = first_token
     out = [tok]
@@ -45,9 +52,30 @@ def greedy_decode(model, params, state, first_token, n_tokens: int,
     return jnp.concatenate(out, axis=1), state
 
 
-def serve(arch: str, *, smoke: bool = True, batch: int = 4,
-          n_tokens: int = 32, quantized: bool = False, seed: int = 0,
-          hw_numerics: bool = False):
+def sequential_decode(model, params, prompt: list[int], n_new: int):
+    """Batch-1 greedy decode of one request: feed the prompt token-by-token
+    through a jitted decode_step, then argmax-chain `n_new` tokens.  This is
+    the engine's bit-identity oracle (docs/serving.md) — the example and the
+    scheduler tests both compare against it."""
+    step = jax.jit(model.decode_step)
+    state = model.init_decode_state(1, 0)
+    logits = None
+    for t in prompt:
+        logits, state = step(params, state,
+                             jnp.array([[t]], jnp.int32), jnp.int32(0))
+    out = []
+    for _ in range(n_new):
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+        logits, state = step(params, state,
+                             jnp.array([[tok]], jnp.int32), jnp.int32(0))
+    return out
+
+
+def serve_legacy(arch: str, *, smoke: bool = True, batch: int = 4,
+                 n_tokens: int = 32, quantized: bool = False, seed: int = 0,
+                 hw_numerics: bool = False):
+    """Seed serving mode: one fused batch, single host loop."""
     model = get_model(arch, smoke=smoke)
     cfg = model.cfg
     rng = jax.random.PRNGKey(seed)
@@ -82,18 +110,59 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     return toks
 
 
+def serve(arch: str, *, smoke: bool = True, batch: int = 4,
+          n_tokens: int = 32, quantized: bool = False, seed: int = 0,
+          prefill_chunk: int = 16, prompt_len: int = 8,
+          temperature: float = 0.0):
+    """Continuous-batching serving: `batch` concurrent requests through the
+    slotted engine; prints the telemetry snapshot and returns the handles."""
+    from repro.serving import ServingEngine
+
+    engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
+                           prefill_chunk=prefill_chunk,
+                           quantized=quantized, seed=seed)
+    cfg = engine.model.cfg
+    rng = np.random.default_rng(seed)
+    handles = [
+        engine.submit(rng.integers(0, cfg.vocab, size=prompt_len).tolist(),
+                      max_new_tokens=n_tokens, temperature=temperature,
+                      seed=int(rng.integers(1 << 31)))
+        for _ in range(batch)]
+    snap = engine.run()
+    print(f"{arch}: {snap['finished']} requests x {n_tokens} tokens "
+          f"({'Δ-PoT W8' if quantized else 'fp'} weights) — "
+          f"{snap['decode_tokens_per_s']:,.0f} decode tok/s, "
+          f"TTFT {snap['mean_ttft_s']*1e3:.0f} ms, "
+          f"latency {snap['mean_latency_s']*1e3:.0f} ms")
+    for k, v in snap.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+    return handles
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv4-169m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quantized", action="store_true")
-    ap.add_argument("--hw-numerics", action="store_true")
+    ap.add_argument("--legacy", action="store_true",
+                    help="seed single-loop decode instead of the engine")
+    ap.add_argument("--hw-numerics", action="store_true",
+                    help="paper LUT/PWL numerics (rwkv4; implies --legacy)")
     args = ap.parse_args()
-    serve(args.arch, smoke=args.smoke, batch=args.batch,
-          n_tokens=args.tokens, quantized=args.quantized,
-          hw_numerics=args.hw_numerics)
+    if args.legacy or args.hw_numerics:
+        serve_legacy(args.arch, smoke=args.smoke, batch=args.batch,
+                     n_tokens=args.tokens, quantized=args.quantized,
+                     hw_numerics=args.hw_numerics)
+    else:
+        serve(args.arch, smoke=args.smoke, batch=args.batch,
+              n_tokens=args.tokens, quantized=args.quantized,
+              prefill_chunk=args.prefill_chunk,
+              prompt_len=args.prompt_len, temperature=args.temperature)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,11 @@ from repro.configs.base import ModelConfig, get_config, smoke_config
 from repro.models import param as PM
 
 
+def _is_axes_tuple(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
 def _module_for(cfg: ModelConfig) -> ModuleType:
     if cfg.rwkv_version == 4:
         from repro.models import rwkv4
@@ -91,6 +96,30 @@ class Model:
     def decode_step(self, params, state, tokens, pos):
         return self.module.decode_step(self.cast_params(params), state,
                                        tokens, pos, self.cfg)
+
+    # -- per-slot decode-state contract (serving engine) -------------------
+    @property
+    def position_free_decode(self) -> bool:
+        """True when decode_step ignores `pos` (pure recurrent state, no
+        KV write index) — the property the slotted serving pool relies on
+        to run many requests at unrelated sequence offsets in one step."""
+        return bool(getattr(self.module, "DECODE_POS_FREE", False))
+
+    def init_slot_state(self, n_slots: int = 1, max_len: int = 0,
+                        dtype=jnp.bfloat16):
+        """Decode state sized for a slot pool: the batch axis is the slot
+        axis (one independent sequence per slot)."""
+        return self.module.init_decode_state(self.cfg, n_slots, max_len,
+                                             dtype)
+
+    def decode_state_batch_axes(self) -> list[int]:
+        """Position of the batch (slot) axis in every decode-state leaf,
+        as a flat list aligned with jax.tree_util.tree_leaves(state).
+        Derived from decode_state_axes(), so any model that names its
+        state axes gets slot addressing for free."""
+        axes = self.decode_state_axes()
+        flat, _ = jax.tree_util.tree_flatten(axes, is_leaf=_is_axes_tuple)
+        return [ax.index("batch") for ax in flat]
 
 
 def get_model(cfg_or_id: ModelConfig | str, *, smoke: bool = False) -> Model:

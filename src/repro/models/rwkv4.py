@@ -158,6 +158,10 @@ def forward(params, batch: dict, cfg: ModelConfig, *, hw: bool = False):
 # Decode — the paper's serving mode (token-by-token, state carried)
 # ---------------------------------------------------------------------------
 
+# decode_step ignores `pos` entirely, so slots in a serving pool may sit at
+# unrelated sequence offsets within one fused step (repro.serving).
+DECODE_POS_FREE = True
+
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0,
                       dtype=jnp.float32):

@@ -178,6 +178,10 @@ def forward(params, batch: dict, cfg: ModelConfig, *, chunk: int = 64):
 # Decode — O(1) state per token (the linear-inference story)
 # ---------------------------------------------------------------------------
 
+# decode_step ignores `pos` entirely, so slots in a serving pool may sit at
+# unrelated sequence offsets within one fused step (repro.serving).
+DECODE_POS_FREE = True
+
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0,
                       dtype=jnp.float32):

@@ -1,4 +1,4 @@
-"""Fault-tolerance runtime (host-side; no device code).
+"""Fault-tolerance + serving-telemetry runtime (host-side; no device code).
 
 At thousands-of-nodes scale the failure model is: some host stops making
 progress (hardware fault, preemption, network partition) or makes progress
@@ -8,6 +8,9 @@ the latest checkpoint onto the surviving topology (elastic reshard), resume.
 This module provides the detection half plus a supervisor loop implementing
 that policy, testable in-process via FailureInjector.
 
+  ServingCounters   — throughput/latency telemetry for the continuous-
+                      batching engine (repro.serving): tokens/s, TTFT,
+                      per-request latency, slot occupancy
   HeartbeatMonitor  — per-host last-seen tracking with a dead-host predicate
   StragglerDetector — per-step duration EMA; flags hosts slower than
                       `threshold` x the fleet median (mitigation hook: the
@@ -22,6 +25,76 @@ import collections
 import dataclasses
 import time
 from typing import Callable, Optional
+
+
+class ServingCounters:
+    """Serving-engine telemetry. The engine calls the on_* hooks; callers
+    read `snapshot()` — a plain dict safe to log/export.  Timestamps use an
+    injectable clock so tests are deterministic."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self.t_start = clock()
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.ticks = 0
+        self.admitted = 0
+        self.finished = 0
+        self.cancelled = 0
+        self.peak_active = 0
+        self.peak_queued = 0
+        self._enqueue_t: dict[int, float] = {}
+        self.ttft_s: list[float] = []      # enqueue -> first token
+        self.latency_s: list[float] = []   # enqueue -> completion
+
+    # -- hooks (called by the engine/scheduler) ----------------------------
+    def on_enqueue(self, rid: int):
+        self._enqueue_t[rid] = self._clock()
+
+    def on_admit(self, rid: int):
+        self.admitted += 1
+
+    def on_token(self, rid: int, *, first: bool = False):
+        self.decode_tokens += 1
+        if first and rid in self._enqueue_t:
+            self.ttft_s.append(self._clock() - self._enqueue_t[rid])
+
+    def on_finish(self, rid: int):
+        self.finished += 1
+        t0 = self._enqueue_t.pop(rid, None)
+        if t0 is not None:
+            self.latency_s.append(self._clock() - t0)
+
+    def on_cancel(self, rid: int):
+        """Evicted before completion: not a completion, no latency sample."""
+        self.cancelled += 1
+        self._enqueue_t.pop(rid, None)
+
+    def on_tick(self, *, active: int, queued: int):
+        self.ticks += 1
+        self.peak_active = max(self.peak_active, active)
+        self.peak_queued = max(self.peak_queued, queued)
+
+    # -- export ------------------------------------------------------------
+    def snapshot(self) -> dict:
+        dt = max(self._clock() - self.t_start, 1e-9)
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0
+        return {
+            "elapsed_s": dt,
+            "ticks": self.ticks,
+            "admitted": self.admitted,
+            "finished": self.finished,
+            "cancelled": self.cancelled,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "decode_tokens_per_s": self.decode_tokens / dt,
+            "total_tokens_per_s":
+                (self.prefill_tokens + self.decode_tokens) / dt,
+            "mean_ttft_s": mean(self.ttft_s),
+            "mean_latency_s": mean(self.latency_s),
+            "peak_active_slots": self.peak_active,
+            "peak_queue_depth": self.peak_queued,
+        }
 
 
 class HeartbeatMonitor:

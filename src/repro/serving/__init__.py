@@ -1,0 +1,16 @@
+"""Continuous-batching serving for recurrent-state models.
+
+The JAX analog of the paper's fully-on-chip serving story: all requests'
+O(1) recurrent states stay resident in one preallocated device pool
+(`state_pool`), a scheduler interleaves chunked prefill with one fused
+masked decode step per tick (`scheduler`), and the engine front-end turns
+`submit(prompt)` into a token stream (`engine`).  docs/serving.md has the
+API guide; docs/architecture.md walks a request through the lifecycle.
+"""
+from repro.serving.engine import (RequestHandle, SamplingParams,
+                                  ServingEngine)
+from repro.serving.scheduler import Request, Scheduler, sample_token
+from repro.serving.state_pool import SlotStatePool
+
+__all__ = ["ServingEngine", "SamplingParams", "RequestHandle",
+           "Request", "Scheduler", "sample_token", "SlotStatePool"]

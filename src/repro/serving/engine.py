@@ -1,0 +1,247 @@
+"""Serving engine front-end: submit(prompt) -> token stream.
+
+Wires the slotted state pool and the scheduler to a model and builds the
+engine's only two device programs:
+
+  * the FUSED DECODE STEP — `decode_step` over the full pool with an
+    active-slot mask (optionally unpacking Δ-PoT-quantized weights inside
+    the jit, so int8 codes are what crosses HBM — the paper's bandwidth
+    win riding along for free), and
+  * the FUSED PREFILL CHUNK — a scan of the same masked pool-wide step
+    over a fixed-size token window, absorbing up to `prefill_chunk`
+    prompt tokens for EVERY prefilling slot in one device call; a
+    per-slot-per-token validity mask maps every prompt length onto one
+    compiled shape, and a fresh-slot mask resets newly admitted lanes to
+    the initial state inside the same call.
+
+Both are traced exactly once (`trace_counts` proves it in tests).  See
+docs/serving.md for the API walkthrough and docs/architecture.md for the
+request lifecycle.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model, get_model
+from repro.runtime.monitor import ServingCounters
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.state_pool import SlotStatePool
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+    eos_token: Optional[int] = None
+
+
+class RequestHandle:
+    """Live view of one submitted request; tokens stream in as generated."""
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.tokens: list[int] = []        # everything generated so far
+        self.done = False
+        self._pending: collections.deque[int] = collections.deque()
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    def drain(self) -> list[int]:
+        """Take (and clear) the tokens generated since the last drain.
+        The polling counterpart to engine.stream()/astream(); mixing the
+        two on one handle splits the stream between them."""
+        out = list(self._pending)
+        self._pending.clear()
+        return out
+
+
+class ServingEngine:
+    """Continuous-batching RWKV serving (see module docstring).
+
+    model      — a Model handle, or an arch id string (resolved with
+                 `smoke=` like the rest of the launchers)
+    params     — optional pre-built weights (f32/bf16 tree); initialized
+                 from `seed` when omitted
+    quantized  — pack weights to Δ-PoT W8 once at startup; the fused step
+                 dequantizes inside the jit (core.quant.serving)
+    max_batch  — pool width: max concurrent sequences (compiled shape)
+    prefill_chunk — prompt tokens absorbed per tick per prefilling slot
+    """
+
+    def __init__(self, model: Model | str, *, params: Any = None,
+                 smoke: bool = True, max_batch: int = 8,
+                 prefill_chunk: int = 16, max_len: int = 0,
+                 state_dtype=jnp.bfloat16, quantized: bool = False,
+                 seed: int = 0, counters: Optional[ServingCounters] = None):
+        if isinstance(model, str):
+            model = get_model(model, smoke=smoke)
+        if not model.has_decode:
+            raise ValueError(f"{model.cfg.name} has no decode_step")
+        if not model.position_free_decode:
+            raise ValueError(
+                f"{model.cfg.name}: decode_step consumes `pos`; the slotted "
+                "engine needs a position-free recurrent state (rwkv4/rwkv6)")
+        self.model = model
+        self.quantized = quantized
+        if params is None:
+            params = model.init_params(jax.random.PRNGKey(seed))
+        if quantized:
+            from repro.core.quant.serving import pack_params
+            params = pack_params(params)
+        self.params = params
+        self.counters = counters if counters is not None else \
+            ServingCounters()
+        self.pool = SlotStatePool(model, max_batch, max_len=max_len,
+                                  dtype=state_dtype)
+        self.trace_counts = {"decode": 0, "prefill": 0}
+        decode_fn, prefill_fn = self._build_steps(prefill_chunk)
+        self.scheduler = Scheduler(
+            self.pool, decode_fn, prefill_fn, prefill_chunk=prefill_chunk,
+            counters=self.counters, on_token=self._on_token,
+            on_finish=self._on_finish)
+        self._handles: dict[int, RequestHandle] = {}
+        self._rids = itertools.count()
+
+    # -- compiled steps ------------------------------------------------------
+
+    def _build_steps(self, prefill_chunk: int):
+        model, axes = self.model, self.pool._axes
+        tdef = self.pool._tdef
+        quantized = self.quantized
+
+        def maybe_unpack(params):
+            if quantized:
+                from repro.core.quant.serving import unpack_params
+                return unpack_params(params)
+            return params
+
+        def masked(new_state, old_state, mask):
+            new_l = jax.tree_util.tree_leaves(new_state)
+            old_l = jax.tree_util.tree_leaves(old_state)
+            out = []
+            for n, o, ax in zip(new_l, old_l, axes):
+                m = mask.reshape(tuple(
+                    -1 if i == ax else 1 for i in range(n.ndim)))
+                out.append(jnp.where(m, n, o))
+            return jax.tree_util.tree_unflatten(tdef, out)
+
+        def decode(params, state, tokens, mask):
+            self.trace_counts["decode"] += 1   # increments only on trace
+            logits, new_state = model.decode_step(
+                maybe_unpack(params), state, tokens, jnp.int32(0))
+            return logits, masked(new_state, state, mask)
+
+        # logits shape/dtype for the scan carry, without running anything
+        S = self.pool.max_slots
+        ab_logits = jax.eval_shape(
+            lambda p, s, t: model.decode_step(p, s, t, jnp.int32(0))[0],
+            jax.eval_shape(maybe_unpack, self.params),
+            self.pool.state, jax.ShapeDtypeStruct((S, 1), jnp.int32))
+        fresh_lane = self.pool._fresh   # batch-1 leaves broadcast per slot
+
+        def prefill(params, state, tokens, valid, fresh):
+            self.trace_counts["prefill"] += 1  # increments only on trace
+            p = maybe_unpack(params)
+            # reset newly admitted lanes to the fresh state in-call
+            state = masked(state, fresh_lane, ~fresh)
+
+            def body(carry, xs):
+                state, last = carry
+                tok, ok = xs                    # tok (S,), ok (S,)
+                logits, stepped = model.decode_step(
+                    p, state, tok[:, None], jnp.int32(0))
+                state = masked(stepped, state, ok)
+                last = jnp.where(ok[:, None, None], logits, last)
+                return (state, last), None
+
+            last0 = jnp.zeros(ab_logits.shape, ab_logits.dtype)
+            (state, last), _ = jax.lax.scan(
+                body, (state, last0), (tokens.T, valid.T))
+            return state, last
+
+        j_decode = jax.jit(decode, donate_argnums=(1,))
+        j_prefill = jax.jit(prefill, donate_argnums=(1,))
+        return (lambda state, toks, mask:
+                j_decode(self.params, state, jnp.asarray(toks),
+                         jnp.asarray(mask)),
+                lambda state, toks, valid, fresh:
+                j_prefill(self.params, state, jnp.asarray(toks),
+                          jnp.asarray(valid), jnp.asarray(fresh)))
+
+    # -- request API ---------------------------------------------------------
+
+    def submit(self, prompt: list[int],
+               sampling: Optional[SamplingParams] = None,
+               **kw) -> RequestHandle:
+        """Queue a request; returns a handle whose tokens fill in as the
+        engine steps.  `kw` shorthand: max_new_tokens/temperature/seed/
+        eos_token override the SamplingParams fields."""
+        sp = sampling or SamplingParams()
+        if kw:
+            sp = dataclasses.replace(sp, **kw)
+        req = Request(rid=next(self._rids),
+                      prompt=[int(t) for t in prompt],
+                      max_new_tokens=sp.max_new_tokens,
+                      temperature=sp.temperature, seed=sp.seed,
+                      eos_token=sp.eos_token)
+        handle = RequestHandle(req)
+        self._handles[req.rid] = handle
+        self.scheduler.enqueue(req)
+        return handle
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        ok = self.scheduler.evict(handle.rid)
+        return ok
+
+    def step(self) -> bool:
+        """One scheduler tick; True while any request is in flight."""
+        return self.scheduler.tick()
+
+    def run(self) -> dict:
+        """Drive until drained; returns a counters snapshot."""
+        while self.step():
+            pass
+        return self.counters.snapshot()
+
+    def stream(self, handle: RequestHandle) -> Iterator[int]:
+        """Synchronous token stream for one request; steps the engine
+        (advancing ALL in-flight requests) whenever the stream runs dry."""
+        while True:
+            while handle._pending:
+                yield handle._pending.popleft()
+            if handle.done:
+                return
+            self.step()
+
+    async def astream(self, handle: RequestHandle):
+        """Async token stream; yields control to the event loop between
+        engine ticks so concurrent consumers interleave."""
+        import asyncio
+        while True:
+            while handle._pending:
+                yield handle._pending.popleft()
+            if handle.done:
+                return
+            self.step()
+            await asyncio.sleep(0)
+
+    # -- scheduler callbacks -------------------------------------------------
+
+    def _on_token(self, req: Request, tok: int):
+        h = self._handles[req.rid]
+        h.tokens.append(tok)
+        h._pending.append(tok)
+
+    def _on_finish(self, req: Request):
+        h = self._handles.pop(req.rid)
+        h.done = True

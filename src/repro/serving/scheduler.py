@@ -1,0 +1,224 @@
+"""Continuous-batching scheduler: admission, chunked prefill, fused decode.
+
+One `tick()` is the software analog of the paper's pipeline reordering
+(PAPER.md §3: overlap data movement with computation so the datapath never
+stalls).  Per tick the scheduler
+
+  1. ADMITS queued requests into free pool slots,
+  2. advances EVERY prefilling slot by up to one fixed-size prompt chunk
+     in ONE fused call (a jitted scan of `decode_step` over the whole
+     pool, with a per-slot-per-token validity mask so every prompt
+     length and slot combination reuses the same compiled shape; newly
+     admitted slots are reset to the fresh state inside the same call
+     via a fresh-slot mask), and
+  3. runs ONE fused decode step over the whole pool for all DECODE slots,
+     with an active-slot mask selecting which lanes' states commit.
+
+Because the pool, the chunk, and the fused step all have fixed shapes,
+the engine compiles exactly two device programs (fused prefill chunk +
+fused decode step) no matter how requests arrive, finish, or interleave
+— admission and retirement are pure host bookkeeping.
+
+Masking semantics: inactive lanes are *computed* (wasted flops, bought
+deliberately — fixed shapes beat recompiles) but their state updates are
+discarded via `where(mask, stepped, old)`, so a lane mid-prefill or free
+is never disturbed by decode traffic.  Lane results are bitwise equal to
+a batch-1 decode of the same sequence (verified in tests/test_scheduler).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side; tokens are python ints)."""
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+    eos_token: Optional[int] = None
+
+
+PREFILL, DECODE = "prefill", "decode"
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host metadata for one occupied pool slot."""
+    req: Request
+    phase: str = PREFILL
+    fresh: bool = True              # lane still needs its state reset
+    n_prefilled: int = 0
+    next_token: int = -1            # token the next decode tick consumes
+    generated: list[int] = dataclasses.field(default_factory=list)
+    rng: Optional[np.random.Generator] = None
+
+
+def sample_token(logits_row: np.ndarray, temperature: float,
+                 rng: Optional[np.random.Generator]) -> int:
+    """Greedy argmax at temperature<=0 (ties -> first index, matching
+    jnp.argmax, which keeps the engine bit-compatible with the sequential
+    loop); Gumbel-max sampling otherwise."""
+    if temperature <= 0.0 or rng is None:
+        return int(np.argmax(logits_row))
+    g = rng.gumbel(size=logits_row.shape)
+    return int(np.argmax(logits_row.astype(np.float64) / temperature + g))
+
+
+class Scheduler:
+    """Drives a SlotStatePool with two compiled functions.
+
+    decode_fn(pool_state, tokens (S,1) i32, mask (S,) bool)
+        -> (logits (S,1,V), new_pool_state)           [fused, masked]
+    prefill_fn(pool_state, tokens (S,C) i32, valid (S,C) bool,
+               fresh (S,) bool)
+        -> (new_pool_state, last_logits (S,1,V))      [fused, chunked]
+    """
+
+    def __init__(self, pool, decode_fn: Callable, prefill_fn: Callable, *,
+                 prefill_chunk: int, counters=None,
+                 on_token: Optional[Callable] = None,
+                 on_finish: Optional[Callable] = None):
+        self.pool = pool
+        self.decode_fn = decode_fn
+        self.prefill_fn = prefill_fn
+        self.prefill_chunk = int(prefill_chunk)
+        self.counters = counters
+        self.on_token = on_token or (lambda req, tok: None)
+        self.on_finish = on_finish or (lambda req: None)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: dict[int, _Slot] = {}
+
+    # -- public ------------------------------------------------------------
+
+    def enqueue(self, req: Request):
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the first token "
+                             "is sampled from the prompt's last logits)")
+        self.queue.append(req)
+        if self.counters is not None:
+            self.counters.on_enqueue(req.rid)
+
+    def tick(self) -> bool:
+        """One scheduling round; returns True while work remains."""
+        self._admit()
+        self._prefill_tick()
+        self._decode_tick()
+        if self.counters is not None:
+            self.counters.on_tick(active=len(self.slots),
+                                  queued=len(self.queue))
+        return bool(self.queue or self.slots)
+
+    def run(self):
+        while self.tick():
+            pass
+
+    def evict(self, rid: int) -> bool:
+        """Cancel an in-flight or queued request and free its slot; counted
+        as a cancellation, not a completion (no latency sample)."""
+        for slot, meta in list(self.slots.items()):
+            if meta.req.rid == rid:
+                self._retire(slot, meta, cancelled=True)
+                return True
+        for req in list(self.queue):
+            if req.rid == rid:
+                self.queue.remove(req)
+                if self.counters is not None:
+                    self.counters.on_cancel(rid)
+                self.on_finish(req)
+                return True
+        return False
+
+    # -- phases ------------------------------------------------------------
+
+    def _admit(self):
+        while self.queue and self.pool.n_free:
+            slot = self.pool.acquire()
+            req = self.queue.popleft()
+            self.slots[slot] = _Slot(
+                req=req, rng=np.random.default_rng(req.seed))
+            if self.counters is not None:
+                self.counters.on_admit(req.rid)
+
+    def _prefill_tick(self):
+        prefilling = [(s, m) for s, m in self.slots.items()
+                      if m.phase == PREFILL]
+        if not prefilling:
+            return
+        S, C = self.pool.max_slots, self.prefill_chunk
+        toks = np.zeros((S, C), np.int32)
+        valid = np.zeros((S, C), bool)
+        fresh = np.zeros((S,), bool)
+        parts = {}
+        for slot, meta in prefilling:
+            part = meta.req.prompt[
+                meta.n_prefilled:meta.n_prefilled + C]
+            toks[slot, :len(part)] = part
+            valid[slot, :len(part)] = True
+            fresh[slot] = meta.fresh
+            parts[slot] = len(part)
+        self.pool.state, last_logits = self.prefill_fn(
+            self.pool.state, toks, valid, fresh)
+        rows = None
+        for slot, meta in prefilling:
+            meta.fresh = False
+            meta.n_prefilled += parts[slot]
+            if self.counters is not None:
+                self.counters.prefill_tokens += parts[slot]
+            if meta.n_prefilled == len(meta.req.prompt):
+                # prompt fully absorbed: the last prompt token's logits
+                # yield the first generated token; the slot joins the
+                # fused decode batch from this tick on.
+                meta.phase = DECODE
+                if rows is None:
+                    rows = np.asarray(last_logits[:, -1], np.float32)
+                self._emit(slot, meta, rows[slot])
+
+    def _decode_tick(self):
+        active = [(s, m) for s, m in self.slots.items()
+                  if m.phase == DECODE]
+        if not active:
+            return
+        S = self.pool.max_slots
+        toks = np.zeros((S, 1), np.int32)
+        mask = np.zeros((S,), bool)
+        for slot, meta in active:
+            toks[slot, 0] = meta.next_token
+            mask[slot] = True
+        logits, self.pool.state = self.decode_fn(self.pool.state, toks, mask)
+        rows = np.asarray(logits[:, -1], np.float32)
+        for slot, meta in active:
+            self._emit(slot, meta, rows[slot])
+
+    # -- helpers -----------------------------------------------------------
+
+    def _emit(self, slot: int, meta: _Slot, logits_row: np.ndarray):
+        req = meta.req
+        tok = sample_token(logits_row, req.temperature, meta.rng)
+        meta.generated.append(tok)
+        meta.next_token = tok
+        if self.counters is not None:
+            self.counters.on_token(req.rid, first=len(meta.generated) == 1)
+        self.on_token(req, tok)
+        done = (len(meta.generated) >= req.max_new_tokens or
+                (req.eos_token is not None and tok == req.eos_token))
+        if done:
+            self._retire(slot, meta)
+
+    def _retire(self, slot: int, meta: _Slot, *, cancelled: bool = False):
+        del self.slots[slot]
+        self.pool.release(slot)
+        if self.counters is not None:
+            if cancelled:
+                self.counters.on_cancel(meta.req.rid)
+            else:
+                self.counters.on_finish(meta.req.rid)
+        self.on_finish(meta.req)

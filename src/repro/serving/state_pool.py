@@ -1,0 +1,110 @@
+"""Slotted recurrent-state pool — the engine's on-device residency story.
+
+The HFRWKV accelerator keeps the whole RWKV state on-chip so serving never
+pays state movement (PAPER.md §1).  The JAX translation: ONE preallocated
+device buffer per state leaf holding `max_slots` independent sequences'
+O(1) states, where the model's batch axis is reinterpreted as the *slot*
+axis.  Requests come and go; the buffers never reallocate, so the fused
+decode step keeps a single compiled shape for the life of the engine.
+
+Slot addressing is generic over state layout: the per-leaf position of the
+slot axis is derived from the model's `decode_state_axes()` naming (see
+`Model.decode_state_batch_axes`), so wkv4 `(L,B,D)` leaves, wkv6
+`(L,B,H,N,N)` leaves, and ssd/hybrid `(G,g,B,...)` leaves all work without
+per-model code.
+
+Host-side bookkeeping is a plain LIFO free list: `acquire` pops the
+lowest-numbered free slot, `release` returns it.  The pool also exposes a
+generic per-lane device API (three jitted helpers, traced once each):
+
+  read_slot(i)         -> batch-1 state tree (a lane copy)
+  write_slot(i, lane)  -> install a batch-1 state tree into lane i
+  reset_slot(i)        -> write the fresh-state template
+
+Note the scheduler's hot path does NOT use these: lane resets happen
+inside the fused prefill call via its fresh-slot mask, so a released
+slot keeps its stale state until the next admission overwrites it (no
+cross-request leakage — nothing ever reads a lane before that reset).
+The helpers exist for out-of-band uses: tests, debugging, and state
+migration/snapshot of individual requests.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotStatePool:
+    """Preallocated `max_slots`-wide decode state + free-list admission."""
+
+    def __init__(self, model, max_slots: int, *, max_len: int = 0,
+                 dtype=jnp.bfloat16):
+        self.model = model
+        self.max_slots = int(max_slots)
+        self.state = model.init_slot_state(self.max_slots, max_len, dtype)
+        self._axes = model.decode_state_batch_axes()
+        self._tdef = jax.tree_util.tree_structure(self.state)
+        # fresh batch-1 template used by reset_slot
+        self._fresh = model.init_slot_state(1, max_len, dtype)
+        self._free = list(range(self.max_slots - 1, -1, -1))  # pop -> slot 0
+        self._read, self._write = self._build_ops()
+
+    # -- device ops (jitted once; slot index is a traced scalar) -----------
+
+    def _build_ops(self):
+        axes, tdef = self._axes, self._tdef
+
+        def read(state, slot):
+            leaves = jax.tree_util.tree_leaves(state)
+            out = [jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+                   for leaf, ax in zip(leaves, axes)]
+            return jax.tree_util.tree_unflatten(tdef, out)
+
+        def write(state, lane, slot):
+            leaves = jax.tree_util.tree_leaves(state)
+            lanes = jax.tree_util.tree_leaves(lane)
+            out = []
+            for leaf, ln, ax in zip(leaves, lanes, axes):
+                start = [jnp.int32(0)] * leaf.ndim
+                start[ax] = slot
+                out.append(jax.lax.dynamic_update_slice(
+                    leaf, ln.astype(leaf.dtype), start))
+            return jax.tree_util.tree_unflatten(tdef, out)
+
+        return jax.jit(read), jax.jit(write, donate_argnums=(0,))
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot (lowest-numbered first), or None if full."""
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int):
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        self._free.append(slot)
+        self._free.sort(reverse=True)  # keep pop() -> lowest slot
+
+    def read_slot(self, slot: int) -> Any:
+        """Copy slot `slot` out as a batch-1 state tree."""
+        return self._read(self.state, jnp.int32(slot))
+
+    def write_slot(self, slot: int, lane_state: Any):
+        """Install a batch-1 state tree into slot `slot`."""
+        self.state = self._write(self.state, lane_state, jnp.int32(slot))
+
+    def reset_slot(self, slot: int):
+        """Restore slot `slot` to the fresh (just-initialized) state."""
+        self.write_slot(slot, self._fresh)

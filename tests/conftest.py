@@ -5,3 +5,31 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def hypothesis_stubs():
+    """Stand-ins for (given, settings, strategies) when hypothesis is not
+    installed: the module still collects and its example-based tests run,
+    while each guarded property test skips via pytest.importorskip at run
+    time.  Install the `dev` extra (pyproject.toml) to run them for real.
+    """
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    def given(*a, **k):
+        def deco(fn):
+            def _skipped(*args, **kw):
+                pytest.importorskip("hypothesis")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    return given, settings, _AnyStrategy()

@@ -2,7 +2,13 @@
 bit-accurate LUT/PWL models against true functions."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: property tests importorskip at run time
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.core.approx import exp_lut, sigmoid_pwl, div_lut, lod
 

@@ -4,7 +4,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: property tests importorskip at run time
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.core.quant.delta_pot import (
     DPotFormat, FORMAT_W9, FORMAT_W8, FORMAT_POT4, dpot_levels,

@@ -26,12 +26,18 @@ class TestSpecRules:
     def _mesh(self):
         # AbstractMesh lets us test the rules for production shapes without
         # 256 devices.
-        from jax.sharding import AbstractMesh
-        return AbstractMesh((16, 16), ("data", "model"))
+        return self._abstract_mesh((16, 16), ("data", "model"))
 
     def _mesh3(self):
+        return self._abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+
+    @staticmethod
+    def _abstract_mesh(sizes, names):
         from jax.sharding import AbstractMesh
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        try:   # jax 0.4.x: one tuple of (name, size) pairs
+            return AbstractMesh(tuple(zip(names, sizes)))
+        except TypeError:   # jax >= 0.5: (axis_sizes, axis_names)
+            return AbstractMesh(sizes, names)
 
     def test_fsdp_tp(self):
         spec = spec_for_axes(("fsdp", "tp"), (4096, 4096), self._mesh())

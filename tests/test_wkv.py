@@ -4,7 +4,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: property tests importorskip at run time
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.core.wkv.wkv4 import (
     wkv4_scan, wkv4_step, wkv4_init_state, WKV4State)
