@@ -1,0 +1,244 @@
+"""Fused decode-layer kernel vs the per-op decode path.
+
+Measures single-token decode throughput (tokens/s at batch 8, greedy,
+state carried across steps) for three executions of the SAME math — all
+three produce identical argmax tokens (asserted before timing):
+
+  * PER-OP    — one device launch per datapath op (layernorm, each
+    token-shift mix, each matvec, the WKV update, each gate), i.e. every
+    intermediate makes an HBM round-trip between launches.  This is the
+    baseline the paper's fully-on-chip pipeline is built against (and what
+    RWKVQuant's bandwidth analysis says dominates single-token inference).
+  * MONOLITHIC — the engine's per-op path: `decode_step` under one jit.
+    XLA fuses elementwise chains but still materializes matmul and scan
+    intermediates between its kernels.
+  * FUSED      — `decode_step_fused`: ONE Pallas launch per block
+    (kernels/fused_decode.py); off-TPU it runs in interpret mode, so its
+    advantage here is launch/round-trip amortization vs PER-OP; on TPU the
+    same launch keeps state + intermediates VMEM-resident.
+
+Also reports an analytic HBM bytes/token estimate for the per-op vs fused
+datapaths, fp(bf16) vs Δ-PoT-packed weights — the paper's bandwidth
+story.  The acceptance gate for PR 2 is fused >= 1.5x PER-OP at batch 8
+on CPU; fused-vs-MONOLITHIC is reported for honesty (expect ~1x on CPU,
+where XLA already fuses the whole step into one program).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.quant.serving import pack_params
+from repro.core.wkv.wkv4 import WKV4State, wkv4_step
+from repro.models import layers as L
+from repro.models.registry import get_model
+from repro.models.rwkv4 import block_decode
+
+ARCH = "rwkv4-169m"
+BATCH = 8
+N_STEPS = 16
+
+
+# ---------------------------------------------------------------------------
+# PER-OP path: every datapath op is its own jitted device call
+# ---------------------------------------------------------------------------
+
+
+def build_per_op_step(model):
+    """decode_step as one launch PER OP (rwkv4).  Same math/dtype sequence
+    as models.rwkv4.block_decode, so tokens match the oracle."""
+    cfg = model.cfg
+    dt = jnp.dtype(cfg.dtype)
+    j = jax.jit
+
+    embed = j(lambda emb, t: jnp.take(emb, t[:, 0], axis=0).astype(dt))
+    ln = j(lambda p, x: L.apply_norm(p, x[:, None], "layernorm")[:, 0])
+    mix = j(lambda h, prev, m: h * m + prev * (1.0 - m))
+    mm = j(lambda a, w: a @ w)
+    decay = j(lambda td: jnp.exp(td.astype(jnp.float32)))
+    wkv = j(lambda a, b, o, k, v, w, u: wkv4_step(
+        WKV4State(a.astype(jnp.float32), b.astype(jnp.float32),
+                  o.astype(jnp.float32)),
+        k.astype(jnp.float32), v.astype(jnp.float32), w,
+        u.astype(jnp.float32)))
+    gate = j(lambda r, out: jax.nn.sigmoid(r) * out.astype(r.dtype))
+    add = j(lambda x, y: x + y.astype(x.dtype))
+    sig = j(jax.nn.sigmoid)
+    sqrelu = j(lambda k: jnp.square(jax.nn.relu(k)))
+    mul = j(lambda a, b: a * b)
+    head = j(lambda x, w: x @ w.astype(x.dtype))
+    cast = j(lambda s, like: s.astype(like.dtype))
+
+    def step(params, layer_params, state, tokens):
+        """state: list of per-layer dicts (host-sliced once, outside)."""
+        x = embed(params["embed"], tokens)
+        x = ln(params["ln0"], x)
+        new_state = []
+        for lp, st in zip(layer_params, state):
+            h = ln(lp["ln1"], x)
+            p = lp["att"]
+            r = mm(mix(h, st["att_x"], p["time_mix_r"]), p["wr"])
+            k = mm(mix(h, st["att_x"], p["time_mix_k"]), p["wk"])
+            v = mm(mix(h, st["att_x"], p["time_mix_v"]), p["wv"])
+            w = decay(p["time_decay"])
+            nwkv, out = wkv(st["wkv_a"], st["wkv_b"], st["wkv_o"],
+                            k, v, w, p["time_first"])
+            att = mm(gate(r, out), p["wo"])
+            x2 = add(x, att)
+            h2 = ln(lp["ln2"], x2)
+            p = lp["ffn"]
+            rr = sig(mm(mix(h2, st["ffn_x"], p["time_mix_r"]), p["wr"]))
+            kk = sqrelu(mm(mix(h2, st["ffn_x"], p["time_mix_k"]), p["wk"]))
+            ffn = mul(rr, mm(kk, p["wv"]))
+            x = add(x2, ffn)
+            new_state.append({
+                "att_x": cast(h, st["att_x"]),
+                "ffn_x": cast(h2, st["ffn_x"]),
+                "wkv_a": cast(nwkv.a, st["wkv_a"]),
+                "wkv_b": cast(nwkv.b, st["wkv_b"]),
+                "wkv_o": cast(nwkv.o, st["wkv_o"])})
+        x = ln(params["ln_f"], x)
+        return head(x, params["head"])[:, None], new_state
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# HBM bytes/token (analytic; see docs/kernels.md §bandwidth)
+# ---------------------------------------------------------------------------
+
+
+def hbm_bytes_per_token(cfg, batch: int, packed: bool):
+    """(per_op_bytes, fused_bytes) per decoded token.
+
+    Weight stream: every launch re-reads its weights; both paths read each
+    weight once per step (XLA/Pallas keep them HBM-resident), at 2 B (bf16)
+    or 1 B + per-channel scales (Δ-PoT W8).  Per-op additionally round-trips
+    every intermediate (written by one launch, read by the next): ~18
+    (B, D)-sized activations + r/k/v/gates per layer, plus the state twice
+    (read + write per launch touching it).  Fused writes only the new state
+    and the block output."""
+    D, F, Lc, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    wb = 1 if packed else 2
+    per_layer_w = (5 * D * D + 2 * D * F) * wb + (7 * D * 4 if packed else 0)
+    weights = Lc * per_layer_w + (V * D + D * V) * wb
+    state = Lc * 5 * batch * D * 2          # bf16 state leaves
+    act = batch * D * 2
+    per_layer_int = 18 * act + 2 * batch * F * 2
+    per_op = weights + Lc * (per_layer_int * 2 + state // Lc * 2)
+    fused = weights + state * 2 + Lc * act * 2 + batch * V * 4
+    return per_op / batch, fused / batch
+
+
+# ---------------------------------------------------------------------------
+
+
+def _tokens_per_s(step_fn, n_steps=N_STEPS):
+    out = step_fn()                      # warmup / compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        out = step_fn()
+    jax.block_until_ready(out)
+    return BATCH * n_steps / (time.perf_counter() - t0)
+
+
+def run():
+    model = get_model(ARCH, smoke=True)
+    cfg = model.cfg
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, 1)), jnp.int32)
+
+    # --- build the three paths ---------------------------------------------
+    per_op_step = build_per_op_step(model)
+    cast = model.cast_params(params)
+    layer_params = [jax.tree_util.tree_map(lambda p: p[i], cast["blocks"])
+                    for i in range(cfg.n_layers)]
+    mono = jax.jit(model.decode_step)
+    fused = jax.jit(model.decode_step_fused)
+
+    # --- token equivalence before timing -----------------------------------
+    st0 = model.init_decode_state(BATCH, 0, jnp.bfloat16)
+    st_list = [jax.tree_util.tree_map(lambda s: s[i], st0)
+               for i in range(cfg.n_layers)]
+    l_po, _ = per_op_step(cast, layer_params, st_list, toks)
+    l_mono, _ = mono(params, st0, toks, jnp.int32(0))
+    l_fu, _ = fused(params, st0, toks, jnp.int32(0))
+    assert np.array_equal(np.argmax(np.asarray(l_po, np.float32), -1),
+                          np.argmax(np.asarray(l_mono, np.float32), -1))
+    assert np.array_equal(np.asarray(l_mono, np.float32),
+                          np.asarray(l_fu, np.float32))
+
+    # --- time them (state carried across steps, like the engine) ------------
+    def po():
+        po.state = per_op_step(cast, layer_params, po.state, toks)[1]
+        return po.state
+    po.state = st_list
+
+    def mo():
+        _, mo.state = mono(params, mo.state, toks, jnp.int32(0))
+        return mo.state
+    mo.state = st0
+
+    def fu():
+        _, fu.state = fused(params, fu.state, toks, jnp.int32(0))
+        return fu.state
+    fu.state = st0
+
+    tps_po = _tokens_per_s(po)
+    tps_mo = _tokens_per_s(mo)
+    tps_fu = _tokens_per_s(fu)
+
+    hbm_po, hbm_fu = hbm_bytes_per_token(cfg, BATCH, packed=False)
+    emit(f"fused_decode/{ARCH}/batch{BATCH}/fp", 1e6 / max(tps_fu, 1e-9),
+         f"per_op_tok_s={tps_po:.1f};mono_tok_s={tps_mo:.1f};"
+         f"fused_tok_s={tps_fu:.1f};fused_vs_per_op={tps_fu/tps_po:.2f}x;"
+         f"fused_vs_mono={tps_fu/tps_mo:.2f}x;"
+         f"hbm_bytes_tok_per_op={hbm_po:.3g};hbm_bytes_tok_fused={hbm_fu:.3g}")
+
+    # --- quantized: packed codes into the kernel ----------------------------
+    packed = pack_params(params)
+    from repro.core.quant.serving import unpack_params
+    mono_q = jax.jit(lambda p, s, t: model.decode_step(
+        unpack_params(p), s, t, jnp.int32(0)))
+    fused_q = jax.jit(lambda p, s, t: model.decode_step_fused(
+        p, s, t, jnp.int32(0)))
+    l_mq, _ = mono_q(packed, st0, toks)
+    l_fq, _ = fused_q(packed, st0, toks)
+    assert np.array_equal(np.asarray(l_mq, np.float32),
+                          np.asarray(l_fq, np.float32))
+
+    def moq():
+        _, moq.state = mono_q(packed, moq.state, toks)
+        return moq.state
+    moq.state = st0
+
+    def fuq():
+        _, fuq.state = fused_q(packed, fuq.state, toks)
+        return fuq.state
+    fuq.state = st0
+
+    tps_moq = _tokens_per_s(moq)
+    tps_fuq = _tokens_per_s(fuq)
+    hbm_poq, hbm_fuq = hbm_bytes_per_token(cfg, BATCH, packed=True)
+    emit(f"fused_decode/{ARCH}/batch{BATCH}/dpot_w8",
+         1e6 / max(tps_fuq, 1e-9),
+         f"mono_tok_s={tps_moq:.1f};fused_tok_s={tps_fuq:.1f};"
+         f"fused_vs_mono={tps_fuq/tps_moq:.2f}x;"
+         f"hbm_bytes_tok_per_op={hbm_poq:.3g};"
+         f"hbm_bytes_tok_fused={hbm_fuq:.3g}")
+
+    ok = tps_fu / tps_po >= 1.5
+    print(f"gate: fused {tps_fu:.1f} tok/s vs per-op {tps_po:.1f} tok/s "
+          f"= {tps_fu/tps_po:.2f}x (target >= 1.5x) -> "
+          f"{'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,3 +1,5 @@
+"""Model + shape configs: the paper's rwkv4 family and the assigned
+architectures, each behind `get_config` / `smoke_config` (see base.py)."""
 from repro.configs.base import (
     ModelConfig, ShapeConfig, SHAPES, get_config, list_configs,
     supported_shapes, smoke_config,

@@ -35,10 +35,16 @@ EXP_LUT_TABLE = np.round(np.exp2(np.arange(256) / 256.0) * 256.0) / 256.0
 _EXP_LUT = jnp.asarray(EXP_LUT_TABLE, jnp.float32)
 
 
-def exp_lut(x: jnp.ndarray) -> jnp.ndarray:
+def exp_lut(x: jnp.ndarray, *, table: jnp.ndarray | None = None
+            ) -> jnp.ndarray:
     """e^x per the paper's EXP unit.  Valid (as in hardware) for the WKV
     operator's argument range; inputs are clamped to the representable
-    exponent window of the 16-bit internal format."""
+    exponent window of the 16-bit internal format.
+
+    `table` lets a caller supply the 256-entry fraction LUT as an explicit
+    operand — the fused decode kernel must do this because Pallas kernels
+    cannot capture array constants (the LUT becomes a VMEM-resident input,
+    exactly the paper's on-chip table)."""
     x = jnp.asarray(x, jnp.float32)
     y = x * _LOG2E_HW
     # 16-bit internal: clamp the base-2 exponent so 2^u fits s7.8 arithmetic
@@ -46,7 +52,7 @@ def exp_lut(x: jnp.ndarray) -> jnp.ndarray:
     u = jnp.floor(y)
     v = y - u
     idx = jnp.clip((v * 256.0).astype(jnp.int32), 0, 255)
-    frac = _EXP_LUT[idx]
+    frac = (_EXP_LUT if table is None else table)[idx]
     return jnp.exp2(u) * frac
 
 
@@ -110,13 +116,16 @@ DIV_LUT_TABLE = _build_div_lut()
 _DIV_LUT = jnp.asarray(DIV_LUT_TABLE.reshape(-1), jnp.float32)
 
 
-def div_lut(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+def div_lut(x: jnp.ndarray, y: jnp.ndarray, *,
+            table: jnp.ndarray | None = None) -> jnp.ndarray:
     """x / y per the paper's DIVU, generalized to f32 carriers.
 
     Signs are separated first (the unit is unsigned); magnitudes are
     decomposed with frexp (the LOD+normalize step), the mantissa ratio comes
     from the 2-D LUT, and the exponent difference is applied as a shift.
     Division by (quantized) zero saturates, as hardware would.
+    `table` (flat 256-entry) has the same role as in `exp_lut`: an explicit
+    operand for Pallas kernels that cannot capture array constants.
     """
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
@@ -129,7 +138,7 @@ def div_lut(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     my, ey = my * 2.0, ey - 1
     ix = jnp.clip(((mx - 1.0) * 16.0).astype(jnp.int32), 0, 15)
     iy = jnp.clip(((my - 1.0) * 16.0).astype(jnp.int32), 0, 15)
-    frac = _DIV_LUT[ix * 16 + iy]
+    frac = (_DIV_LUT if table is None else table)[ix * 16 + iy]
     q = frac * jnp.exp2((ex - ey).astype(jnp.float32))
     q = jnp.where(ay <= 0, jnp.float32(2.0**15), q)  # saturate on div-by-0
     q = jnp.where(ax <= 0, 0.0, q)

@@ -11,6 +11,10 @@ accuracy cost.
 API:
   pack_params(params)          -> packed tree (+ additive leaves cast bf16)
   unpack_params(packed)        -> compute tree (call inside jit)
+  unpack_leaf(leaf)            -> decode ONE packed leaf (shared by the
+                                 fused decode kernel so in-kernel decode is
+                                 bit-identical to the per-op path)
+  cast_compute(tree, dtype)    -> packed-aware compute-dtype cast
   packed_abstract(spec)        -> ShapeDtypeStruct tree (dry-run input)
   packed_axes(spec_axes)       -> logical-sharding tree for the packed form
 """
@@ -24,8 +28,14 @@ from repro.core.quant.delta_pot import (
 from repro.core.quant.policy import classify_param
 
 
-def _is_packed(leaf) -> bool:
+def is_packed_leaf(leaf) -> bool:
+    """True for a `{"packed", "scale"}` Δ-PoT leaf — THE predicate for the
+    packed format (the fused decode kernel and models import it from here
+    so the format has a single source of truth)."""
     return isinstance(leaf, dict) and set(leaf) == {"packed", "scale"}
+
+
+_is_packed = is_packed_leaf
 
 
 def pack_params(params):
@@ -44,18 +54,41 @@ def pack_params(params):
     return jax.tree_util.tree_unflatten(tdef, out)
 
 
+def unpack_leaf(leaf):
+    """Decode one `{"packed", "scale"}` leaf -> bf16 weights (identity on
+    anything else).  The single source of truth for the decode numerics:
+    both `unpack_params` (per-op path, whole tree before the matmuls) and
+    the fused decode kernel (per leaf, inside the launch) call this, which
+    is what makes the two paths bit-identical."""
+    if not _is_packed(leaf):
+        return leaf
+    p = leaf["packed"]
+    codes = (p & 0x7F).astype(jnp.uint8)
+    sign = jnp.where((p >> 7) & 1, -1.0, 1.0)
+    lvl = dpot_decode_codes(codes, FORMAT_W8.ks)
+    return (sign * lvl * leaf["scale"]).astype(jnp.bfloat16)
+
+
 def unpack_params(packed):
     """Packed tree -> bf16 compute tree.  Runs inside jit: the uint8 codes
     are what crosses HBM; the exp2 decode fuses into the matmul."""
-    def deq(leaf):
-        if not _is_packed(leaf):
-            return leaf
-        p = leaf["packed"]
-        codes = (p & 0x7F).astype(jnp.uint8)
-        sign = jnp.where((p >> 7) & 1, -1.0, 1.0)
-        lvl = dpot_decode_codes(codes, FORMAT_W8.ks)
-        return (sign * lvl * leaf["scale"]).astype(jnp.bfloat16)
-    return jax.tree_util.tree_map(deq, packed, is_leaf=_is_packed)
+    return jax.tree_util.tree_map(unpack_leaf, packed, is_leaf=_is_packed)
+
+
+def cast_compute(tree, dtype):
+    """Packed-aware mixed-precision cast: floating leaves go to `dtype`
+    (exactly `Model.cast_params`), packed Δ-PoT leaves pass through intact
+    so their uint8 codes and f32 scales reach the fused kernel unchanged
+    (casting the scale would perturb the decode vs the per-op path)."""
+    dt = jnp.dtype(dtype)
+
+    def cast(a):
+        if _is_packed(a):
+            return a
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating):
+            return a.astype(dt)
+        return a
+    return jax.tree_util.tree_map(cast, tree, is_leaf=_is_packed)
 
 
 def packed_abstract(spec_tree, abstract_params):

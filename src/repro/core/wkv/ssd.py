@@ -11,6 +11,12 @@ Shapes:
 
 The scalar-per-head decay (vs. RWKV-6's vector decay) is what makes the
 chunked "state-space duality" form a plain masked attention matmul.
+
+Oracle/consumer: `ssd_scan` is the exact reference that `ssd_chunked`
+(training/prefill) and `ssd_step` (decode) are tested against in
+`tests/test_wkv.py`; the consumer is `models.mamba2` (and through it the
+zamba2 hybrid blocks), which picks the form per phase exactly like the
+RWKV models pick between wkv scan/chunked/step.
 """
 from __future__ import annotations
 

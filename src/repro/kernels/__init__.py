@@ -10,6 +10,10 @@
                     paper's on-chip principle applied beyond RWKV — §Perf)
   fused_ce        — vocab-blocked cross-entropy: online logsumexp, no f32
                     log-prob materialization (§Perf Cell A, it-3)
+  fused_decode    — ONE launch for a whole RWKV block decode step: ln,
+                    token-shift mix, Δ-PoT matvecs, exp/σ units, WKV
+                    update all on-chip (the paper's fully-on-chip
+                    datapath — docs/kernels.md)
 
 Each kernel file carries the pl.pallas_call + BlockSpec; ops.py is the jit'd
 public surface; ref.py the pure-jnp oracles.

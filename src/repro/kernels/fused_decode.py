@@ -1,0 +1,138 @@
+"""Pallas kernel: one FULL RWKV block decode step in a single launch.
+
+This is the repo's analogue of the paper's fully on-chip datapath (§4):
+HFRWKV's central claim is that one token flows matrix-vector array ->
+EXP/σ/div units -> WKV update without intermediates ever leaving the chip.
+Here the whole per-layer decode step — layernorm, token-shift mix, the
+(optionally Δ-PoT-packed) r/k/v matvecs, the LUT/PWL approximation units,
+the WKV state update, and the output/FFN projections — runs inside ONE
+`pallas_call`, so on TPU the recurrent state and every intermediate stay
+resident in VMEM for the whole block; the only HBM traffic per launch is
+the weight stream (uint8 Δ-PoT codes when quantized — the same packing
+`dpot_matmul` streams), the incoming residual `x`, and the written-back
+state.
+
+The kernel is model-agnostic: `fused_block_decode(block_fn, x, lp, st)`
+traces the caller-supplied per-block function *inside* the kernel body, so
+`models/rwkv4.py` and `models/rwkv6.py` pass the exact same block math
+their per-op `decode_step` uses — which is what makes the fused path
+bit-exact against the per-op oracle (tests/test_fused_decode.py) instead
+of merely close.  Quantized weights arrive as `{"packed", "scale"}` leaves
+in `lp` and are decoded by `block_fn` itself (via
+`core.quant.serving.unpack_leaf`), i.e. inside the launch: int8 codes are
+all that crosses HBM, exactly like `dpot_matmul`.
+
+Grid: one program per `bb`-slot tile of the batch (default: the whole
+batch in one program — serving pools are small and the weights are shared
+across slots).  Parameters use constant index maps, so the Pallas grid
+pipeline streams each weight tile once per launch regardless of batch
+tiling — the chunked double-buffering story.
+
+VMEM budget note: with Δ-PoT W8 packing a full rwkv4-7b block's weights
+are ~uint8(4·D² + 2·D·F) ≈ 6 MiB at D=4096 — resident; the bf16 path at
+production sizes would need an `nf`-style feature grid, which smoke and
+serving shapes here don't require (off-TPU the kernel runs in interpret
+mode where VMEM is not modelled).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant.serving import is_packed_leaf
+from repro.kernels.common import interpret_default
+
+
+def broadcast_packed_scales(blocks, n_layers: int):
+    """Make a packed stacked-blocks tree scannable over the layer axis.
+
+    `pack_params` gives a stacked weight (L, ...) one shared scale with a
+    broadcast leading 1 (e.g. (1, 1, D)); `lax.scan` needs every xs leaf to
+    carry the L axis, so the scale is broadcast to (L, ...) here.  The
+    per-layer slice then multiplies element-for-element exactly as the
+    whole-tree broadcast would, keeping the decode bit-identical."""
+    def fix(leaf):
+        if not is_packed_leaf(leaf):
+            return leaf
+        scale = leaf["scale"]
+        return {"packed": leaf["packed"],
+                "scale": jnp.broadcast_to(
+                    scale, (n_layers,) + tuple(scale.shape[1:]))}
+    return jax.tree_util.tree_map(fix, blocks, is_leaf=is_packed_leaf)
+
+
+def _const_spec(shape):
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+
+def _batch_spec(shape, bb):
+    nd = len(shape)
+    return pl.BlockSpec((bb,) + tuple(shape[1:]),
+                        lambda i, _nd=nd: (i,) + (0,) * (_nd - 1))
+
+
+def fused_block_decode(block_fn, x, lp, st, *, bb: int | None = None,
+                       interpret: bool | None = None):
+    """Run `block_fn(lp, st, x) -> (x2, new_st)` as ONE Pallas launch.
+
+    block_fn — per-block decode step; traced inside the kernel body, so
+               everything it does (weight decode, matvecs, approx units,
+               WKV update) happens within the single launch.
+    x        — (B, D) residual stream entering the block.
+    lp       — per-layer parameter tree; leaves may be packed Δ-PoT dicts
+               (block_fn is responsible for decoding those).
+    st       — per-layer state tree; every leaf has the batch on axis 0.
+    bb       — batch tile (grid dimension); defaults to the full batch.
+    """
+    B = x.shape[0]
+    bb = B if bb is None else min(int(bb), B)
+    if B % bb:
+        raise ValueError(f"batch {B} not divisible by batch tile {bb}")
+
+    lp_leaves, lp_tdef = jax.tree_util.tree_flatten(lp)
+    st_leaves, st_tdef = jax.tree_util.tree_flatten(st)
+    n_lp, n_st = len(lp_leaves), len(st_leaves)
+
+    # Output shapes/dtypes come from the block function itself, so the
+    # kernel signature tracks any model's state layout automatically.
+    out_ab = jax.eval_shape(lambda l, s, xx: block_fn(l, s, xx), lp, st, x)
+    x2_ab, new_st_ab = out_ab
+    new_st_leaves_ab, new_st_tdef = jax.tree_util.tree_flatten(new_st_ab)
+
+    def kernel(*refs):
+        in_refs, out_refs = refs[:1 + n_lp + n_st], refs[1 + n_lp + n_st:]
+        xx = in_refs[0][...]
+        lp_v = jax.tree_util.tree_unflatten(
+            lp_tdef, [r[...] for r in in_refs[1:1 + n_lp]])
+        st_v = jax.tree_util.tree_unflatten(
+            st_tdef, [r[...] for r in in_refs[1 + n_lp:]])
+        x2, new_st = block_fn(lp_v, st_v, xx)
+        out_refs[0][...] = x2
+        for ref, leaf in zip(out_refs[1:],
+                             jax.tree_util.tree_leaves(new_st)):
+            ref[...] = leaf
+
+    in_specs = ([_batch_spec(x.shape, bb)] +
+                [_const_spec(l.shape) for l in lp_leaves] +
+                [_batch_spec(l.shape, bb) for l in st_leaves])
+    out_specs = ([_batch_spec(x2_ab.shape, bb)] +
+                 [_batch_spec(l.shape, bb) for l in new_st_leaves_ab])
+    out_shape = ([jax.ShapeDtypeStruct(x2_ab.shape, x2_ab.dtype)] +
+                 [jax.ShapeDtypeStruct(l.shape, l.dtype)
+                  for l in new_st_leaves_ab])
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret_default(interpret),
+    )(x, *lp_leaves, *st_leaves)
+    x2 = outs[0]
+    new_st = jax.tree_util.tree_unflatten(new_st_tdef, list(outs[1:]))
+    return x2, new_st

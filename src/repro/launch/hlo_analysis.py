@@ -18,6 +18,12 @@ count.  This module re-derives the three roofline inputs from
     once), layout-only ops (tuple/gte/bitcast/parameter/constant) free;
   * collective bytes: result bytes of all-reduce / all-gather /
     reduce-scatter / all-to-all / collective-permute (start ops only).
+
+Oracle/consumer: this IS the oracle for roofline inputs — `tests/
+test_hlo_analysis.py` pins its counts against hand-computed matmul/scan
+HLO, and `launch.roofline` (the cost_analysis-based fast path) is the
+consumer it corrects: `launch.dryrun` reports both so trip-count
+under-counting is visible per artifact.
 """
 from __future__ import annotations
 

@@ -15,6 +15,13 @@ and sum the operand sizes of every all-gather / all-reduce / reduce-scatter
 
 Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI (assignment-specified).
+
+Oracle/consumer: `launch.hlo_analysis` is the loop-aware oracle for the
+same three terms (this module trusts `cost_analysis()`, which under-counts
+scanned bodies — the two are cross-checked in `tests/test_hlo_analysis`);
+`launch.dryrun` attaches these terms to every compiled artifact and
+`benchmarks/summarize_roofline.py` turns them into the paper-style
+compute/memory/collective breakdown tables.
 """
 from __future__ import annotations
 

@@ -113,14 +113,15 @@ def serve_legacy(arch: str, *, smoke: bool = True, batch: int = 4,
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           n_tokens: int = 32, quantized: bool = False, seed: int = 0,
           prefill_chunk: int = 16, prompt_len: int = 8,
-          temperature: float = 0.0):
+          temperature: float = 0.0, fused: bool = False):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles."""
     from repro.serving import ServingEngine
 
     engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
                            prefill_chunk=prefill_chunk,
-                           quantized=quantized, seed=seed)
+                           quantized=quantized, fused_decode=fused,
+                           seed=seed)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
     handles = [
@@ -149,6 +150,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="decode through the single-launch fused block "
+                         "kernel (kernels/fused_decode.py)")
     ap.add_argument("--legacy", action="store_true",
                     help="seed single-loop decode instead of the engine")
     ap.add_argument("--hw-numerics", action="store_true",
@@ -162,7 +166,8 @@ def main():
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               n_tokens=args.tokens, quantized=args.quantized,
               prefill_chunk=args.prefill_chunk,
-              prompt_len=args.prompt_len, temperature=args.temperature)
+              prompt_len=args.prompt_len, temperature=args.temperature,
+              fused=args.fused)
 
 
 if __name__ == "__main__":

@@ -97,6 +97,20 @@ class Model:
         return self.module.decode_step(self.cast_params(params), state,
                                        tokens, pos, self.cfg)
 
+    @property
+    def has_fused_decode(self) -> bool:
+        """True when the model ships a single-launch Pallas decode step
+        (`decode_step_fused`) alongside the per-op oracle."""
+        return hasattr(self.module, "decode_step_fused")
+
+    def decode_step_fused(self, params, state, tokens, pos):
+        """Fused-kernel decode (kernels.fused_decode): one Pallas launch
+        per block.  Params pass through UNcast — the model applies the
+        packed-aware compute cast itself (core.quant.serving.cast_compute)
+        so Δ-PoT `{"packed","scale"}` leaves reach the kernel intact."""
+        return self.module.decode_step_fused(params, state, tokens, pos,
+                                             self.cfg)
+
     # -- per-slot decode-state contract (serving engine) -------------------
     @property
     def position_free_decode(self) -> bool:

@@ -12,6 +12,7 @@ Two numerics modes:
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -89,6 +90,19 @@ class _Hw:
 
 def _numerics(hw: bool):
     return _Hw if hw else _Std
+
+
+def _hw_numerics_with_tables(exp_table, div_table):
+    """_Hw with the LUTs bound as explicit arrays: the fused Pallas kernel
+    cannot capture array constants, so the tables travel as kernel operands
+    (VMEM-resident, like the paper's on-chip LUTs)."""
+    class _HwTabled:
+        exp = staticmethod(lambda x: exp_lut(x, table=exp_table))
+        sigmoid = staticmethod(sigmoid_pwl)
+        div = staticmethod(
+            lambda a, b: div_lut(a, b, table=div_table))
+        act_q = _Hw.act_q
+    return _HwTabled
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +195,45 @@ def decode_state_axes(cfg: ModelConfig):
     return {k: ax for k in ("att_x", "ffn_x", "wkv_a", "wkv_b", "wkv_o")}
 
 
+def block_decode(lp, st, x, cfg: ModelConfig, nm=_Std):
+    """One layer's FULL decode-step datapath: ln1 -> token-shift mix ->
+    r/k/v matvecs -> WKV update -> gated output, then ln2 -> channel mix.
+
+    x: (B, D) residual entering the block; st: this layer's state slice.
+    Shared verbatim by the per-op scan (`decode_step`, the oracle) and the
+    fused Pallas kernel (`decode_step_fused`), which is what makes the two
+    paths bit-identical."""
+    att_x, ffn_x = st["att_x"], st["ffn_x"]
+    wkv = WKV4State(st["wkv_a"].astype(jnp.float32),
+                    st["wkv_b"].astype(jnp.float32),
+                    st["wkv_o"].astype(jnp.float32))
+    h = L.apply_norm(lp["ln1"], x[:, None], "layernorm")[:, 0]
+    p = lp["att"]
+    mix = lambda m: nm.act_q(h * p[m] + att_x * (1.0 - p[m]))
+    r = mix("time_mix_r") @ p["wr"]
+    k = mix("time_mix_k") @ p["wk"]
+    v = mix("time_mix_v") @ p["wv"]
+    w = jnp.exp(p["time_decay"].astype(jnp.float32))
+    new_wkv, out = wkv4_step(wkv, k.astype(jnp.float32),
+                             v.astype(jnp.float32), w,
+                             p["time_first"].astype(jnp.float32),
+                             exp=nm.exp, div=nm.div)
+    att = nm.act_q(nm.sigmoid(r) * out.astype(r.dtype)) @ p["wo"]
+    x2 = x + att.astype(x.dtype)
+    h2 = L.apply_norm(lp["ln2"], x2[:, None], "layernorm")[:, 0]
+    p = lp["ffn"]
+    mix2 = lambda m: nm.act_q(h2 * p[m] + ffn_x * (1.0 - p[m]))
+    rr = nm.sigmoid(mix2("time_mix_r") @ p["wr"])
+    kk = jnp.square(jax.nn.relu(mix2("time_mix_k") @ p["wk"]))
+    ffn = nm.act_q(rr * (nm.act_q(kk) @ p["wv"]))
+    new_st = {"att_x": h.astype(att_x.dtype),
+              "ffn_x": h2.astype(ffn_x.dtype),
+              "wkv_a": new_wkv.a.astype(st["wkv_a"].dtype),
+              "wkv_b": new_wkv.b.astype(st["wkv_b"].dtype),
+              "wkv_o": new_wkv.o.astype(st["wkv_o"].dtype)}
+    return x2 + ffn.astype(x2.dtype), new_st
+
+
 def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
                 hw: bool = False):
     """tokens: (B,1). Returns (logits (B,1,V), new_state)."""
@@ -192,37 +245,61 @@ def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
 
     def body(x, xs):
         lp, st = xs
-        att_x, ffn_x = st["att_x"], st["ffn_x"]
-        wkv = WKV4State(st["wkv_a"].astype(jnp.float32),
-                        st["wkv_b"].astype(jnp.float32),
-                        st["wkv_o"].astype(jnp.float32))
-        h = L.apply_norm(lp["ln1"], x[:, None], "layernorm")[:, 0]
-        p = lp["att"]
-        mix = lambda m: nm.act_q(h * p[m] + att_x * (1.0 - p[m]))
-        r = mix("time_mix_r") @ p["wr"]
-        k = mix("time_mix_k") @ p["wk"]
-        v = mix("time_mix_v") @ p["wv"]
-        w = jnp.exp(p["time_decay"].astype(jnp.float32))
-        new_wkv, out = wkv4_step(wkv, k.astype(jnp.float32),
-                                 v.astype(jnp.float32), w,
-                                 p["time_first"].astype(jnp.float32),
-                                 exp=nm.exp, div=nm.div)
-        att = nm.act_q(nm.sigmoid(r) * out.astype(r.dtype)) @ p["wo"]
-        x2 = x + att.astype(x.dtype)
-        h2 = L.apply_norm(lp["ln2"], x2[:, None], "layernorm")[:, 0]
-        p = lp["ffn"]
-        mix2 = lambda m: nm.act_q(h2 * p[m] + ffn_x * (1.0 - p[m]))
-        rr = nm.sigmoid(mix2("time_mix_r") @ p["wr"])
-        kk = jnp.square(jax.nn.relu(mix2("time_mix_k") @ p["wk"]))
-        ffn = nm.act_q(rr * (nm.act_q(kk) @ p["wv"]))
-        new_st = {"att_x": h.astype(att_x.dtype),
-                  "ffn_x": h2.astype(ffn_x.dtype),
-                  "wkv_a": new_wkv.a.astype(st["wkv_a"].dtype),
-                  "wkv_b": new_wkv.b.astype(st["wkv_b"].dtype),
-                  "wkv_o": new_wkv.o.astype(st["wkv_o"].dtype)}
-        return x2 + ffn.astype(x2.dtype), new_st
+        return block_decode(lp, st, x, cfg, nm)
 
     x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
     x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
     logits = x @ params["head"].astype(x.dtype)
+    return logits, new_state
+
+
+def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
+                      hw: bool = False, interpret: bool | None = None):
+    """Fused-kernel decode: same math as `decode_step`, but each block runs
+    as ONE Pallas launch (`kernels.fused_decode`) — layernorms, token-shift
+    mixes, matvecs, exp/σ units, and the WKV update never leave the chip,
+    and Δ-PoT-packed weights (`{"packed","scale"}` leaves from
+    `core.quant.serving.pack_params`) are decoded *inside* the launch so
+    uint8 codes are all that crosses HBM.  Accepts packed or plain trees;
+    bit-identical to the per-op path either way
+    (tests/test_fused_decode.py)."""
+    del pos
+    from repro.core.quant.serving import cast_compute, unpack_leaf
+    from repro.kernels.fused_decode import (
+        broadcast_packed_scales, fused_block_decode, is_packed_leaf)
+    nm = _numerics(hw)
+    dt = jnp.dtype(cfg.dtype)
+    params = cast_compute(params, dt)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)
+    x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
+
+    def kernel_block(lp, st, xx):
+        # traced INSIDE the pallas kernel: packed weights decode in-VMEM
+        lp = dict(lp)
+        luts = lp.pop("_luts", None)
+        nm_k = nm if luts is None else _hw_numerics_with_tables(
+            luts["exp"], luts["div"])
+        lp = jax.tree_util.tree_map(
+            lambda l: unpack_leaf(l).astype(dt) if is_packed_leaf(l) else l,
+            lp, is_leaf=is_packed_leaf)
+        return block_decode(lp, st, xx, cfg, nm_k)
+
+    blocks = broadcast_packed_scales(params["blocks"], cfg.n_layers)
+    if hw:
+        # LUTs as scanned operands (per-layer slices are identical views)
+        from repro.core.approx.units import DIV_LUT_TABLE, EXP_LUT_TABLE
+        tab = lambda t: jnp.broadcast_to(
+            jnp.asarray(np.reshape(t, -1), jnp.float32),
+            (cfg.n_layers, 256))
+        blocks = {**blocks, "_luts": {"exp": tab(EXP_LUT_TABLE),
+                                      "div": tab(DIV_LUT_TABLE)}}
+
+    def body(x, xs):
+        lp, st = xs
+        return fused_block_decode(kernel_block, x, lp, st,
+                                  interpret=interpret)
+
+    x, new_state = jax.lax.scan(body, x, (blocks, state))
+    x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
+    logits = x @ unpack_leaf(params["head"]).astype(x.dtype)
     return logits, new_state

@@ -201,45 +201,93 @@ def decode_state_axes(cfg: ModelConfig):
             "wkv_s": ("layers", "batch", "tp", None, None)}
 
 
+def block_decode(lp, st, x, cfg: ModelConfig):
+    """One layer's FULL decode-step datapath: ln1 -> ddlerp mixes ->
+    r/k/v/w/g projections -> multi-head WKV-6 update -> GroupNorm ->
+    SiLU-gated output, then ln2 -> channel mix.
+
+    x: (B, D) residual entering the block; st: this layer's state slice.
+    Shared verbatim by the per-op scan (`decode_step`, the oracle) and the
+    fused Pallas kernel (`decode_step_fused`), which is what makes the two
+    paths bit-identical."""
+    B = x.shape[0]
+    H, N, D = cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
+    h = L.apply_norm(lp["ln1"], x[:, None], "layernorm")[:, 0]
+    p = lp["att"]
+    dx = st["att_x"].astype(h.dtype) - h
+    xw, xk, xv, xr, xg = _ddlerp(p, h, dx)
+    r = (xr @ p["wr"]).reshape(B, H, N)
+    k = (xk @ p["wk"]).reshape(B, H, N)
+    v = (xv @ p["wv"]).reshape(B, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _decay(p, xw).reshape(B, H, N)
+    S_new, y = wkv6_step(st["wkv_s"].astype(jnp.float32),
+                         r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w,
+                         p["time_faaaa"].astype(jnp.float32))
+    y = _group_norm(p["ln_x"], y.reshape(B, D).astype(h.dtype), H)
+    x2 = x + (y * g) @ p["wo"]
+    h2 = L.apply_norm(lp["ln2"], x2[:, None], "layernorm")[:, 0]
+    p2 = lp["ffn"]
+    ffn_x = st["ffn_x"].astype(h2.dtype)
+    mix = lambda m: h2 * p2[m] + ffn_x * (1.0 - p2[m])
+    rr = jax.nn.sigmoid(mix("time_mix_r") @ p2["wr"])
+    kk = jnp.square(jax.nn.relu(mix("time_mix_k") @ p2["wk"]))
+    ffn = rr * (kk @ p2["wv"])
+    new_st = {"att_x": h.astype(st["att_x"].dtype),
+              "ffn_x": h2.astype(st["ffn_x"].dtype),
+              "wkv_s": S_new.astype(st["wkv_s"].dtype)}
+    return x2 + ffn, new_st
+
+
 def decode_step(params, state, tokens, pos, cfg: ModelConfig):
     """tokens: (B,1) -> (logits (B,1,V), new_state)."""
     del pos
-    B = tokens.shape[0]
-    H, N, D = cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
     x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(
         jnp.dtype(cfg.dtype))
     x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
 
     def body(x, xs):
         lp, st = xs
-        h = L.apply_norm(lp["ln1"], x[:, None], "layernorm")[:, 0]
-        p = lp["att"]
-        dx = st["att_x"].astype(h.dtype) - h
-        xw, xk, xv, xr, xg = _ddlerp(p, h, dx)
-        r = (xr @ p["wr"]).reshape(B, H, N)
-        k = (xk @ p["wk"]).reshape(B, H, N)
-        v = (xv @ p["wv"]).reshape(B, H, N)
-        g = jax.nn.silu(xg @ p["wg"])
-        w = _decay(p, xw).reshape(B, H, N)
-        S_new, y = wkv6_step(st["wkv_s"].astype(jnp.float32),
-                             r.astype(jnp.float32), k.astype(jnp.float32),
-                             v.astype(jnp.float32), w,
-                             p["time_faaaa"].astype(jnp.float32))
-        y = _group_norm(p["ln_x"], y.reshape(B, D).astype(h.dtype), H)
-        x2 = x + (y * g) @ p["wo"]
-        h2 = L.apply_norm(lp["ln2"], x2[:, None], "layernorm")[:, 0]
-        p2 = lp["ffn"]
-        ffn_x = st["ffn_x"].astype(h2.dtype)
-        mix = lambda m: h2 * p2[m] + ffn_x * (1.0 - p2[m])
-        rr = jax.nn.sigmoid(mix("time_mix_r") @ p2["wr"])
-        kk = jnp.square(jax.nn.relu(mix("time_mix_k") @ p2["wk"]))
-        ffn = rr * (kk @ p2["wv"])
-        new_st = {"att_x": h.astype(st["att_x"].dtype),
-                  "ffn_x": h2.astype(st["ffn_x"].dtype),
-                  "wkv_s": S_new.astype(st["wkv_s"].dtype)}
-        return x2 + ffn, new_st
+        return block_decode(lp, st, x, cfg)
 
     x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
     x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
     logits = x @ params["head"].astype(x.dtype)
+    return logits, new_state
+
+
+def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
+                      interpret: bool | None = None):
+    """Fused-kernel decode: same math as `decode_step`, but each block runs
+    as ONE Pallas launch (`kernels.fused_decode`) with the (H, N, N) WKV
+    state resident for the whole block and Δ-PoT-packed weights decoded
+    inside the launch.  Accepts packed or plain trees; bit-identical to the
+    per-op path either way (tests/test_fused_decode.py)."""
+    del pos
+    from repro.core.quant.serving import cast_compute, unpack_leaf
+    from repro.kernels.fused_decode import (
+        broadcast_packed_scales, fused_block_decode, is_packed_leaf)
+    dt = jnp.dtype(cfg.dtype)
+    params = cast_compute(params, dt)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)
+    x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
+
+    def kernel_block(lp, st, xx):
+        # traced INSIDE the pallas kernel: packed weights decode in-VMEM
+        lp = jax.tree_util.tree_map(
+            lambda l: unpack_leaf(l).astype(dt) if is_packed_leaf(l) else l,
+            lp, is_leaf=is_packed_leaf)
+        return block_decode(lp, st, xx, cfg)
+
+    blocks = broadcast_packed_scales(params["blocks"], cfg.n_layers)
+
+    def body(x, xs):
+        lp, st = xs
+        return fused_block_decode(kernel_block, x, lp, st,
+                                  interpret=interpret)
+
+    x, new_state = jax.lax.scan(body, x, (blocks, state))
+    x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
+    logits = x @ unpack_leaf(params["head"]).astype(x.dtype)
     return logits, new_state

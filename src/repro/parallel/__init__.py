@@ -1,3 +1,5 @@
+"""Logical-axis sharding: named-axis rules, mesh plumbing, and the
+`constrain` helper models use to pin activation layouts (sharding.py)."""
 from repro.parallel.sharding import (
     AXIS_RULES, spec_for_axes, sharding_for, tree_shardings,
     batch_spec, shard_divisible, with_sharding_constraint_tree,

@@ -76,13 +76,20 @@ class ServingEngine:
                  dequantizes inside the jit (core.quant.serving)
     max_batch  — pool width: max concurrent sequences (compiled shape)
     prefill_chunk — prompt tokens absorbed per tick per prefilling slot
+    fused_decode — run the decode tick through the model's single-launch
+                 Pallas kernel (`decode_step_fused`): the whole block
+                 datapath — including in-kernel Δ-PoT weight decode when
+                 `quantized` — stays on-chip per launch.  Bit-identical
+                 output to the per-op path (tests/test_fused_decode.py);
+                 prefill keeps the per-op scan either way.
     """
 
     def __init__(self, model: Model | str, *, params: Any = None,
                  smoke: bool = True, max_batch: int = 8,
                  prefill_chunk: int = 16, max_len: int = 0,
                  state_dtype=jnp.bfloat16, quantized: bool = False,
-                 seed: int = 0, counters: Optional[ServingCounters] = None):
+                 fused_decode: bool = False, seed: int = 0,
+                 counters: Optional[ServingCounters] = None):
         if isinstance(model, str):
             model = get_model(model, smoke=smoke)
         if not model.has_decode:
@@ -91,8 +98,13 @@ class ServingEngine:
             raise ValueError(
                 f"{model.cfg.name}: decode_step consumes `pos`; the slotted "
                 "engine needs a position-free recurrent state (rwkv4/rwkv6)")
+        if fused_decode and not model.has_fused_decode:
+            raise ValueError(
+                f"{model.cfg.name} has no decode_step_fused; fused_decode "
+                "needs a model with the single-launch Pallas block kernel")
         self.model = model
         self.quantized = quantized
+        self.fused_decode = fused_decode
         if params is None:
             params = model.init_params(jax.random.PRNGKey(seed))
         if quantized:
@@ -135,10 +147,18 @@ class ServingEngine:
                 out.append(jnp.where(m, n, o))
             return jax.tree_util.tree_unflatten(tdef, out)
 
+        fused = self.fused_decode
+
         def decode(params, state, tokens, mask):
             self.trace_counts["decode"] += 1   # increments only on trace
-            logits, new_state = model.decode_step(
-                maybe_unpack(params), state, tokens, jnp.int32(0))
+            if fused:
+                # single-launch block kernel; packed Δ-PoT leaves pass
+                # through whole and decode inside the launch
+                logits, new_state = model.decode_step_fused(
+                    params, state, tokens, jnp.int32(0))
+            else:
+                logits, new_state = model.decode_step(
+                    maybe_unpack(params), state, tokens, jnp.int32(0))
             return logits, masked(new_state, state, mask)
 
         # logits shape/dtype for the scan carry, without running anything

@@ -1,0 +1,71 @@
+"""Docs consistency check (CI gate; see .github/workflows/ci.yml).
+
+Two invariants keep the paper-to-code map (docs/kernels.md) from rotting:
+
+  1. every module under src/repro/ has a module docstring — the map's
+     per-file "what is this" always has a source-side anchor;
+  2. every .py/.md file referenced from docs/*.md or README.md exists —
+     a renamed or deleted file breaks CI, not the reader.
+
+Path references are taken from inline code spans and link targets; a
+reference may be repo-root-relative (src/repro/kernels/wkv4.py,
+docs/serving.md), src/repro-relative (kernels/wkv4.py — the README module
+map's convention), or a bare docs page name (serving.md).
+
+Run: python tools/check_docs.py   (exits non-zero on any violation)
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# path-looking tokens ending in .py or .md (inside backticks or link urls)
+_REF = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md)\b")
+
+
+def missing_docstrings() -> list[str]:
+    out = []
+    for py in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        tree = ast.parse(py.read_text(), filename=str(py))
+        if ast.get_docstring(tree) is None:
+            out.append(str(py.relative_to(ROOT)))
+    return out
+
+
+def _resolves(ref: str) -> bool:
+    candidates = [ROOT / ref, ROOT / "src" / "repro" / ref,
+                  ROOT / "docs" / ref]
+    return any(c.is_file() for c in candidates)
+
+
+def broken_references() -> list[str]:
+    docs = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    out = []
+    for doc in docs:
+        for ref in sorted(set(_REF.findall(doc.read_text()))):
+            if not _resolves(ref):
+                out.append(f"{doc.relative_to(ROOT)} -> {ref}")
+    return out
+
+
+def main() -> int:
+    nodoc = missing_docstrings()
+    broken = broken_references()
+    for path in nodoc:
+        print(f"missing module docstring: {path}")
+    for ref in broken:
+        print(f"broken file reference: {ref}")
+    if nodoc or broken:
+        print(f"\ncheck_docs: FAIL ({len(nodoc)} missing docstrings, "
+              f"{len(broken)} broken references)")
+        return 1
+    print("check_docs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
