@@ -1,6 +1,7 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities: timing, CSV emission, BENCH_*.json records."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -21,5 +22,23 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def tokens_per_s(step_fn, batch: int, *, warmup: int = 1,
+                 iters: int = 5) -> float:
+    """Median decode throughput (tokens/s) of a state-carrying step closure:
+    `step_fn()` advances `batch` sequences by one token and is timed with
+    `time_call`, so every decode benchmark shares one warmup/median policy."""
+    return batch * 1e6 / max(time_call(step_fn, warmup=warmup, iters=iters),
+                             1e-9)
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Persist one benchmark's machine-readable record (a BENCH_*.json at
+    the repo root) so the perf trajectory is diffable across PRs."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)

@@ -12,14 +12,17 @@ API:
   pack_params(params)          -> packed tree (+ additive leaves cast bf16)
   unpack_params(packed)        -> compute tree (call inside jit)
   unpack_leaf(leaf)            -> decode ONE packed leaf (shared by the
-                                 fused decode kernel so in-kernel decode is
+                                 fused decode kernels so in-kernel decode is
                                  bit-identical to the per-op path)
+  broadcast_packed_scales(t,L) -> make stacked packed leaves layer-sliceable
+                                 (scan / per-block kernel operands)
   cast_compute(tree, dtype)    -> packed-aware compute-dtype cast
   packed_abstract(spec)        -> ShapeDtypeStruct tree (dry-run input)
   packed_axes(spec_axes)       -> logical-sharding tree for the packed form
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -69,10 +72,142 @@ def unpack_leaf(leaf):
     return (sign * lvl * leaf["scale"]).astype(jnp.bfloat16)
 
 
+def broadcast_packed_scales(blocks, n_layers: int):
+    """Make a packed stacked-blocks tree sliceable along the layer axis.
+
+    `pack_params` gives a stacked weight (L, ...) one shared scale with a
+    broadcast leading 1 (e.g. (1, 1, D)); consumers that *slice* the tree
+    per layer — `lax.scan` over blocks, or the per-block fused kernel's
+    scanned operands — need every leaf to carry the L axis, so the scale is
+    broadcast to (L, ...) here.  The per-layer slice then multiplies
+    element-for-element exactly as the whole-tree broadcast would, keeping
+    the decode bit-identical.  The whole-model megakernel does NOT need
+    this: `kernels.fused_decode.fused_model_decode` recognizes leading-1
+    leaves and streams them with a constant index map instead (the shared
+    scale stays resident while the uint8 codes are layer-sliced in-kernel).
+    """
+    def fix(leaf):
+        if not is_packed_leaf(leaf):
+            return leaf
+        scale = leaf["scale"]
+        return {"packed": leaf["packed"],
+                "scale": jnp.broadcast_to(
+                    scale, (n_layers,) + tuple(scale.shape[1:]))}
+    return jax.tree_util.tree_map(fix, blocks, is_leaf=is_packed_leaf)
+
+
 def unpack_params(packed):
     """Packed tree -> bf16 compute tree.  Runs inside jit: the uint8 codes
     are what crosses HBM; the exp2 decode fuses into the matmul."""
     return jax.tree_util.tree_map(unpack_leaf, packed, is_leaf=_is_packed)
+
+
+# ---------------------------------------------------------------------------
+# Fused layer stack: per-layer weights as ONE contiguous chunk per layer
+# ---------------------------------------------------------------------------
+#
+# The paper's weight stream (§4.2) is chunked: the accelerator fetches each
+# layer's weights as one contiguous block and double-buffers the next
+# layer's chunk behind the current layer's compute.  `fuse_layer_stack`
+# realizes that layout on the host — every stacked (L, ...) leaf of a
+# block tree is flattened into a per-dtype (L, N) slab (uint8 Δ-PoT code
+# planes and bf16 weights each get their own slab), while broadcast
+# leading-1 leaves (shared packed scales, LUT tables) stay separate as
+# resident operands.  The whole-model decode megakernel
+# (`kernels.fused_decode.fused_model_decode`) then fetches layer l as one
+# slab row per dtype and re-materializes the per-layer tree with STATIC
+# slices inside the kernel (`unfuse_layer`) — stacked packed-leaf slicing
+# inside the kernel, one memory stream per layer instead of one gather per
+# leaf.  Packing reshapes and concatenates only, so the decoded weights
+# are bit-identical to the unfused tree.
+
+
+@jax.tree_util.register_pytree_node_class
+class FusedLayerStack:
+    """A stacked per-layer parameter tree in chunked-stream form.
+
+    slabs    — {dtype name: (L, N) array}: layer l's weights of that dtype,
+               contiguous.
+    aux      — tuple of broadcast leading-1 leaves kept out of the slabs
+               (shared Δ-PoT scales, LUT tables): VMEM-resident operands.
+    manifest — static per-leaf recipe aligned with the original tree's
+               flatten order: ("slab", dtype, offset, per-layer shape) or
+               ("aux", index).
+    tdef     — the original tree's treedef (packed {"packed","scale"}
+               dicts reassemble automatically).
+    """
+
+    def __init__(self, slabs, aux, manifest, tdef):
+        self.slabs = dict(slabs)
+        self.aux = tuple(aux)
+        self.manifest = tuple(manifest)
+        self.tdef = tdef
+
+    @property
+    def n_layers(self) -> int:
+        return next(iter(self.slabs.values())).shape[0]
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.slabs))
+        children = tuple(self.slabs[k] for k in keys) + self.aux
+        return children, (keys, len(self.aux), self.manifest, self.tdef)
+
+    @classmethod
+    def tree_unflatten(cls, static, children):
+        keys, n_aux, manifest, tdef = static
+        slabs = dict(zip(keys, children[:len(keys)]))
+        aux = children[len(keys):len(keys) + n_aux]
+        return cls(slabs, aux, manifest, tdef)
+
+
+def fuse_layer_stack(blocks, n_layers: int) -> FusedLayerStack:
+    """Pack a stacked per-layer block tree into per-dtype (L, N) slabs.
+
+    Values are only reshaped/concatenated, never converted — unfusing is
+    bit-identical.  Do this ONCE outside the decode step (the serving
+    engine and `Model.prepare_fused_model_params` do): repacking inside a
+    jitted step would copy every weight per token."""
+    flat, tdef = jax.tree_util.tree_flatten(blocks)
+    manifest, aux, parts, offs = [], [], {}, {}
+    for leaf in flat:
+        if leaf.ndim and leaf.shape[0] == n_layers:
+            key = jnp.dtype(leaf.dtype).name
+            shape = tuple(leaf.shape[1:])
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            manifest.append(("slab", key, offs.get(key, 0), shape))
+            parts.setdefault(key, []).append(
+                jnp.reshape(leaf, (n_layers, n)))
+            offs[key] = offs.get(key, 0) + n
+        elif leaf.ndim and leaf.shape[0] == 1:
+            manifest.append(("aux", len(aux)))
+            aux.append(leaf)
+        else:
+            raise ValueError(
+                f"per-layer leaf has shape {getattr(leaf, 'shape', None)}; "
+                f"expected a leading axis of {n_layers} (stacked) or 1 "
+                "(broadcast)")
+    slabs = {k: (jnp.concatenate(v, axis=1) if len(v) > 1 else v[0])
+             for k, v in parts.items()}
+    return FusedLayerStack(slabs, aux, manifest, tdef)
+
+
+def unfuse_layer(rows, aux_vals, manifest, tdef):
+    """Rebuild ONE layer's parameter tree from its slab rows.
+
+    rows     — {dtype name: (N,) slab row for layer l} (or abstract).
+    aux_vals — broadcast leaves with the leading 1 squeezed.
+    All slices are STATIC (offsets come from the manifest), so inside a
+    kernel this compiles to views feeding the consumers — the only
+    per-layer memory stream is the slab row fetch itself."""
+    leaves = []
+    for entry in manifest:
+        if entry[0] == "slab":
+            _, key, off, shape = entry
+            n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            leaves.append(rows[key][off:off + n].reshape(shape))
+        else:
+            leaves.append(aux_vals[entry[1]])
+    return jax.tree_util.tree_unflatten(tdef, leaves)
 
 
 def cast_compute(tree, dtype):

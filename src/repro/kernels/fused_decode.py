@@ -1,4 +1,16 @@
-"""Pallas kernel: one FULL RWKV block decode step in a single launch.
+"""Pallas kernels: RWKV decode steps fused into single launches.
+
+Two granularities, both built on the same caller-supplied block function:
+
+  * `fused_block_decode` — one FULL RWKV block decode step per launch
+    (PR 2; a model decode step issues L of these under `lax.scan`);
+  * `fused_model_decode` — the WHOLE-MODEL megakernel: ONE launch whose
+    grid iterates over layers, with the residual stream carried in VMEM
+    scratch across grid steps and each layer's weights streamed via
+    layer-indexed BlockSpecs, so the Pallas grid pipeline double-buffers
+    layer l+1's weight tiles behind layer l's compute — the paper's
+    chunked double buffering (§4.2), made literal.
+
 
 This is the repo's analogue of the paper's fully on-chip datapath (§4):
 HFRWKV's central claim is that one token flows matrix-vector array ->
@@ -36,32 +48,17 @@ mode where VMEM is not modelled).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.serving import is_packed_leaf
+from jax.experimental.pallas import tpu as pltpu
+
+# broadcast_packed_scales and the chunked-stream slab form live with the
+# quant format; re-exported here as part of this kernel's operand contract.
+from repro.core.quant.serving import (   # noqa: F401  (re-export)
+    FusedLayerStack, broadcast_packed_scales, fuse_layer_stack,
+    is_packed_leaf, unfuse_layer)
 from repro.kernels.common import interpret_default
-
-
-def broadcast_packed_scales(blocks, n_layers: int):
-    """Make a packed stacked-blocks tree scannable over the layer axis.
-
-    `pack_params` gives a stacked weight (L, ...) one shared scale with a
-    broadcast leading 1 (e.g. (1, 1, D)); `lax.scan` needs every xs leaf to
-    carry the L axis, so the scale is broadcast to (L, ...) here.  The
-    per-layer slice then multiplies element-for-element exactly as the
-    whole-tree broadcast would, keeping the decode bit-identical."""
-    def fix(leaf):
-        if not is_packed_leaf(leaf):
-            return leaf
-        scale = leaf["scale"]
-        return {"packed": leaf["packed"],
-                "scale": jnp.broadcast_to(
-                    scale, (n_layers,) + tuple(scale.shape[1:]))}
-    return jax.tree_util.tree_map(fix, blocks, is_leaf=is_packed_leaf)
 
 
 def _const_spec(shape):
@@ -133,6 +130,265 @@ def fused_block_decode(block_fn, x, lp, st, *, bb: int | None = None,
         out_shape=out_shape,
         interpret=interpret_default(interpret),
     )(x, *lp_leaves, *st_leaves)
+    x2 = outs[0]
+    new_st = jax.tree_util.tree_unflatten(new_st_tdef, list(outs[1:]))
+    return x2, new_st
+
+
+# ---------------------------------------------------------------------------
+# Whole-model megakernel: the layer stack as ONE launch, grid over layers
+# ---------------------------------------------------------------------------
+
+
+def _stacked_layer_spec(shape, n_layers: int):
+    """BlockSpec for a stacked (L, ...) per-layer operand: grid step (i, l)
+    fetches layer l's slice.  A leading-1 leaf (a shared Δ-PoT scale from
+    `pack_params`, or a broadcast LUT) gets a CONSTANT index map instead:
+    the grid pipeline then keeps that tile resident across all layers while
+    only the layer-indexed leaves (the uint8 code planes) are re-streamed —
+    stacked packed-leaf slicing without materializing L scale copies."""
+    nd = len(shape)
+    block = (1,) + tuple(shape[1:])
+    if shape[0] == n_layers:
+        return pl.BlockSpec(block, lambda i, l, _nd=nd: (l,) + (0,) * (_nd - 1))
+    if shape[0] == 1:
+        return pl.BlockSpec(block, lambda i, l, _nd=nd: (0,) * _nd)
+    raise ValueError(
+        f"stacked per-layer leaf has leading dim {shape[0]}, "
+        f"expected n_layers={n_layers} or 1 (broadcast)")
+
+
+def _stacked_state_spec(shape, bb: int):
+    """BlockSpec for a stacked (L, B, ...) state operand: grid step (i, l)
+    addresses layer l's slice of batch tile i."""
+    nd = len(shape)
+    return pl.BlockSpec((1, bb) + tuple(shape[2:]),
+                        lambda i, l, _nd=nd: (l, i) + (0,) * (_nd - 2))
+
+
+def _state_tile_spec(shape, bb: int):
+    """BlockSpec for a stacked (L, B, ...) state operand blocked over batch
+    tiles only (the resident megakernel's 1-D grid): the kernel sees all L
+    layers of its tile and indexes the layer axis itself.  Its siblings
+    `_batch_spec`/`_const_spec` (above) cover the batch-tiled and
+    whole-bound operands of the same grid."""
+    nd = len(shape)
+    return pl.BlockSpec((shape[0], bb) + tuple(shape[2:]),
+                        lambda i, _nd=nd: (0, i) + (0,) * (_nd - 2))
+
+
+def fused_model_decode(block_fn, x, blocks, state, *, bb: int | None = None,
+                       weights: str | None = None,
+                       interpret: bool | None = None):
+    """Run the ENTIRE stacked-layer decode step as ONE Pallas launch.
+
+    Where `fused_block_decode` fuses one layer (a model step is still L
+    launches under `lax.scan`, bouncing the residual and recurrent state
+    through HBM between every pair), this megakernel runs the whole stack
+    in one launch: the residual never touches HBM between layers, each
+    layer's state slice is read and written exactly once, and only the
+    final residual leaves the kernel.  Two execution structures, selected
+    by `weights` (same math, same bits — pinned against each other and the
+    per-op oracle in tests/test_fused_decode.py):
+
+      * "stream" (default on TPU) — grid = (B // bb, L), layer axis
+        innermost.  Layer-indexed BlockSpec index maps fetch layer l's
+        weight tiles from the stacked (L, ...) operands at grid step
+        (i, l); the Pallas grid pipeline prefetches step (i, l+1)'s tiles
+        while step (i, l) computes — the paper's chunked double buffering
+        of the weight stream (§4.2), for models whose full weights exceed
+        VMEM.  Δ-PoT leaves stream as uint8 code planes; their shared
+        scales ride a constant index map and stay resident.  The residual
+        is carried across grid steps in a VMEM scratch buffer, initialized
+        from `x` at l == 0 (TPU grids execute sequentially on a core,
+        which is what makes the carry well-defined; interpret mode
+        preserves the same semantics).
+      * "resident" (default off-TPU) — grid = (B // bb,): stacked weights
+        bind whole under constant index maps and the kernel unrolls the
+        layer loop in-body with static layer indices — the paper's
+        fully-on-chip regime for models that fit VMEM outright (§4.1 —
+        nothing to double-buffer when nothing re-streams).  Off-TPU this
+        is also much faster to execute: the interpreter re-materializes
+        every layer-blocked operand once per grid step (a full-buffer
+        write-back copy per layer, per operand), while constant maps and
+        static slices compile to straight-line code.
+
+    Both structures are pinned bit-identical to each other and to the
+    per-op oracle in tests/test_fused_decode.py — the stream structure is
+    exercised off-TPU by passing `weights="stream"` explicitly (interpret
+    mode runs its grid sequentially with the same carry semantics).
+
+    In BOTH structures the weight stream is chunked
+    (`core.quant.serving.fuse_layer_stack`): layer l's weights arrive as
+    one contiguous (1, N) slab row per dtype — uint8 Δ-PoT code plane,
+    bf16 plane — and the per-layer tree is rebuilt in-kernel with STATIC
+    slices (`unfuse_layer`), so each layer costs one memory stream per
+    dtype instead of one gather per leaf.  Broadcast leading-1 leaves
+    (shared packed scales, LUT tables) ride constant index maps and stay
+    resident across the whole launch.
+
+    block_fn — per-layer decode step `(lp, st, x) -> (x2, new_st)`, traced
+               inside the kernel; `lp`/`st` arrive with the layer axis
+               squeezed (exactly the slices `lax.scan` would feed it).
+    x        — (B, D) residual entering the stack.
+    blocks   — stacked per-layer parameter tree (every array leaf carries
+               the layer axis (L, ...) or a broadcast leading 1; packed
+               Δ-PoT `{"packed", "scale"}` dicts may appear as-is — no
+               `broadcast_packed_scales` needed on this path), or an
+               already-chunked `FusedLayerStack`.  Raw trees are chunked
+               on entry, which repacks the weights EVERY call — serving
+               paths should pre-fuse once
+               (`Model.prepare_fused_model_params`; the engine does).
+    state    — stacked per-layer state tree; leaves are (L, B, ...).
+    bb       — batch tile; defaults to the whole batch (serving pools are
+               small; weights are fetched once per tile, so bb=B minimizes
+               the weight traffic).  Tiling is bit-transparent for any
+               block_fn whose math is per-example; rwkv4's hw numerics are
+               not (the A9 activation fake-quant scales over the whole
+               batch), so hw parity requires bb=B.
+    """
+    B = x.shape[0]
+    bb = B if bb is None else min(int(bb), B)
+    if B % bb:
+        raise ValueError(f"batch {B} not divisible by batch tile {bb}")
+    interpret = interpret_default(interpret)
+    weights = ("resident" if interpret else "stream") \
+        if weights is None else weights
+    if weights not in ("stream", "resident"):
+        raise ValueError(f"weights={weights!r}: expected 'stream' or "
+                         "'resident'")
+
+    st_leaves, st_tdef = jax.tree_util.tree_flatten(state)
+    if not st_leaves:
+        raise ValueError("state tree is empty — need (L, B, ...) leaves")
+    n_layers = st_leaves[0].shape[0]
+    n_st = len(st_leaves)
+
+    # Chunk the weight stream: per-dtype (L, N) slabs so layer l is ONE
+    # contiguous fetch per dtype (uint8 code plane / bf16 plane), unpacked
+    # in-kernel with static slices.  Callers on a hot path pre-fuse (the
+    # engine / Model.prepare_fused_model_params); raw trees are fused here
+    # for convenience, which repacks the weights on every call.
+    if not isinstance(blocks, FusedLayerStack):
+        blocks = fuse_layer_stack(blocks, n_layers)
+    if blocks.n_layers != n_layers:
+        raise ValueError(f"weight stack has {blocks.n_layers} layers, "
+                         f"state has {n_layers}")
+    slab_keys = tuple(sorted(blocks.slabs))
+    slab_leaves = [blocks.slabs[k] for k in slab_keys]
+    aux_leaves = list(blocks.aux)
+    manifest, bl_tdef = blocks.manifest, blocks.tdef
+    n_sl, n_aux = len(slab_leaves), len(aux_leaves)
+    n_bl = n_sl + n_aux
+
+    # Per-layer output shapes/dtypes from the block function itself, so the
+    # kernel signature tracks any model's state layout automatically.
+    lp0 = jax.eval_shape(
+        lambda rows, aux: unfuse_layer(rows, aux, manifest, bl_tdef),
+        {k: jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+         for k, a in zip(slab_keys, slab_leaves)},
+        [jax.ShapeDtypeStruct(a.shape[1:], a.dtype) for a in aux_leaves])
+    st0 = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct((bb,) + a.shape[2:], a.dtype), state)
+    x0 = jax.ShapeDtypeStruct((bb,) + x.shape[1:], x.dtype)
+    x2_ab, new_st_ab = jax.eval_shape(block_fn, lp0, st0, x0)
+    new_st_leaves_ab, new_st_tdef = jax.tree_util.tree_flatten(new_st_ab)
+
+    out_shape = (
+        [jax.ShapeDtypeStruct((B,) + tuple(x2_ab.shape[1:]), x2_ab.dtype)] +
+        [jax.ShapeDtypeStruct((n_layers, B) + tuple(a.shape[1:]), a.dtype)
+         for a in new_st_leaves_ab])
+
+    def layer_params(rows, aux_vals):
+        return unfuse_layer(dict(zip(slab_keys, rows)), aux_vals,
+                            manifest, bl_tdef)
+
+    if weights == "stream":
+        # -- grid over (batch tile, layer); residual carried in scratch --
+        def kernel(*refs):
+            in_refs = refs[:1 + n_bl + n_st]
+            out_refs = refs[1 + n_bl + n_st:-1]
+            x_scr = refs[-1]
+            l = pl.program_id(1)
+
+            @pl.when(l == 0)
+            def _load_residual():   # new batch tile: residual enters once
+                x_scr[...] = in_refs[0][...].astype(x_scr.dtype)
+
+            lp = layer_params(
+                [r[...][0] for r in in_refs[1:1 + n_sl]],
+                [r[...][0] for r in in_refs[1 + n_sl:1 + n_bl]])
+            st = jax.tree_util.tree_unflatten(
+                st_tdef, [r[...][0] for r in in_refs[1 + n_bl:]])
+            x2, new_st = block_fn(lp, st, x_scr[...])
+            x_scr[...] = x2.astype(x_scr.dtype)
+            out_refs[0][...] = x2.astype(out_refs[0].dtype)
+            for ref, leaf in zip(out_refs[1:],
+                                 jax.tree_util.tree_leaves(new_st)):
+                ref[...] = leaf[None]
+
+        in_specs = (
+            [pl.BlockSpec((bb,) + tuple(x.shape[1:]),
+                          lambda i, l, _nd=x.ndim:
+                          (i,) + (0,) * (_nd - 1))] +
+            [_stacked_layer_spec(a.shape, n_layers) for a in slab_leaves] +
+            [_stacked_layer_spec(a.shape, n_layers) for a in aux_leaves] +
+            [_stacked_state_spec(a.shape, bb) for a in st_leaves])
+        out_specs = (
+            [pl.BlockSpec((bb,) + tuple(x2_ab.shape[1:]),
+                          lambda i, l, _nd=x2_ab.ndim:
+                          (i,) + (0,) * (_nd - 1))] +
+            [_stacked_state_spec((n_layers, B) + tuple(a.shape[1:]), bb)
+             for a in new_st_leaves_ab])
+        grid = (B // bb, n_layers)
+        scratch = [pltpu.VMEM((bb,) + tuple(x2_ab.shape[1:]), x2_ab.dtype)]
+    else:
+        # -- grid over batch tiles only; the layer loop runs IN-body as a
+        # fori_loop whose only carry is the residual: the whole-bound slab
+        # refs are loop-invariant captures, each iteration fetches layer
+        # l's slab row (one contiguous stream per dtype), rebuilds the
+        # layer tree with static slices, and writes layer l's fresh state
+        # in place --
+        def kernel(*refs):
+            in_refs = refs[:1 + n_bl + n_st]
+            out_refs = refs[1 + n_bl + n_st:]
+
+            def body(l, xx):
+                lp = layer_params(
+                    [r[l] for r in in_refs[1:1 + n_sl]],
+                    [r[0] for r in in_refs[1 + n_sl:1 + n_bl]])
+                st = jax.tree_util.tree_unflatten(
+                    st_tdef, [r[l] for r in in_refs[1 + n_bl:]])
+                x2, new_st = block_fn(lp, st, xx)
+                for ref, leaf in zip(out_refs[1:],
+                                     jax.tree_util.tree_leaves(new_st)):
+                    ref[l] = leaf
+                return x2.astype(xx.dtype)
+
+            xx = jax.lax.fori_loop(0, n_layers, body, in_refs[0][...])
+            out_refs[0][...] = xx.astype(out_refs[0].dtype)
+
+        in_specs = (
+            [_batch_spec(x.shape, bb)] +
+            [_const_spec(a.shape) for a in slab_leaves] +
+            [_const_spec(a.shape) for a in aux_leaves] +
+            [_state_tile_spec(a.shape, bb) for a in st_leaves])
+        out_specs = (
+            [_batch_spec((B,) + tuple(x2_ab.shape[1:]), bb)] +
+            [_state_tile_spec((n_layers, B) + tuple(a.shape[1:]), bb)
+             for a in new_st_leaves_ab])
+        grid = (B // bb,)
+        scratch = []
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,   # resolved above (weights default needs it)
+    )(x, *slab_leaves, *aux_leaves, *st_leaves)
     x2 = outs[0]
     new_st = jax.tree_util.tree_unflatten(new_st_tdef, list(outs[1:]))
     return x2, new_st

@@ -6,7 +6,12 @@ batched decode, and the run ends with a telemetry snapshot (tokens/s,
 TTFT, latency) from `runtime.monitor.ServingCounters`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m --smoke \
-        --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16]
+        --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16] \
+        [--fused[=block|model]]
+
+`--fused block` decodes through the per-block fused Pallas kernel (one
+launch per layer); `--fused model` through the whole-model megakernel
+(ONE launch per decode step, grid over layers — see docs/kernels.md).
 
 `--legacy` keeps the seed behavior — one jitted decode_step in a
 single-batch host loop — and is also the reference baseline for
@@ -113,15 +118,15 @@ def serve_legacy(arch: str, *, smoke: bool = True, batch: int = 4,
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           n_tokens: int = 32, quantized: bool = False, seed: int = 0,
           prefill_chunk: int = 16, prompt_len: int = 8,
-          temperature: float = 0.0, fused: bool = False):
+          temperature: float = 0.0, fused: bool | str | None = False):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles."""
     from repro.serving import ServingEngine
 
     engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
                            prefill_chunk=prefill_chunk,
-                           quantized=quantized, fused_decode=fused,
-                           seed=seed)
+                           quantized=quantized,
+                           fused_decode=fused or False, seed=seed)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
     handles = [
@@ -150,9 +155,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quantized", action="store_true")
-    ap.add_argument("--fused", action="store_true",
-                    help="decode through the single-launch fused block "
-                         "kernel (kernels/fused_decode.py)")
+    ap.add_argument("--fused", nargs="?", const="block", default=None,
+                    choices=["block", "model"],
+                    help="fused decode granularity: 'block' (one Pallas "
+                         "launch per block; bare --fused keeps the PR 2 "
+                         "meaning) or 'model' (the whole-model megakernel "
+                         "— ONE launch per decode step; "
+                         "kernels/fused_decode.py)")
     ap.add_argument("--legacy", action="store_true",
                     help="seed single-loop decode instead of the engine")
     ap.add_argument("--hw-numerics", action="store_true",

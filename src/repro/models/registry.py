@@ -111,6 +111,31 @@ class Model:
         return self.module.decode_step_fused(params, state, tokens, pos,
                                              self.cfg)
 
+    @property
+    def has_fused_model_decode(self) -> bool:
+        """True when the model ships the whole-model megakernel
+        (`decode_step_fused_model`): ONE Pallas launch per decode step,
+        grid over layers, residual carried in VMEM scratch."""
+        return hasattr(self.module, "decode_step_fused_model")
+
+    def decode_step_fused_model(self, params, state, tokens, pos):
+        """Megakernel decode (kernels.fused_decode.fused_model_decode):
+        the entire layer stack in one launch.  Params pass through UNcast,
+        as in `decode_step_fused` — or pre-prepared via
+        `prepare_fused_model_params` (the serving hot path)."""
+        return self.module.decode_step_fused_model(params, state, tokens,
+                                                   pos, self.cfg)
+
+    def prepare_fused_model_params(self, params, **kw):
+        """One-time host-side prep for the megakernel: compute-dtype cast +
+        per-layer weight chunking (core.quant.serving.fuse_layer_stack).
+        Run OUTSIDE the step; the result feeds decode_step_fused_model
+        without per-token repacking.  `kw` forwards model extras (rwkv4:
+        `hw=True` attaches the LUT operands — the decode's `hw` flag must
+        match the prepared form)."""
+        return self.module.prepare_fused_model_params(params, self.cfg,
+                                                      **kw)
+
     # -- per-slot decode-state contract (serving engine) -------------------
     @property
     def position_free_decode(self) -> bool:

@@ -253,6 +253,37 @@ def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
     return logits, new_state
 
 
+def _fused_kernel_block(cfg: ModelConfig, nm, dt):
+    """Per-layer body traced INSIDE a fused Pallas launch (shared by the
+    per-block kernel and the whole-model megakernel): pops the optional LUT
+    operands (hw numerics needs the tables as explicit VMEM inputs),
+    decodes packed Δ-PoT leaves in-VMEM, then runs the same `block_decode`
+    the per-op oracle uses."""
+    from repro.core.quant.serving import is_packed_leaf, unpack_leaf
+
+    def kernel_block(lp, st, xx):
+        lp = dict(lp)
+        luts = lp.pop("_luts", None)
+        nm_k = nm if luts is None else _hw_numerics_with_tables(
+            luts["exp"], luts["div"])
+        lp = jax.tree_util.tree_map(
+            lambda l: unpack_leaf(l).astype(dt) if is_packed_leaf(l) else l,
+            lp, is_leaf=is_packed_leaf)
+        return block_decode(lp, st, xx, cfg, nm_k)
+    return kernel_block
+
+
+def _lut_operands(n_layers: int):
+    """The EXP/DIV fraction tables as stacked kernel operands: (L, 256)
+    broadcast views — a scan (or layer-indexed BlockSpec) slices one (256,)
+    copy per layer; a leading-1 form stays resident under the megakernel's
+    constant index map."""
+    from repro.core.approx.units import DIV_LUT_TABLE, EXP_LUT_TABLE
+    tab = lambda t: jnp.broadcast_to(
+        jnp.asarray(np.reshape(t, -1), jnp.float32), (n_layers, 256))
+    return {"exp": tab(EXP_LUT_TABLE), "div": tab(DIV_LUT_TABLE)}
+
+
 def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
                       hw: bool = False, interpret: bool | None = None):
     """Fused-kernel decode: same math as `decode_step`, but each block runs
@@ -266,33 +297,18 @@ def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
     del pos
     from repro.core.quant.serving import cast_compute, unpack_leaf
     from repro.kernels.fused_decode import (
-        broadcast_packed_scales, fused_block_decode, is_packed_leaf)
+        broadcast_packed_scales, fused_block_decode)
     nm = _numerics(hw)
     dt = jnp.dtype(cfg.dtype)
     params = cast_compute(params, dt)
     x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)
     x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
 
-    def kernel_block(lp, st, xx):
-        # traced INSIDE the pallas kernel: packed weights decode in-VMEM
-        lp = dict(lp)
-        luts = lp.pop("_luts", None)
-        nm_k = nm if luts is None else _hw_numerics_with_tables(
-            luts["exp"], luts["div"])
-        lp = jax.tree_util.tree_map(
-            lambda l: unpack_leaf(l).astype(dt) if is_packed_leaf(l) else l,
-            lp, is_leaf=is_packed_leaf)
-        return block_decode(lp, st, xx, cfg, nm_k)
-
+    kernel_block = _fused_kernel_block(cfg, nm, dt)
     blocks = broadcast_packed_scales(params["blocks"], cfg.n_layers)
     if hw:
         # LUTs as scanned operands (per-layer slices are identical views)
-        from repro.core.approx.units import DIV_LUT_TABLE, EXP_LUT_TABLE
-        tab = lambda t: jnp.broadcast_to(
-            jnp.asarray(np.reshape(t, -1), jnp.float32),
-            (cfg.n_layers, 256))
-        blocks = {**blocks, "_luts": {"exp": tab(EXP_LUT_TABLE),
-                                      "div": tab(DIV_LUT_TABLE)}}
+        blocks = {**blocks, "_luts": _lut_operands(cfg.n_layers)}
 
     def body(x, xs):
         lp, st = xs
@@ -300,6 +316,79 @@ def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
                                   interpret=interpret)
 
     x, new_state = jax.lax.scan(body, x, (blocks, state))
+    x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
+    logits = x @ unpack_leaf(params["head"]).astype(x.dtype)
+    return logits, new_state
+
+
+def prepare_fused_model_params(params, cfg: ModelConfig, *,
+                               hw: bool = False):
+    """One-time host-side prep for the megakernel serving path: apply the
+    packed-aware compute cast, attach the hw LUT operands when requested,
+    and chunk the stacked per-layer weights into per-dtype contiguous
+    slabs (`core.quant.serving.fuse_layer_stack`) — the paper's per-layer
+    weight chunk, fetched as ONE stream per layer instead of one gather
+    per leaf.  `decode_step_fused_model` accepts the result directly; raw
+    trees also work but repack the slab every step."""
+    from repro.core.quant.serving import cast_compute, fuse_layer_stack
+    params = cast_compute(params, jnp.dtype(cfg.dtype))
+    blocks = params["blocks"]
+    if hw:
+        blocks = {**blocks, "_luts": _lut_operands(1)}
+    return {**params, "blocks": fuse_layer_stack(blocks, cfg.n_layers)}
+
+
+def _stack_has_luts(stack) -> bool:
+    """Whether a prepared FusedLayerStack was built with the hw LUT
+    operands attached (prepare_fused_model_params(hw=True))."""
+    probe = jax.tree_util.tree_unflatten(
+        stack.tdef, [None] * stack.tdef.num_leaves)
+    return "_luts" in probe
+
+
+def decode_step_fused_model(params, state, tokens, pos, cfg: ModelConfig, *,
+                            hw: bool = False, bb: int | None = None,
+                            weights: str | None = None,
+                            interpret: bool | None = None):
+    """Megakernel decode: the ENTIRE layer stack as ONE Pallas launch
+    (`kernels.fused_decode.fused_model_decode`).  Where `decode_step_fused`
+    still issues L launches under `lax.scan` — the residual and each
+    layer's state round-tripping HBM between them — here the whole stack
+    runs in one launch: the residual stays on-chip across layers, and each
+    layer's weights arrive as one contiguous chunk per dtype (uint8 Δ-PoT
+    code planes when packed), double-buffered behind the previous layer's
+    compute in the streaming binding, while shared packed scales / hw LUTs
+    stay VMEM-resident under constant index maps.  Same `block_decode`
+    body, so bit-identical to the per-op oracle
+    (tests/test_fused_decode.py).  `params` may be a plain tree or the
+    output of `prepare_fused_model_params` (pre-cast, weights pre-chunked
+    — the serving path)."""
+    del pos
+    from repro.core.quant.serving import (
+        FusedLayerStack, cast_compute, unpack_leaf)
+    from repro.kernels.fused_decode import fused_model_decode
+    nm = _numerics(hw)
+    dt = jnp.dtype(cfg.dtype)
+    prepared = isinstance(params.get("blocks"), FusedLayerStack)
+    if prepared and _stack_has_luts(params["blocks"]) != hw:
+        raise ValueError(
+            f"prepared params were built with hw={not hw} but decode was "
+            f"called with hw={hw}; rebuild them via "
+            "prepare_fused_model_params(params, hw=...) — without the LUT "
+            "operands the hw numerics would capture the tables as kernel "
+            "constants, which Pallas cannot lower")
+    if not prepared:
+        params = cast_compute(params, dt)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)
+    x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
+
+    blocks = params["blocks"]   # packed scales keep their broadcast form
+    if hw and not prepared:
+        luts = _lut_operands(1)   # leading-1: resident across the grid
+        blocks = {**blocks, "_luts": luts}
+    x, new_state = fused_model_decode(
+        _fused_kernel_block(cfg, nm, dt), x, blocks, state, bb=bb,
+        weights=weights, interpret=interpret)
     x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
     logits = x @ unpack_leaf(params["head"]).astype(x.dtype)
     return logits, new_state

@@ -257,6 +257,21 @@ def decode_step(params, state, tokens, pos, cfg: ModelConfig):
     return logits, new_state
 
 
+def _fused_kernel_block(cfg: ModelConfig, dt):
+    """Per-layer body traced INSIDE a fused Pallas launch (shared by the
+    per-block kernel and the whole-model megakernel): decodes packed Δ-PoT
+    leaves in-VMEM, then runs the same `block_decode` the per-op oracle
+    uses."""
+    from repro.core.quant.serving import is_packed_leaf, unpack_leaf
+
+    def kernel_block(lp, st, xx):
+        lp = jax.tree_util.tree_map(
+            lambda l: unpack_leaf(l).astype(dt) if is_packed_leaf(l) else l,
+            lp, is_leaf=is_packed_leaf)
+        return block_decode(lp, st, xx, cfg)
+    return kernel_block
+
+
 def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
                       interpret: bool | None = None):
     """Fused-kernel decode: same math as `decode_step`, but each block runs
@@ -267,19 +282,13 @@ def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
     del pos
     from repro.core.quant.serving import cast_compute, unpack_leaf
     from repro.kernels.fused_decode import (
-        broadcast_packed_scales, fused_block_decode, is_packed_leaf)
+        broadcast_packed_scales, fused_block_decode)
     dt = jnp.dtype(cfg.dtype)
     params = cast_compute(params, dt)
     x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)
     x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
 
-    def kernel_block(lp, st, xx):
-        # traced INSIDE the pallas kernel: packed weights decode in-VMEM
-        lp = jax.tree_util.tree_map(
-            lambda l: unpack_leaf(l).astype(dt) if is_packed_leaf(l) else l,
-            lp, is_leaf=is_packed_leaf)
-        return block_decode(lp, st, xx, cfg)
-
+    kernel_block = _fused_kernel_block(cfg, dt)
     blocks = broadcast_packed_scales(params["blocks"], cfg.n_layers)
 
     def body(x, xs):
@@ -288,6 +297,50 @@ def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
                                   interpret=interpret)
 
     x, new_state = jax.lax.scan(body, x, (blocks, state))
+    x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
+    logits = x @ unpack_leaf(params["head"]).astype(x.dtype)
+    return logits, new_state
+
+
+def prepare_fused_model_params(params, cfg: ModelConfig):
+    """One-time host-side prep for the megakernel serving path: apply the
+    packed-aware compute cast and chunk the stacked per-layer weights into
+    per-dtype contiguous slabs (`core.quant.serving.fuse_layer_stack`) —
+    one weight stream per layer instead of one gather per leaf."""
+    from repro.core.quant.serving import cast_compute, fuse_layer_stack
+    params = cast_compute(params, jnp.dtype(cfg.dtype))
+    return {**params,
+            "blocks": fuse_layer_stack(params["blocks"], cfg.n_layers)}
+
+
+def decode_step_fused_model(params, state, tokens, pos, cfg: ModelConfig, *,
+                            bb: int | None = None,
+                            weights: str | None = None,
+                            interpret: bool | None = None):
+    """Megakernel decode: the ENTIRE layer stack as ONE Pallas launch
+    (`kernels.fused_decode.fused_model_decode`) — the residual stays
+    on-chip across layers, each layer's weights arrive as one contiguous
+    chunk per dtype (uint8 Δ-PoT code planes when packed) double-buffered
+    behind the previous layer's compute in the streaming binding, and the
+    (H, N, N) WKV state is read and written once per layer.  Same
+    `block_decode` body as the per-op oracle, so bit-identical
+    (tests/test_fused_decode.py).  `params` may be a plain tree or the
+    output of `prepare_fused_model_params` (pre-cast, weights pre-chunked
+    — the serving path)."""
+    del pos
+    from repro.core.quant.serving import (
+        FusedLayerStack, cast_compute, unpack_leaf)
+    from repro.kernels.fused_decode import fused_model_decode
+    dt = jnp.dtype(cfg.dtype)
+    if not isinstance(params.get("blocks"), FusedLayerStack):
+        params = cast_compute(params, dt)
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(dt)
+    x = L.apply_norm(params["ln0"], x[:, None], "layernorm")[:, 0]
+    # packed scales keep their broadcast (1, ...) form: the megakernel
+    # binds them with a constant index map (no per-layer copies)
+    x, new_state = fused_model_decode(
+        _fused_kernel_block(cfg, dt), x, params["blocks"], state, bb=bb,
+        weights=weights, interpret=interpret)
     x = L.apply_norm(params["ln_f"], x[:, None], "layernorm")
     logits = x @ unpack_leaf(params["head"]).astype(x.dtype)
     return logits, new_state

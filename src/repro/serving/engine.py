@@ -76,11 +76,20 @@ class ServingEngine:
                  dequantizes inside the jit (core.quant.serving)
     max_batch  — pool width: max concurrent sequences (compiled shape)
     prefill_chunk — prompt tokens absorbed per tick per prefilling slot
-    fused_decode — run the decode tick through the model's single-launch
-                 Pallas kernel (`decode_step_fused`): the whole block
-                 datapath — including in-kernel Δ-PoT weight decode when
-                 `quantized` — stays on-chip per launch.  Bit-identical
-                 output to the per-op path (tests/test_fused_decode.py);
+    fused_decode — decode-tick kernel granularity:
+                 False    — per-op `decode_step` (the oracle);
+                 "block"  — `decode_step_fused`: ONE Pallas launch per
+                            block (L launches per tick), the whole block
+                            datapath — including in-kernel Δ-PoT weight
+                            decode when `quantized` — on-chip per launch;
+                 "model"  — `decode_step_fused_model`: the whole-model
+                            megakernel, ONE launch per tick with the grid
+                            iterating over layers, the residual carried in
+                            VMEM scratch and each layer's weight stream
+                            double-buffered behind the previous layer's
+                            compute.
+                 `True` is accepted as "block" (PR 2 compatibility).  All
+                 modes are bit-identical (tests/test_fused_decode.py);
                  prefill keeps the per-op scan either way.
     """
 
@@ -98,10 +107,22 @@ class ServingEngine:
             raise ValueError(
                 f"{model.cfg.name}: decode_step consumes `pos`; the slotted "
                 "engine needs a position-free recurrent state (rwkv4/rwkv6)")
-        if fused_decode and not model.has_fused_decode:
+        if fused_decode is True:
+            fused_decode = "block"
+        if fused_decode not in (False, None, "block", "model"):
+            raise ValueError(
+                f"fused_decode={fused_decode!r}: expected False, 'block' "
+                "or 'model'")
+        fused_decode = fused_decode or False
+        if fused_decode == "block" and not model.has_fused_decode:
             raise ValueError(
                 f"{model.cfg.name} has no decode_step_fused; fused_decode "
                 "needs a model with the single-launch Pallas block kernel")
+        if fused_decode == "model" and not model.has_fused_model_decode:
+            raise ValueError(
+                f"{model.cfg.name} has no decode_step_fused_model; "
+                "fused_decode='model' needs a model with the whole-model "
+                "Pallas megakernel")
         self.model = model
         self.quantized = quantized
         self.fused_decode = fused_decode
@@ -111,6 +132,13 @@ class ServingEngine:
             from repro.core.quant.serving import pack_params
             params = pack_params(params)
         self.params = params
+        # Megakernel hot path: cast + chunk the per-layer weight stream
+        # ONCE at startup (per-dtype contiguous slabs; see
+        # core.quant.serving.fuse_layer_stack).  Decode ticks consume the
+        # prepared form; prefill keeps the raw tree (its per-op scan
+        # needs stacked leaves).
+        self._decode_params = model.prepare_fused_model_params(params) \
+            if fused_decode == "model" else params
         self.counters = counters if counters is not None else \
             ServingCounters()
         self.pool = SlotStatePool(model, max_batch, max_len=max_len,
@@ -151,7 +179,12 @@ class ServingEngine:
 
         def decode(params, state, tokens, mask):
             self.trace_counts["decode"] += 1   # increments only on trace
-            if fused:
+            if fused == "model":
+                # whole-model megakernel: ONE launch for the layer stack;
+                # packed Δ-PoT leaves pass through whole and decode inside
+                logits, new_state = model.decode_step_fused_model(
+                    params, state, tokens, jnp.int32(0))
+            elif fused == "block":
                 # single-launch block kernel; packed Δ-PoT leaves pass
                 # through whole and decode inside the launch
                 logits, new_state = model.decode_step_fused(
@@ -192,7 +225,7 @@ class ServingEngine:
         j_decode = jax.jit(decode, donate_argnums=(1,))
         j_prefill = jax.jit(prefill, donate_argnums=(1,))
         return (lambda state, toks, mask:
-                j_decode(self.params, state, jnp.asarray(toks),
+                j_decode(self._decode_params, state, jnp.asarray(toks),
                          jnp.asarray(mask)),
                 lambda state, toks, valid, fresh:
                 j_prefill(self.params, state, jnp.asarray(toks),
