@@ -145,10 +145,14 @@ def hbm_bytes_per_token(cfg, batch: int, packed: bool) -> dict:
     (Δ-PoT W8).  Per-op additionally round-trips every intermediate
     (written by one launch, read by the next): ~18 (B, D)-sized
     activations + r/k/v/gates per layer, plus the state twice per
-    launch touching it.  Fused-block writes only the new state and the
-    block output — but the residual still crosses HBM between the L
-    launches.  Fused-model eliminates those L round-trips too: the
-    residual enters and leaves HBM exactly once per step."""
+    launch touching it.  Monolithic (decode_step under ONE jit) lets XLA
+    fuse the elementwise chains, but every matmul output (r/k/v, wo, the
+    FFN pair's two D-wide and one F-wide products — 6 D-wide + 1 F-wide
+    per layer) still materializes between its kernels, written once and
+    read once, plus the state both ways.  Fused-block writes only the new
+    state and the block output — but the residual still crosses HBM
+    between the L launches.  Fused-model eliminates those L round-trips
+    too: the residual enters and leaves HBM exactly once per step."""
     D, F, Lc, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
     wb = 1 if packed else 2
     per_layer_w = (5 * D * D + 2 * D * F) * wb + (7 * D * 4 if packed else 0)
@@ -157,9 +161,12 @@ def hbm_bytes_per_token(cfg, batch: int, packed: bool) -> dict:
     act = batch * D * 2
     per_layer_int = 18 * act + 2 * batch * F * 2
     per_op = weights + Lc * (per_layer_int * 2 + state // Lc * 2)
+    per_layer_mm = (6 * act + batch * F * 2) * 2    # matmul outs, w+r
+    mono = weights + state * 2 + Lc * per_layer_mm + 2 * act + batch * V * 4
     fused_block = weights + state * 2 + Lc * act * 2 + batch * V * 4
     fused_model = weights + state * 2 + 2 * act + batch * V * 4
     return {"per_op": per_op / batch,
+            "mono": mono / batch,
             "fused_block": fused_block / batch,
             "fused_model": fused_model / batch}
 
@@ -246,9 +253,7 @@ def bench_depth(cfg, batch: int, iters: int, records: list,
             "variant": name, "quant": "fp", "batch": batch,
             "n_layers": cfg.n_layers, "tok_s": round(tok_s[name], 3),
             "us_per_step": round(batch * 1e6 / tok_s[name], 1),
-            # mono is one fused XLA program — the analytic model makes no
-            # claim about its intermediate traffic, so no estimate
-            "hbm_bytes_per_token": hbm.get(name),
+            "hbm_bytes_per_token": hbm[name],
         })
     emit(f"fused_decode/{cfg.name}/L{cfg.n_layers}/batch{batch}/fp",
          batch * 1e6 / tok_s["fused_model"],
@@ -301,7 +306,7 @@ def bench_quantized(cfg, batch: int, iters: int, records: list,
             "variant": name, "quant": "dpot_w8", "batch": batch,
             "n_layers": cfg.n_layers, "tok_s": round(tok_s[name], 3),
             "us_per_step": round(batch * 1e6 / tok_s[name], 1),
-            "hbm_bytes_per_token": hbm.get(name),   # none claimed for mono
+            "hbm_bytes_per_token": hbm[name],
         })
     emit(f"fused_decode/{cfg.name}/L{cfg.n_layers}/batch{batch}/dpot_w8",
          batch * 1e6 / tok_s["fused_model"],

@@ -62,19 +62,23 @@ def seed_loop_tokens_per_s(model, params, prompts) -> float:
     return len(prompts) * N_TOKENS / dt
 
 
-def engine_tokens_per_s(model, params, prompts) -> float:
+def engine_tokens_per_s(model, params, prompts) -> tuple[float, dict]:
     engine = ServingEngine(model, params=params, max_batch=len(prompts),
                            prefill_chunk=PROMPT_LEN)
     # compile both device programs outside the timed region
     warm = engine.submit(prompts[0], max_new_tokens=2)
     engine.run()
     assert warm.done
+    # fresh counters: the warmup's TTFT/prefill samples are compile time,
+    # which would dominate the emitted latency means
+    from repro.runtime.monitor import ServingCounters
+    engine.counters = engine.scheduler.counters = ServingCounters()
     t0 = time.perf_counter()
     for p in prompts:
         engine.submit(p, max_new_tokens=N_TOKENS)
     snap = engine.run()
     dt = time.perf_counter() - t0
-    return (snap["decode_tokens"] - 2) / dt      # exclude the warmup's 2
+    return snap["decode_tokens"] / dt, snap
 
 
 def run():
@@ -83,10 +87,13 @@ def run():
     for n in (1, 8, 32):
         prompts = _prompts(n, model.cfg.vocab)
         seed_tps = seed_loop_tokens_per_s(model, params, prompts)
-        eng_tps = engine_tokens_per_s(model, params, prompts)
+        eng_tps, snap = engine_tokens_per_s(model, params, prompts)
         emit(f"serving/{ARCH}/batch{n}", 1e6 / max(eng_tps, 1e-9),
              f"seed_tok_s={seed_tps:.1f};engine_tok_s={eng_tps:.1f};"
-             f"speedup={eng_tps/seed_tps:.2f}x")
+             f"speedup={eng_tps/seed_tps:.2f}x;"
+             f"mean_ttft_ms={snap['mean_ttft_s']*1e3:.1f};"
+             f"mean_prefill_ms={snap['mean_prefill_s']*1e3:.1f};"
+             f"mean_prefill_ticks={snap['mean_prefill_ticks']:.1f}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   bench_energy_proxy    — Fig 8   (energy-efficiency proxy)
   bench_kernels         — §4 modules (kernel vs oracle)
   bench_serving         — continuous-batching engine vs the seed loop
+  bench_prefill         — fused chunked prefill vs the per-op scan
 """
 from __future__ import annotations
 
@@ -17,12 +18,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_energy_proxy, bench_kernels,
-                            bench_quant_ablation, bench_resources,
-                            bench_serving, bench_throughput)
+                            bench_prefill, bench_quant_ablation,
+                            bench_resources, bench_serving,
+                            bench_throughput)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_resources, bench_energy_proxy, bench_throughput,
-                bench_kernels, bench_quant_ablation, bench_serving):
+                bench_kernels, bench_quant_ablation, bench_serving,
+                bench_prefill):
         try:
             mod.run()
         except Exception:

@@ -8,6 +8,39 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def exact_jit(fn, donate_argnums=()):
+    """jit with XLA's excess-precision folding DISABLED: every trace-level
+    rounding (e.g. a bf16 op's output, or a `x.astype(bf16)`) is real in
+    the compiled program instead of being elided into a wider consumer.
+
+    Why this exists: two programs with the same per-element op semantics
+    but different structure (a per-token scan vs a chunk-shaped
+    restructuring of the same math) normally are NOT bitwise comparable,
+    because XLA decides per fusion context which low-precision roundings
+    to skip.  Pinning `xla_allow_excess_precision=False` makes the rounding
+    behavior equal to the trace — structure-independent — which is what
+    lets the fused chunked-prefill path be BIT-identical to the per-op
+    scan-of-`decode_step` oracle (the serving engine compiles both its
+    prefill programs through this; see docs/serving.md).  Compilation is
+    AOT (`lower().compile()`) because compiler options only attach there;
+    the wrapper lowers lazily on first call and caches the executable.
+    """
+    jitted = jax.jit(fn, donate_argnums=donate_argnums)
+    cache = {}
+
+    def call(*args):
+        # keyed on the flattened avals so new shapes/dtypes recompile,
+        # like jax.jit would (positional args only)
+        key = tuple((leaf.shape, str(leaf.dtype)) if hasattr(leaf, "shape")
+                    else leaf
+                    for leaf in jax.tree_util.tree_leaves(args))
+        if key not in cache:
+            cache[key] = jitted.lower(*args).compile(
+                compiler_options={"xla_allow_excess_precision": False})
+        return cache[key](*args)
+    return call
+
+
 def interpret_default(interpret: bool | None) -> bool:
     """Pallas kernels target TPU; everywhere else (this CPU container)
     they run in interpret mode, which executes the kernel body in Python —

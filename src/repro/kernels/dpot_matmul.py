@@ -14,6 +14,15 @@ itself stays systolic.
 Block tiling: (bm x bk) @ (bk x bn) -> (bm x bn), grid (M/bm, N/bn, K/bk)
 with the K axis innermost so the f32 accumulator tile stays resident in VMEM
 across the K sweep (revisiting semantics), initialized at k==0.
+
+The fused chunked-prefill path reuses this design with one deliberate
+change: `kernels.fused_prefill.dpot_chunk_matmul` keeps the SAME
+streaming-codes/decode-in-VMEM mechanism but never splits K and decodes
+via `core.quant.serving.unpack_leaf` (f32 -> bf16 -> compute dtype), so
+its output is BITWISE equal to the per-op serving oracle's
+`x @ unpack_leaf(w)` — the f32-accumulator K-sweep here trades that
+exactness for scale, which training-sized matmuls want and prefill
+cannot accept.
 """
 from __future__ import annotations
 

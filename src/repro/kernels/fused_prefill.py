@@ -1,0 +1,154 @@
+"""Fused chunked-prefill building blocks: chunk matmuls + masked WKV scan.
+
+Decode (PRs 2-3) collapsed the per-token step into single Pallas launches;
+prefill — which gates time-to-first-token — was still a `lax.scan` of the
+per-op `decode_step`: one D-wide MATVEC per prompt token, and (when
+quantized) the whole Δ-PoT tree unpacked in HBM for every chunk.  This
+module supplies the pieces the models' `prefill_chunk` entry points stitch
+together, per the paper's computation reordering (§4.2): process a whole
+prompt chunk per device program, with
+
+  * the position-parallel work (token-shift mixes, layernorms, the r/k/v/
+    receptance projections, the FFN) reshaped into (S·C, D) MATMULS over
+    the chunk — MXU food instead of C matvecs (`chunk_matmul` below; the
+    same tiling idea as `kernels.dpot_matmul`, here with the decode kept
+    bit-exact to `core.quant.serving.unpack_leaf`), and
+  * the genuinely sequential WKV recurrence running through the Pallas
+    sequence kernels (`kernels.wkv4.wkv4_pallas` / `kernels.wkv6.
+    wkv6_seq_pallas`), seeded from the pool state and keeping the
+    per-channel state in VMEM across the chunk's timesteps, with a `valid`
+    commit mask so partial chunks match the per-op scan bit-for-bit.
+
+Packed Δ-PoT weights flow to prefill WITHOUT `unpack_params`: the uint8
+code planes stream HBM->VMEM tile-by-tile and decode inside the matmul
+kernel (`_mm_kernel`), so int8 codes are all that crosses HBM during the
+whole prompt phase — the paper's bandwidth win, extended from decode to
+prefill.  Bit-parity contract: `chunk_matmul(x, leaf, dt)` on a packed
+leaf equals `x @ unpack_leaf(leaf).astype(dt)` exactly, because the kernel
+body calls the very same `unpack_leaf` (tests/test_prefill.py).
+
+The masking semantics live one level up (models' `block_prefill`): the
+`valid` mask must be a per-slot PREFIX of the chunk (the scheduler only
+emits prefix masks — a prompt chunk occupies positions [0, n)), which is
+what makes the shifted-sequence token mix equal to the oracle's frozen
+state carry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant.serving import is_packed_leaf, unpack_leaf
+from repro.kernels.common import interpret_default
+
+
+def _mm_kernel(x_ref, wq_ref, scale_ref, o_ref, *, dt):
+    # decode THE SAME WAY the per-op oracle does (unpack_leaf -> bf16 ->
+    # compute dtype) so the fused prefill is bit-identical, not merely close
+    w = unpack_leaf({"packed": wq_ref[...],
+                     "scale": scale_ref[...]}).astype(dt)
+    o_ref[...] = x_ref[...] @ w
+
+
+def _fit(block: int, dim: int) -> int:
+    block = min(block, dim)
+    while dim % block != 0:
+        block //= 2
+    return block
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "bm", "bn", "interpret"))
+def dpot_chunk_matmul(x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray,
+                      *, dt, bm: int = 256, bn: int = 512,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """x: (M, K) @ packed wq: (K, N) with per-channel scale (..., N).
+
+    Grid (M/bm, N/bn) with the FULL K per cell: the contraction is never
+    split, so each output element accumulates in exactly the order the
+    unfused `x @ w` does — the bit-parity requirement (`dpot_matmul`'s
+    K-blocked f32 accumulator trades that for scale; prefill cannot).
+    uint8 code tiles stream HBM->VMEM via the grid pipeline and decode
+    on the VPU in-kernel; `dt` is the compute dtype the decoded weights
+    are cast to (the oracle's `cast_params`)."""
+    M, K = x.shape
+    K2, N = wq.shape
+    assert K == K2, (x.shape, wq.shape)
+    scale = scale.reshape(1, N)
+    bm, bn = _fit(bm, M), _fit(bn, N)
+    out_dt = jnp.result_type(x.dtype, jnp.dtype(dt))
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, dt=jnp.dtype(dt)),
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dt),
+        interpret=interpret_default(interpret),
+    )(x, wq, scale)
+
+
+def chunk_matmul(x: jnp.ndarray, leaf, dt, *,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """`x @ leaf` over a (..., K) chunk tensor, packed-leaf aware.
+
+    Plain leaves take the jnp matmul (already in compute dtype via
+    `cast_compute` — identical to the oracle by construction).  Packed
+    `{"packed", "scale"}` leaves flatten the chunk to (S·C, K) and run the
+    in-kernel-decode matmul above: bitwise `x @ unpack_leaf(leaf).astype
+    (dt)` with the codes, not the decoded bf16, crossing HBM."""
+    if not is_packed_leaf(leaf):
+        return x @ leaf
+    lead, K = x.shape[:-1], x.shape[-1]
+    out = dpot_chunk_matmul(x.reshape(-1, K), leaf["packed"], leaf["scale"],
+                            dt=jnp.dtype(dt).name, interpret=interpret)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def shifted_prev(seq: jnp.ndarray, first: jnp.ndarray,
+                 valid: jnp.ndarray) -> jnp.ndarray:
+    """Token-shift previous-value sequence under a per-slot PREFIX mask.
+
+    seq (B, C, D) are the per-position carry candidates (h, already rounded
+    to the state dtype); first (B, D) is the incoming pool carry.  Position
+    t sees seq_{t-1} while t-1 is inside the valid prefix, the LAST valid
+    entry once the prefix ends (the oracle's per-step masking FREEZES the
+    carry there — masked-out steps still compute, from the frozen value),
+    and `first` at t=0 or on lanes with no valid tokens at all.  The frozen
+    tail is what keeps even the DISCARDED positions' compute bitwise equal
+    to the oracle's — which matters when numerics couple lanes (rwkv4's hw
+    A9 activation fake-quant takes a per-(batch, features) max: a garbage
+    lane with the wrong garbage would perturb every other lane's scale)."""
+    B, C = valid.shape
+    nv = jnp.sum(valid.astype(jnp.int32), axis=1)
+    j = jnp.minimum(jnp.arange(C)[None, :], nv[:, None]) - 1     # (B, C)
+    got = jnp.take_along_axis(seq, jnp.maximum(j, 0)[..., None], axis=1)
+    return jnp.where((j >= 0)[..., None], got, first[:, None])
+
+
+def gather_last_valid(seq: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """seq (B, C, ...) -> (B, ...) rows at per-slot position `idx` (B,).
+
+    The chunk computes all C positions; the oracle's `where(ok, new, old)`
+    per-step carry is recovered by selecting the LAST VALID position's
+    value (callers clamp idx and fall back to the old state for all-invalid
+    lanes)."""
+    ix = idx.reshape((-1,) + (1,) * (seq.ndim - 1))
+    return jnp.take_along_axis(seq, ix, axis=1)[:, 0]
+
+
+def last_valid_select(seq: jnp.ndarray, old: jnp.ndarray,
+                      n_valid: jnp.ndarray) -> jnp.ndarray:
+    """Final-state helper: the last valid position of `seq`, cast to and
+    falling back on `old` (the incoming pool state) for lanes whose chunk
+    had no valid tokens — exactly the oracle's masked per-step carry after
+    a full chunk under a prefix mask."""
+    idx = jnp.maximum(n_valid - 1, 0)
+    got = gather_last_valid(seq, idx).astype(old.dtype)
+    anyv = (n_valid > 0).reshape((-1,) + (1,) * (old.ndim - 1))
+    return jnp.where(anyv, got, old)

@@ -9,6 +9,24 @@ paper's motivation §1-(1)).  k/v stream in as one VMEM-resident block.
 
 Numerics: the official stable running-max recurrence (never overflows),
 identical to repro.core.wkv.wkv4 — which is this kernel's oracle.
+
+Serving extensions (all optional, default off — the bare call keeps the
+original pure-f32 unmasked semantics):
+
+  valid        — (B, T) per-timestep commit mask: a masked-out step still
+                 computes (fixed shapes) but its state update is discarded,
+                 exactly the scheduler's `where(ok, stepped, old)`.  This is
+                 what lets the fused chunked-prefill path run partial prompt
+                 chunks bit-identically to the per-op scan.
+  carry_dtype  — round-trip the carried state through this dtype every step
+                 (e.g. "bfloat16").  The per-op decode oracle stores its
+                 state in the pool dtype between steps, so bit-parity with
+                 it requires the on-chip carry to snap to the same grid.
+  exp_table /  — the paper's EXP / DIV LUT fraction tables as explicit
+  div_table      (256,) operands, switching the recurrence to the hw
+                 numerics (`core.approx.exp_lut` / `div_lut`).  Kernels
+                 cannot capture array constants, so the tables travel as
+                 VMEM-resident inputs — the paper's on-chip LUTs.
 """
 from __future__ import annotations
 
@@ -18,16 +36,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.approx import div_lut, exp_lut
 from repro.kernels.common import interpret_default
 
 
-def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref,
-            y_ref, af_ref, bf_ref, of_ref, *, T: int):
+def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref, *refs,
+            T: int, masked: bool, carry: str | None, luts: bool):
+    refs = list(refs)
+    valid_ref = refs.pop(0) if masked else None
+    if luts:
+        exp_t = refs.pop(0)[...].astype(jnp.float32)
+        div_t = refs.pop(0)[...].astype(jnp.float32)
+        exp_fn = lambda x: exp_lut(x, table=exp_t)
+        div_fn = lambda x, y: div_lut(x, y, table=div_t)
+    else:
+        exp_fn = jnp.exp
+        div_fn = lambda x, y: x / y
+    y_ref, af_ref, bf_ref, of_ref = refs
     w = w_ref[...].astype(jnp.float32)
     u = u_ref[...].astype(jnp.float32)
+    snap = ((lambda x: x) if carry is None else
+            (lambda x: x.astype(jnp.dtype(carry)).astype(jnp.float32)))
 
-    def body(t, carry):
-        a, b, o = carry
+    def body(t, state):
+        a, b, o = state
         tsl = (pl.dslice(0, 1), pl.dslice(t, 1), slice(None))
         kt = pl.load(k_ref, tsl)[0, 0]
         vt = pl.load(v_ref, tsl)[0, 0]
@@ -35,15 +67,22 @@ def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref,
         vt = vt.astype(jnp.float32)
         # output (includes the bonus u for the current token)
         no = jnp.maximum(o, u + kt)
-        A = jnp.exp(o - no)
-        Bf = jnp.exp(u + kt - no)
-        y = (A * a + Bf * vt) / (A * b + Bf)
+        A = exp_fn(o - no)
+        Bf = exp_fn(u + kt - no)
+        y = div_fn(A * a + Bf * vt, A * b + Bf)
         pl.store(y_ref, tsl, y[None, None].astype(y_ref.dtype))
         # state update
         no2 = jnp.maximum(o - w, kt)
-        A2 = jnp.exp(o - w - no2)
-        B2 = jnp.exp(kt - no2)
-        return (A2 * a + B2 * vt, A2 * b + B2, no2)
+        A2 = exp_fn(o - w - no2)
+        B2 = exp_fn(kt - no2)
+        na, nb, no_ = A2 * a + B2 * vt, A2 * b + B2, no2
+        if masked:
+            ok = pl.load(valid_ref,
+                         (pl.dslice(0, 1), pl.dslice(t, 1)))[0, 0] != 0
+            na = jnp.where(ok, na, a)
+            nb = jnp.where(ok, nb, b)
+            no_ = jnp.where(ok, no_, o)
+        return (snap(na), snap(nb), snap(no_))
 
     # int ref indices break jax 0.4.x interpret-mode discharge; use dslice
     ld = lambda ref: pl.load(
@@ -57,11 +96,20 @@ def _kernel(k_ref, v_ref, w_ref, u_ref, a0_ref, b0_ref, o0_ref,
     st(of_ref, o)
 
 
-@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bc", "interpret", "carry_dtype"))
 def wkv4_pallas(k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
                 u: jnp.ndarray, a0=None, b0=None, o0=None, *,
+                valid: jnp.ndarray | None = None,
+                carry_dtype: str | None = None,
+                exp_table: jnp.ndarray | None = None,
+                div_table: jnp.ndarray | None = None,
                 bc: int = 128, interpret: bool | None = None):
-    """k, v: (B, T, C); w, u: (C,) -> (y (B,T,C) f32, (a,b,o) finals (B,C))."""
+    """k, v: (B, T, C); w, u: (C,) -> (y (B,T,C) f32, (a,b,o) finals (B,C)).
+
+    Optional serving operands (see module docstring): `valid` (B, T) commit
+    mask, `carry_dtype` per-step state rounding, `exp_table`/`div_table`
+    hw-numerics LUTs (supply both or neither)."""
     B, T, C = k.shape
     bc = min(bc, C)
     while C % bc != 0:
@@ -70,15 +118,27 @@ def wkv4_pallas(k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
         a0 = jnp.zeros((B, C), jnp.float32)
         b0 = jnp.zeros((B, C), jnp.float32)
         o0 = jnp.full((B, C), -1e38, jnp.float32)
+    if (exp_table is None) != (div_table is None):
+        raise ValueError("exp_table and div_table travel together")
     grid = (B, C // bc)
     seq_spec = pl.BlockSpec((1, T, bc), lambda b, c: (b, 0, c))
     vec_spec = pl.BlockSpec((bc,), lambda b, c: (c,))
     st_spec = pl.BlockSpec((1, bc), lambda b, c: (b, c))
+    operands = [k, v, w, u, a0, b0, o0]
+    in_specs = [seq_spec, seq_spec, vec_spec, vec_spec,
+                st_spec, st_spec, st_spec]
+    if valid is not None:
+        operands.append(valid.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec((1, T), lambda b, c: (b, 0)))
+    if exp_table is not None:
+        tab_spec = pl.BlockSpec((256,), lambda b, c: (0,))
+        operands += [exp_table, div_table]
+        in_specs += [tab_spec, tab_spec]
     y, af, bf, of = pl.pallas_call(
-        functools.partial(_kernel, T=T),
+        functools.partial(_kernel, T=T, masked=valid is not None,
+                          carry=carry_dtype, luts=exp_table is not None),
         grid=grid,
-        in_specs=[seq_spec, seq_spec, vec_spec, vec_spec,
-                  st_spec, st_spec, st_spec],
+        in_specs=in_specs,
         out_specs=[seq_spec, st_spec, st_spec, st_spec],
         out_shape=[
             jax.ShapeDtypeStruct((B, T, C), jnp.float32),
@@ -87,5 +147,5 @@ def wkv4_pallas(k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
             jax.ShapeDtypeStruct((B, C), jnp.float32),
         ],
         interpret=interpret_default(interpret),
-    )(k, v, w, u, a0, b0, o0)
+    )(*operands)
     return y, (af, bf, of)

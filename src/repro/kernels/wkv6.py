@@ -8,6 +8,15 @@ exp, so every live exponent is <= 0: underflow-only stability (same scheme
 as the ref's diagonal blocks, applied chunk-wide).
 
 Oracle: repro.core.wkv.wkv6.wkv6_scan / wkv6_chunked.
+
+`wkv6_seq_pallas` (below) is the SEQUENTIAL sibling used by the fused
+chunked-prefill path: same grid, same on-chip (N x N) state residency, but
+the recurrence advances with the exact per-step `wkv6_step` math (the
+chunked form's log-space reassociation is NOT bit-identical to the step
+scan, and prefill must be).  It adds the serving operands the prefill
+masking semantics need: a (B, T) `valid` commit mask and a `carry_dtype`
+that rounds the carried state through the pool's storage dtype every step,
+exactly as the per-op decode oracle does between steps.
 """
 from __future__ import annotations
 
@@ -87,4 +96,80 @@ def wkv6_pallas(r, k, v, w, u, s0=None, *, chunk: int = 64,
         ],
         interpret=interpret_default(interpret),
     )(tr(r), tr(k), tr(v), tr(w), u, s0)
+    return jnp.transpose(y, (0, 2, 1, 3)), sf
+
+
+# ---------------------------------------------------------------------------
+# Sequential form: exact per-step wkv6_step math, state on-chip, masked
+# ---------------------------------------------------------------------------
+
+
+def _seq_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, *refs,
+                T: int, masked: bool, carry: str | None):
+    refs = list(refs)
+    valid_ref = refs.pop(0) if masked else None
+    y_ref, sf_ref = refs
+    u = u_ref[...].astype(jnp.float32)[0]                 # (1,N) -> (N,)
+    snap = ((lambda x: x) if carry is None else
+            (lambda x: x.astype(jnp.dtype(carry)).astype(jnp.float32)))
+
+    def body(t, S):
+        # int ref indices break jax 0.4.x interpret-mode discharge; dslice
+        sl = (pl.dslice(0, 1), pl.dslice(0, 1), pl.dslice(t, 1), slice(None))
+        rt = pl.load(r_ref, sl).astype(jnp.float32)[0, 0, 0]   # (N,)
+        kt = pl.load(k_ref, sl).astype(jnp.float32)[0, 0, 0]
+        vt = pl.load(v_ref, sl).astype(jnp.float32)[0, 0, 0]
+        wt = pl.load(w_ref, sl).astype(jnp.float32)[0, 0, 0]
+        # exact wkv6_step: y = r @ (S + diag(u) k⊗v); S' = diag(w) S + k⊗v
+        kv = kt[:, None] * vt[None, :]                         # (N,N)
+        y = jnp.einsum("n,nm->m", rt, S + u[:, None] * kv)
+        pl.store(y_ref, sl, y[None, None, None].astype(y_ref.dtype))
+        S_new = wt[:, None] * S + kv
+        if masked:
+            ok = pl.load(valid_ref,
+                         (pl.dslice(0, 1), pl.dslice(t, 1)))[0, 0] != 0
+            S_new = jnp.where(ok, S_new, S)
+        return snap(S_new)
+
+    s_sl = (pl.dslice(0, 1), pl.dslice(0, 1), slice(None), slice(None))
+    S = jax.lax.fori_loop(0, T, body,
+                          pl.load(s0_ref, s_sl)[0, 0].astype(jnp.float32))
+    pl.store(sf_ref, s_sl, S[None, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "carry_dtype"))
+def wkv6_seq_pallas(r, k, v, w, u, s0=None, *,
+                    valid=None, carry_dtype: str | None = None,
+                    interpret: bool | None = None):
+    """Sequential WKV-6: r,k,v,w (B,T,H,N); u (H,N) -> (y (B,T,H,N) f32,
+    S (B,H,N,N)).  Grid (B, H); each cell's (N, N) state stays in VMEM for
+    the whole window, advanced with the exact `wkv6_step` ops so the result
+    is BIT-identical to scanning the step (the prefill contract).  `valid`
+    (B, T) discards masked steps' state updates; `carry_dtype` rounds the
+    carry through the pool dtype every step, both as in the per-op oracle."""
+    B, T, H, N = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    # head-major layout so each grid cell reads a contiguous (T, N) strip
+    tr = lambda x: jnp.transpose(x, (0, 2, 1, 3))         # (B,H,T,N)
+    seq_spec = pl.BlockSpec((1, 1, T, N), lambda b, h: (b, h, 0, 0))
+    u_spec = pl.BlockSpec((1, N), lambda b, h: (h, 0))
+    st_spec = pl.BlockSpec((1, 1, N, N), lambda b, h: (b, h, 0, 0))
+    operands = [tr(r), tr(k), tr(v), tr(w), u, s0]
+    in_specs = [seq_spec, seq_spec, seq_spec, seq_spec, u_spec, st_spec]
+    if valid is not None:
+        operands.append(valid.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec((1, T), lambda b, h: (b, 0)))
+    y, sf = pl.pallas_call(
+        functools.partial(_seq_kernel, T=T, masked=valid is not None,
+                          carry=carry_dtype),
+        grid=(B, H),
+        in_specs=in_specs,
+        out_specs=[seq_spec, st_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        interpret=interpret_default(interpret),
+    )(*operands)
     return jnp.transpose(y, (0, 2, 1, 3)), sf

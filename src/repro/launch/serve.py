@@ -7,11 +7,15 @@ TTFT, latency) from `runtime.monitor.ServingCounters`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m --smoke \
         --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16] \
-        [--fused[=block|model]]
+        [--fused[=block|model]] [--fused-prefill]
 
 `--fused block` decodes through the per-block fused Pallas kernel (one
 launch per layer); `--fused model` through the whole-model megakernel
 (ONE launch per decode step, grid over layers — see docs/kernels.md).
+`--fused-prefill` absorbs prompt chunks through the fused chunked-prefill
+path (chunk-shaped matmuls + the on-chip WKV sequence kernel, packed
+Δ-PoT weights decoded in-kernel) instead of the per-op scan — same bits,
+measured faster in benchmarks/bench_prefill.py.
 
 `--legacy` keeps the seed behavior — one jitted decode_step in a
 single-batch host loop — and is also the reference baseline for
@@ -61,13 +65,23 @@ def sequential_decode(model, params, prompt: list[int], n_new: int):
     """Batch-1 greedy decode of one request: feed the prompt token-by-token
     through a jitted decode_step, then argmax-chain `n_new` tokens.  This is
     the engine's bit-identity oracle (docs/serving.md) — the example and the
-    scheduler tests both compare against it."""
+    scheduler tests both compare against it.
+
+    The PROMPT phase compiles with defined rounding semantics
+    (`kernels.common.exact_jit`), in lockstep with the engine's prefill
+    programs: the engine pins `xla_allow_excess_precision=False` there so
+    its per-op and fused chunked prefill are bit-identical, and the oracle
+    must round the same way or near-tie argmaxes drift.  Generation uses
+    the plain jit, matching the engine's (unflagged) decode tick."""
+    from repro.kernels.common import exact_jit
     step = jax.jit(model.decode_step)
+    prompt_step = exact_jit(model.decode_step)
     state = model.init_decode_state(1, 0)
     logits = None
     for t in prompt:
-        logits, state = step(params, state,
-                             jnp.array([[t]], jnp.int32), jnp.int32(0))
+        logits, state = prompt_step(params, state,
+                                    jnp.array([[t]], jnp.int32),
+                                    jnp.int32(0))
     out = []
     for _ in range(n_new):
         tok = int(jnp.argmax(logits[0, -1]))
@@ -118,7 +132,8 @@ def serve_legacy(arch: str, *, smoke: bool = True, batch: int = 4,
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           n_tokens: int = 32, quantized: bool = False, seed: int = 0,
           prefill_chunk: int = 16, prompt_len: int = 8,
-          temperature: float = 0.0, fused: bool | str | None = False):
+          temperature: float = 0.0, fused: bool | str | None = False,
+          fused_prefill: bool = False):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles."""
     from repro.serving import ServingEngine
@@ -126,7 +141,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
                            prefill_chunk=prefill_chunk,
                            quantized=quantized,
-                           fused_decode=fused or False, seed=seed)
+                           fused_decode=fused or False,
+                           fused_prefill=fused_prefill, seed=seed)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
     handles = [
@@ -162,6 +178,12 @@ def main():
                          "meaning) or 'model' (the whole-model megakernel "
                          "— ONE launch per decode step; "
                          "kernels/fused_decode.py)")
+    ap.add_argument("--fused-prefill", action="store_true",
+                    help="fused chunked prefill: whole prompt chunks as "
+                         "(S*C, D) matmuls + the on-chip WKV sequence "
+                         "kernel, packed weights decoded in-kernel "
+                         "(kernels/fused_prefill.py); bit-identical to "
+                         "the per-op prefill scan")
     ap.add_argument("--legacy", action="store_true",
                     help="seed single-loop decode instead of the engine")
     ap.add_argument("--hw-numerics", action="store_true",
@@ -176,7 +198,7 @@ def main():
               n_tokens=args.tokens, quantized=args.quantized,
               prefill_chunk=args.prefill_chunk,
               prompt_len=args.prompt_len, temperature=args.temperature,
-              fused=args.fused)
+              fused=args.fused, fused_prefill=args.fused_prefill)
 
 
 if __name__ == "__main__":

@@ -136,6 +136,31 @@ class Model:
         return self.module.prepare_fused_model_params(params, self.cfg,
                                                       **kw)
 
+    @property
+    def has_fused_prefill(self) -> bool:
+        """True when the model ships the fused chunked-prefill entry
+        (`prefill_chunk`): a whole prompt chunk per device program —
+        chunk-shaped matmuls + the masked on-chip WKV sequence kernel —
+        bit-identical to scanning `decode_step` over the chunk."""
+        return hasattr(self.module, "prefill_chunk")
+
+    def prefill_chunk(self, params, state, tokens, valid):
+        """Fused chunked prefill (kernels.fused_prefill): tokens (B, C)
+        with a per-slot PREFIX validity mask -> (new_state, last-valid
+        logits).  Params pass through UNcast, as in `decode_step_fused` —
+        the model applies the packed-aware compute cast itself so Δ-PoT
+        `{"packed","scale"}` leaves reach the matmul kernels intact."""
+        return self.module.prefill_chunk(params, state, tokens, valid,
+                                         jnp.int32(0), self.cfg)
+
+    def prepare_prefill_params(self, params):
+        """One-time host-side prep for the fused prefill: pre-decode any
+        packed leaves the chunk datapath consumes element-wise (rwkv6's
+        time_maa / maa_w2 / time_faaaa; rwkv4 needs nothing).  Run OUTSIDE
+        the step, like `prepare_fused_model_params`."""
+        prep = getattr(self.module, "prepare_prefill_params", None)
+        return params if prep is None else prep(params, self.cfg)
+
     # -- per-slot decode-state contract (serving engine) -------------------
     @property
     def position_free_decode(self) -> bool:

@@ -234,6 +234,136 @@ def block_decode(lp, st, x, cfg: ModelConfig, nm=_Std):
     return x2 + ffn.astype(x2.dtype), new_st
 
 
+def _chunk_numerics(hw: bool):
+    """Chunk-shaped variant of the decode numerics: identical elementwise
+    units, with the A9 activation fake-quant scoped PER TOKEN POSITION
+    (axis=1 of a (B, C, ...) chunk tensor) — each position then sees
+    exactly the (B, features) scaling grain the per-step oracle applies,
+    which is what keeps hw-numerics prefill bit-identical."""
+    if not hw:
+        return _Std
+
+    class _HwChunk(_Hw):
+        act_q = staticmethod(lambda x: uniform_fake_quant(x, 9, 1))
+    return _HwChunk
+
+
+def block_prefill(lp, st, x, valid, cfg: ModelConfig, nm=_Std, *,
+                  hw: bool = False, interpret: bool | None = None):
+    """One layer's chunked-prefill datapath over a (B, C, D) token window:
+    ln1 -> shifted-sequence token mixes -> CHUNK-shaPED r/k/v matmuls
+    (packed Δ-PoT leaves decode inside `kernels.fused_prefill.chunk_matmul`)
+    -> the masked sequential WKV Pallas kernel (per-channel state in VMEM
+    across the window, seeded from the pool state and snapped to its dtype
+    every step) -> gated output -> ln2 -> chunk-shaped channel mix.
+
+    Bit-identical to scanning `block_decode` over the window with the
+    engine's per-step state masking, for any per-slot PREFIX validity mask
+    (the scheduler only emits prefix masks: a prompt's chunk occupies
+    positions [0, n)).  Factored the same way `block_decode` was: the
+    models' `prefill_chunk` entry points and the tests share it verbatim."""
+    from repro.kernels.fused_prefill import (
+        chunk_matmul, last_valid_select, shifted_prev)
+    from repro.kernels.wkv4 import wkv4_pallas
+    dt = x.dtype
+    att_x, ffn_x = st["att_x"], st["ffn_x"]
+    h = L.apply_norm(lp["ln1"], x, "layernorm")
+    p = lp["att"]
+    # shifted sequence: position 0 mixes with the carried state, position t
+    # with h_{t-1} ROUNDED THROUGH THE STATE DTYPE (the oracle stores the
+    # carry as `h.astype(att_x.dtype)` between steps); past the valid
+    # prefix the carry freezes, exactly like the oracle's masked commits
+    hx = shifted_prev(h.astype(att_x.dtype), att_x, valid)
+    mm = lambda a, w_: chunk_matmul(a, w_, dt, interpret=interpret)
+    mix = lambda m: nm.act_q(h * p[m] + hx * (1.0 - p[m]))
+    r = mm(mix("time_mix_r"), p["wr"])
+    k = mm(mix("time_mix_k"), p["wk"])
+    v = mm(mix("time_mix_v"), p["wv"])
+    w = jnp.exp(p["time_decay"].astype(jnp.float32))
+    tables = {}
+    if hw:
+        from repro.core.approx.units import DIV_LUT_TABLE, EXP_LUT_TABLE
+        tables = {
+            "exp_table": jnp.asarray(
+                np.reshape(EXP_LUT_TABLE, -1), jnp.float32),
+            "div_table": jnp.asarray(
+                np.reshape(DIV_LUT_TABLE, -1), jnp.float32)}
+    out, (af, bf, of) = wkv4_pallas(
+        k.astype(jnp.float32), v.astype(jnp.float32), w,
+        p["time_first"].astype(jnp.float32),
+        st["wkv_a"].astype(jnp.float32), st["wkv_b"].astype(jnp.float32),
+        st["wkv_o"].astype(jnp.float32),
+        valid=valid, carry_dtype=jnp.dtype(st["wkv_a"].dtype).name,
+        interpret=interpret, **tables)
+    att = mm(nm.act_q(nm.sigmoid(r) * out.astype(r.dtype)), p["wo"])
+    x2 = x + att.astype(x.dtype)
+    h2 = L.apply_norm(lp["ln2"], x2, "layernorm")
+    p = lp["ffn"]
+    h2x = shifted_prev(h2.astype(ffn_x.dtype), ffn_x, valid)
+    mix2 = lambda m: nm.act_q(h2 * p[m] + h2x * (1.0 - p[m]))
+    rr = nm.sigmoid(mm(mix2("time_mix_r"), p["wr"]))
+    kk = jnp.square(jax.nn.relu(mm(mix2("time_mix_k"), p["wk"])))
+    ffn = nm.act_q(rr * mm(nm.act_q(kk), p["wv"]))
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    new_st = {"att_x": last_valid_select(h, att_x, n_valid),
+              "ffn_x": last_valid_select(h2, ffn_x, n_valid),
+              # WKV finals are masked + dtype-snapped inside the kernel
+              "wkv_a": af.astype(st["wkv_a"].dtype),
+              "wkv_b": bf.astype(st["wkv_b"].dtype),
+              "wkv_o": of.astype(st["wkv_o"].dtype)}
+    return x2 + ffn.astype(x2.dtype), new_st
+
+
+def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
+                  hw: bool = False, interpret: bool | None = None):
+    """Fused chunked prefill: tokens (B, C) with a per-slot PREFIX validity
+    mask (B, C) -> (new_state, last-valid logits (B, 1, V)).
+
+    Bit-identical to the engine's per-op prefill oracle — a `lax.scan` of
+    `decode_step` with per-step masked state commits — while restructuring
+    the chunk per the paper's §4 reordering: position-parallel work becomes
+    (B·C, D) matmuls, the WKV recurrence runs on-chip through the Pallas
+    sequence kernel, and packed Δ-PoT weights are decoded INSIDE the
+    matmul kernels (no `unpack_params` anywhere in this trace — uint8
+    codes are what crosses HBM for the whole prompt phase).  Lanes with no
+    valid tokens keep their state and return zero logits, exactly like the
+    oracle's untouched carry."""
+    del pos
+    from repro.core.quant.serving import broadcast_packed_scales, \
+        cast_compute
+    from repro.kernels.fused_prefill import chunk_matmul, gather_last_valid
+    nm = _chunk_numerics(hw)
+    dt = jnp.dtype(cfg.dtype)
+    params = cast_compute(params, dt)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)     # (B,C,D)
+    x = L.apply_norm(params["ln0"], x, "layernorm")
+    blocks = broadcast_packed_scales(params["blocks"], cfg.n_layers)
+
+    def body(x, xs):
+        lp, st = xs
+        return block_prefill(lp, st, x, valid, cfg, nm, hw=hw,
+                             interpret=interpret)
+
+    x, new_state = jax.lax.scan(body, x, (blocks, state))
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    xl = gather_last_valid(x, jnp.maximum(n_valid - 1, 0))[:, None]
+    xl = L.apply_norm(params["ln_f"], xl, "layernorm")
+    logits = chunk_matmul(xl, params["head"], xl.dtype, interpret=interpret)
+    return new_state, jnp.where((n_valid > 0)[:, None, None], logits,
+                                jnp.zeros_like(logits))
+
+
+def prepare_prefill_params(params, cfg: ModelConfig):
+    """One-time host-side prep for the fused prefill path.  rwkv4's packed
+    Δ-PoT leaves are ALL consumed by chunk matmuls (r/k/v/wo, the FFN pair,
+    the head), so nothing needs pre-decoding — the tree passes through and
+    every uint8 code plane streams straight into a kernel.  Exists so the
+    engine can treat every model uniformly (rwkv6 pre-decodes its few
+    elementwise-consumed packed leaves here)."""
+    del cfg
+    return params
+
+
 def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
                 hw: bool = False):
     """tokens: (B,1). Returns (logits (B,1,V), new_state)."""

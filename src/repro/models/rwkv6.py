@@ -240,6 +240,125 @@ def block_decode(lp, st, x, cfg: ModelConfig):
     return x2 + ffn, new_st
 
 
+def block_prefill(lp, st, x, valid, cfg: ModelConfig, *,
+                  interpret: bool | None = None):
+    """One layer's chunked-prefill datapath over a (B, C, D) token window:
+    ln1 -> shifted-sequence ddlerp mixes -> CHUNK-shaped r/k/v/w/g
+    projections (packed Δ-PoT leaves decode inside
+    `kernels.fused_prefill.chunk_matmul`) -> the masked SEQUENTIAL WKV-6
+    Pallas kernel (each head's (N, N) state in VMEM across the window,
+    advanced with the exact `wkv6_step` math and snapped to the pool dtype
+    every step) -> GroupNorm -> SiLU-gated output, then ln2 -> chunk-shaped
+    channel mix.
+
+    Bit-identical to scanning `block_decode` over the window with the
+    engine's per-step state masking, for any per-slot PREFIX validity mask
+    (the scheduler only emits prefix masks).  Factored the same way
+    `block_decode` was; `lp` must carry time_maa / maa_w2 / time_faaaa as
+    PLAIN leaves (they are consumed element-wise, not by a matmul —
+    `prepare_prefill_params` pre-decodes them once at startup)."""
+    from repro.kernels.fused_prefill import (
+        chunk_matmul, last_valid_select, shifted_prev)
+    from repro.kernels.wkv6 import wkv6_seq_pallas
+    B, C, D = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+    h = L.apply_norm(lp["ln1"], x, "layernorm")
+    p = lp["att"]
+    mm = lambda a, w_: chunk_matmul(a, w_, dt, interpret=interpret)
+    # shifted sequence: position t mixes with h_{t-1} rounded through the
+    # state dtype (the oracle's `h.astype(att_x.dtype)` carry); past the
+    # valid prefix the carry freezes, like the oracle's masked commits
+    prev = shifted_prev(h.astype(st["att_x"].dtype), st["att_x"], valid)
+    dx = prev.astype(h.dtype) - h
+    # ddlerp with the low-rank matmuls chunk-shaped
+    xxx = h + dx * p["time_maa_x"]
+    dmix = jnp.tanh(mm(xxx, p["maa_w1"])).reshape(B, C, 5, _MAA_RANK)
+    deltas = jnp.einsum("...sr,srd->...sd", dmix, p["maa_w2"])
+    mus = p["time_maa"] + deltas
+    xw, xk, xv, xr, xg = (h + dx * mus[..., i, :] for i in range(5))
+    r = mm(xr, p["wr"]).reshape(B, C, H, N)
+    k = mm(xk, p["wk"]).reshape(B, C, H, N)
+    v = mm(xv, p["wv"]).reshape(B, C, H, N)
+    g = jax.nn.silu(mm(xg, p["wg"]))
+    dd = p["time_decay"] + mm(jnp.tanh(mm(xw, p["td_w1"])), p["td_w2"])
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32))).reshape(B, C, H, N)
+    y, S_new = wkv6_seq_pallas(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, p["time_faaaa"].astype(jnp.float32),
+        st["wkv_s"].astype(jnp.float32), valid=valid,
+        carry_dtype=jnp.dtype(st["wkv_s"].dtype).name, interpret=interpret)
+    y = _group_norm(p["ln_x"], y.reshape(B, C, D).astype(h.dtype), H)
+    x2 = x + mm(y * g, p["wo"])
+    h2 = L.apply_norm(lp["ln2"], x2, "layernorm")
+    p2 = lp["ffn"]
+    prev2 = shifted_prev(h2.astype(st["ffn_x"].dtype), st["ffn_x"], valid)
+    ffn_x = prev2.astype(h2.dtype)
+    mix = lambda m: h2 * p2[m] + ffn_x * (1.0 - p2[m])
+    rr = jax.nn.sigmoid(mm(mix("time_mix_r"), p2["wr"]))
+    kk = jnp.square(jax.nn.relu(mm(mix("time_mix_k"), p2["wk"])))
+    ffn = rr * mm(kk, p2["wv"])
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    new_st = {"att_x": last_valid_select(h, st["att_x"], n_valid),
+              "ffn_x": last_valid_select(h2, st["ffn_x"], n_valid),
+              # masked + dtype-snapped inside the kernel
+              "wkv_s": S_new.astype(st["wkv_s"].dtype)}
+    return x2 + ffn, new_st
+
+
+def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
+                  interpret: bool | None = None):
+    """Fused chunked prefill: tokens (B, C) with a per-slot PREFIX validity
+    mask (B, C) -> (new_state, last-valid logits (B, 1, V)).  Bit-identical
+    to the engine's scan-of-`decode_step` prefill oracle; packed Δ-PoT
+    projection weights decode inside the chunk-matmul kernels (run
+    `prepare_prefill_params` once first so the few element-wise-consumed
+    packed leaves arrive plain).  See models/rwkv4.py `prefill_chunk` for
+    the shared contract."""
+    del pos
+    from repro.core.quant.serving import broadcast_packed_scales, \
+        cast_compute
+    from repro.kernels.fused_prefill import chunk_matmul, gather_last_valid
+    dt = jnp.dtype(cfg.dtype)
+    params = cast_compute(params, dt)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)     # (B,C,D)
+    x = L.apply_norm(params["ln0"], x, "layernorm")
+    blocks = broadcast_packed_scales(params["blocks"], cfg.n_layers)
+
+    def body(x, xs):
+        lp, st = xs
+        return block_prefill(lp, st, x, valid, cfg, interpret=interpret)
+
+    x, new_state = jax.lax.scan(body, x, (blocks, state))
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    xl = gather_last_valid(x, jnp.maximum(n_valid - 1, 0))[:, None]
+    xl = L.apply_norm(params["ln_f"], xl, "layernorm")
+    logits = chunk_matmul(xl, params["head"], xl.dtype, interpret=interpret)
+    return new_state, jnp.where((n_valid > 0)[:, None, None], logits,
+                                jnp.zeros_like(logits))
+
+
+# packed leaves block_prefill consumes OUTSIDE a matmul: element-wise mixes,
+# the einsum'd low-rank delta table, and the WKV bonus
+_PREFILL_PLAIN = ("time_maa_x", "time_maa", "maa_w2", "time_faaaa")
+
+
+def prepare_prefill_params(params, cfg: ModelConfig):
+    """One-time host-side prep for the fused prefill path: pre-decode the
+    few packed leaves the chunk datapath consumes element-wise (they're
+    additive-sized — decoding them once at startup costs nothing), so the
+    prefill TRACE never unpacks anything: every remaining packed leaf
+    streams its uint8 codes straight into a chunk-matmul kernel.  Decoding
+    uses the same `unpack_leaf` as the per-op oracle, so bits match."""
+    del cfg
+    from repro.core.quant.serving import is_packed_leaf, unpack_leaf
+    att = dict(params["blocks"]["att"])
+    for key in _PREFILL_PLAIN:
+        if is_packed_leaf(att[key]):
+            att[key] = unpack_leaf(att[key])
+    return {**params, "blocks": {**params["blocks"], "att": att}}
+
+
 def decode_step(params, state, tokens, pos, cfg: ModelConfig):
     """tokens: (B,1) -> (logits (B,1,V), new_state)."""
     del pos

@@ -9,7 +9,9 @@ This module provides the detection half plus a supervisor loop implementing
 that policy, testable in-process via FailureInjector.
 
   ServingCounters   — throughput/latency telemetry for the continuous-
-                      batching engine (repro.serving): tokens/s, TTFT,
+                      batching engine (repro.serving): tokens/s, TTFT
+                      (with its prefill decomposition: per-request prefill
+                      ticks and admit -> first-token wall time),
                       per-request latency, slot occupancy
   HeartbeatMonitor  — per-host last-seen tracking with a dead-host predicate
   StragglerDetector — per-step duration EMA; flags hosts slower than
@@ -44,8 +46,15 @@ class ServingCounters:
         self.peak_active = 0
         self.peak_queued = 0
         self._enqueue_t: dict[int, float] = {}
+        self._admit_t: dict[int, float] = {}
+        self._prefill_ticks: dict[int, int] = {}
         self.ttft_s: list[float] = []      # enqueue -> first token
         self.latency_s: list[float] = []   # enqueue -> completion
+        # time-to-first-token decomposition: how many prefill calls each
+        # request's prompt took, and the admit -> first-token wall time
+        # (the part of TTFT the prefill path controls — queueing excluded)
+        self.prefill_ticks: list[int] = []
+        self.prefill_s: list[float] = []
 
     # -- hooks (called by the engine/scheduler) ----------------------------
     def on_enqueue(self, rid: int):
@@ -53,11 +62,22 @@ class ServingCounters:
 
     def on_admit(self, rid: int):
         self.admitted += 1
+        self._admit_t[rid] = self._clock()
+
+    def on_prefill(self, rid: int, n_tokens: int):
+        """One prefill call absorbed `n_tokens` of request `rid`'s prompt."""
+        self.prefill_tokens += n_tokens
+        self._prefill_ticks[rid] = self._prefill_ticks.get(rid, 0) + 1
 
     def on_token(self, rid: int, *, first: bool = False):
         self.decode_tokens += 1
-        if first and rid in self._enqueue_t:
-            self.ttft_s.append(self._clock() - self._enqueue_t[rid])
+        if first:
+            if rid in self._enqueue_t:
+                self.ttft_s.append(self._clock() - self._enqueue_t[rid])
+            t_admit = self._admit_t.pop(rid, None)
+            if t_admit is not None:
+                self.prefill_s.append(self._clock() - t_admit)
+            self.prefill_ticks.append(self._prefill_ticks.pop(rid, 0))
 
     def on_finish(self, rid: int):
         self.finished += 1
@@ -69,6 +89,8 @@ class ServingCounters:
         """Evicted before completion: not a completion, no latency sample."""
         self.cancelled += 1
         self._enqueue_t.pop(rid, None)
+        self._admit_t.pop(rid, None)
+        self._prefill_ticks.pop(rid, None)
 
     def on_tick(self, *, active: int, queued: int):
         self.ticks += 1
@@ -92,6 +114,8 @@ class ServingCounters:
                 (self.prefill_tokens + self.decode_tokens) / dt,
             "mean_ttft_s": mean(self.ttft_s),
             "mean_latency_s": mean(self.latency_s),
+            "mean_prefill_ticks": mean(self.prefill_ticks),
+            "mean_prefill_s": mean(self.prefill_s),
             "peak_active_slots": self.peak_active,
             "peak_queue_depth": self.peak_queued,
         }

@@ -7,16 +7,25 @@ engine's only two device programs:
     active-slot mask (optionally unpacking Δ-PoT-quantized weights inside
     the jit, so int8 codes are what crosses HBM — the paper's bandwidth
     win riding along for free), and
-  * the FUSED PREFILL CHUNK — a scan of the same masked pool-wide step
-    over a fixed-size token window, absorbing up to `prefill_chunk`
-    prompt tokens for EVERY prefilling slot in one device call; a
-    per-slot-per-token validity mask maps every prompt length onto one
-    compiled shape, and a fresh-slot mask resets newly admitted lanes to
-    the initial state inside the same call.
+  * the PREFILL CHUNK — absorbing up to `prefill_chunk` prompt tokens for
+    EVERY prefilling slot in one device call; a per-slot-per-token
+    validity mask maps every prompt length onto one compiled shape, and a
+    fresh-slot mask resets newly admitted lanes to the initial state
+    inside the same call.  Two structures, selected by `fused_prefill`:
+    the per-op ORACLE (a `lax.scan` of the masked pool-wide `decode_step`
+    — one D-wide matvec per token), and the FUSED CHUNKED path
+    (`Model.prefill_chunk`): the whole chunk's token-shift / layernorm /
+    projections / FFN as (S·C, D)-shaped matmuls, the WKV recurrence
+    on-chip through the Pallas sequence kernels, and Δ-PoT-packed weights
+    decoded INSIDE the matmul kernels so uint8 codes are all that crosses
+    HBM during the prompt phase.  Both prefill structures are compiled
+    with defined rounding semantics (`kernels.common.exact_jit`), which
+    is what makes them BIT-identical to each other
+    (tests/test_prefill.py).
 
-Both are traced exactly once (`trace_counts` proves it in tests).  See
-docs/serving.md for the API walkthrough and docs/architecture.md for the
-request lifecycle.
+All programs are traced exactly once (`trace_counts` proves it in
+tests).  See docs/serving.md for the API walkthrough and
+docs/architecture.md for the request lifecycle.
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import exact_jit
 from repro.models.registry import Model, get_model
 from repro.runtime.monitor import ServingCounters
 from repro.serving.scheduler import Request, Scheduler
@@ -89,15 +99,24 @@ class ServingEngine:
                             double-buffered behind the previous layer's
                             compute.
                  `True` is accepted as "block" (PR 2 compatibility).  All
-                 modes are bit-identical (tests/test_fused_decode.py);
-                 prefill keeps the per-op scan either way.
+                 modes are bit-identical (tests/test_fused_decode.py).
+    fused_prefill — prompt-phase kernel granularity:
+                 False — the per-op oracle: one `lax.scan` of the masked
+                         pool-wide `decode_step` over the chunk;
+                 True  — the fused chunked path (`Model.prefill_chunk`):
+                         chunk-shaped matmuls + the masked on-chip WKV
+                         sequence kernel, with packed Δ-PoT weights
+                         decoded in-kernel (no `unpack_params` in the
+                         prefill trace).  Bit-identical to the oracle
+                         (tests/test_prefill.py); decode is unaffected.
     """
 
     def __init__(self, model: Model | str, *, params: Any = None,
                  smoke: bool = True, max_batch: int = 8,
                  prefill_chunk: int = 16, max_len: int = 0,
                  state_dtype=jnp.bfloat16, quantized: bool = False,
-                 fused_decode: bool = False, seed: int = 0,
+                 fused_decode: bool = False, fused_prefill: bool = False,
+                 seed: int = 0,
                  counters: Optional[ServingCounters] = None):
         if isinstance(model, str):
             model = get_model(model, smoke=smoke)
@@ -123,9 +142,15 @@ class ServingEngine:
                 f"{model.cfg.name} has no decode_step_fused_model; "
                 "fused_decode='model' needs a model with the whole-model "
                 "Pallas megakernel")
+        if fused_prefill and not model.has_fused_prefill:
+            raise ValueError(
+                f"{model.cfg.name} has no prefill_chunk; fused_prefill "
+                "needs a model with the fused chunked-prefill entry "
+                "(kernels/fused_prefill.py)")
         self.model = model
         self.quantized = quantized
         self.fused_decode = fused_decode
+        self.fused_prefill = bool(fused_prefill)
         if params is None:
             params = model.init_params(jax.random.PRNGKey(seed))
         if quantized:
@@ -139,6 +164,13 @@ class ServingEngine:
         # needs stacked leaves).
         self._decode_params = model.prepare_fused_model_params(params) \
             if fused_decode == "model" else params
+        # Fused-prefill hot path: pre-decode the few packed leaves the
+        # chunk datapath consumes element-wise (rwkv6; rwkv4 is identity)
+        # ONCE at startup, so the prefill trace never unpacks anything —
+        # every remaining Δ-PoT code plane streams straight into a
+        # chunk-matmul kernel.
+        self._prefill_params = model.prepare_prefill_params(params) \
+            if fused_prefill else params
         self.counters = counters if counters is not None else \
             ServingCounters()
         self.pool = SlotStatePool(model, max_batch, max_len=max_len,
@@ -201,12 +233,18 @@ class ServingEngine:
             jax.eval_shape(maybe_unpack, self.params),
             self.pool.state, jax.ShapeDtypeStruct((S, 1), jnp.int32))
         fresh_lane = self.pool._fresh   # batch-1 leaves broadcast per slot
+        fused_prefill = self.fused_prefill
 
         def prefill(params, state, tokens, valid, fresh):
             self.trace_counts["prefill"] += 1  # increments only on trace
-            p = maybe_unpack(params)
             # reset newly admitted lanes to the fresh state in-call
             state = masked(state, fresh_lane, ~fresh)
+            if fused_prefill:
+                # fused chunked path: chunk-shaped matmuls + on-chip WKV
+                # scan; packed Δ-PoT leaves decode INSIDE the kernels, so
+                # no maybe_unpack here — codes cross HBM, not bf16
+                return model.prefill_chunk(params, state, tokens, valid)
+            p = maybe_unpack(params)
 
             def body(carry, xs):
                 state, last = carry
@@ -223,12 +261,16 @@ class ServingEngine:
             return state, last
 
         j_decode = jax.jit(decode, donate_argnums=(1,))
-        j_prefill = jax.jit(prefill, donate_argnums=(1,))
+        # BOTH prefill structures compile with defined rounding semantics
+        # (exact_jit: no excess-precision folding) — the property that
+        # makes the fused chunked path bit-identical to the per-op scan;
+        # decode keeps the plain jit (its bits are pinned by PR 2/3 tests).
+        j_prefill = exact_jit(prefill, donate_argnums=(1,))
         return (lambda state, toks, mask:
                 j_decode(self._decode_params, state, jnp.asarray(toks),
                          jnp.asarray(mask)),
                 lambda state, toks, valid, fresh:
-                j_prefill(self.params, state, jnp.asarray(toks),
+                j_prefill(self._prefill_params, state, jnp.asarray(toks),
                           jnp.asarray(valid), jnp.asarray(fresh)))
 
     # -- request API ---------------------------------------------------------

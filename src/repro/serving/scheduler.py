@@ -6,11 +6,12 @@ stalls).  Per tick the scheduler
 
   1. ADMITS queued requests into free pool slots,
   2. advances EVERY prefilling slot by up to one fixed-size prompt chunk
-     in ONE fused call (a jitted scan of `decode_step` over the whole
-     pool, with a per-slot-per-token validity mask so every prompt
-     length and slot combination reuses the same compiled shape; newly
-     admitted slots are reset to the fresh state inside the same call
-     via a fresh-slot mask), and
+     in ONE fused call (per-op: a jitted scan of `decode_step` over the
+     whole pool; fused: the chunk-matmul + on-chip-WKV `prefill_chunk`
+     path — bit-identical either way), with a per-slot-per-token validity
+     mask so every prompt length and slot combination reuses the same
+     compiled shape; newly admitted slots are reset to the fresh state
+     inside the same call via a fresh-slot mask, and
   3. runs ONE fused decode step over the whole pool for all DECODE slots,
      with an active-slot mask selecting which lanes' states commit.
 
@@ -64,11 +65,40 @@ def sample_token(logits_row: np.ndarray, temperature: float,
                  rng: Optional[np.random.Generator]) -> int:
     """Greedy argmax at temperature<=0 (ties -> first index, matching
     jnp.argmax, which keeps the engine bit-compatible with the sequential
-    loop); Gumbel-max sampling otherwise."""
+    loop); Gumbel-max sampling otherwise.  Single-row reference for
+    `sample_tokens`, the batched form the scheduler's hot path uses."""
     if temperature <= 0.0 or rng is None:
         return int(np.argmax(logits_row))
     g = rng.gumbel(size=logits_row.shape)
     return int(np.argmax(logits_row.astype(np.float64) / temperature + g))
+
+
+def sample_tokens(rows: np.ndarray, metas) -> np.ndarray:
+    """Vectorized sampling for one tick's emitting slots.
+
+    rows (n, V) are the slots' last-logits rows (f32), metas the matching
+    `_Slot`s.  The Gumbel noise is still drawn from EACH SLOT'S OWN
+    Generator — a seeded request's RNG stream consumes exactly the draws
+    it would alone, in the same order, so its output never depends on who
+    shares the tick — but the temperature scale, the noise add, and above
+    all the argmax over the (n, V) block happen in single numpy calls
+    instead of one call per slot.  Greedy rows ride the same batched
+    argmax: the f32 -> f64 cast is exact, so ties resolve identically to
+    `sample_token`'s per-row `np.argmax` (bit-stable either way)."""
+    n, V = rows.shape
+    sampling = [i for i, meta in enumerate(metas)
+                if meta.req.temperature > 0.0 and meta.rng is not None]
+    if not sampling:
+        # all-greedy tick (the default): one f32 argmax, no temporaries
+        return np.argmax(rows, axis=1)
+    temps = np.ones((n, 1))
+    noise = np.zeros((n, V))
+    for i in sampling:
+        temps[i, 0] = metas[i].req.temperature
+        noise[i] = metas[i].rng.gumbel(size=V)
+    # one vectorized scale+add+argmax over the whole block; /1.0 and +0.0
+    # are exact, so greedy rows match their per-row argmax bit-for-bit
+    return np.argmax(rows.astype(np.float64) / temps + noise, axis=1)
 
 
 class Scheduler:
@@ -167,20 +197,21 @@ class Scheduler:
             parts[slot] = len(part)
         self.pool.state, last_logits = self.prefill_fn(
             self.pool.state, toks, valid, fresh)
-        rows = None
+        finishing = []
         for slot, meta in prefilling:
             meta.fresh = False
             meta.n_prefilled += parts[slot]
             if self.counters is not None:
-                self.counters.prefill_tokens += parts[slot]
+                self.counters.on_prefill(meta.req.rid, parts[slot])
             if meta.n_prefilled == len(meta.req.prompt):
                 # prompt fully absorbed: the last prompt token's logits
                 # yield the first generated token; the slot joins the
                 # fused decode batch from this tick on.
                 meta.phase = DECODE
-                if rows is None:
-                    rows = np.asarray(last_logits[:, -1], np.float32)
-                self._emit(slot, meta, rows[slot])
+                finishing.append((slot, meta))
+        if finishing:
+            rows = np.asarray(last_logits[:, -1], np.float32)
+            self._emit([(s, m, rows[s]) for s, m in finishing])
 
     def _decode_tick(self):
         active = [(s, m) for s, m in self.slots.items()
@@ -195,23 +226,29 @@ class Scheduler:
             mask[slot] = True
         logits, self.pool.state = self.decode_fn(self.pool.state, toks, mask)
         rows = np.asarray(logits[:, -1], np.float32)
-        for slot, meta in active:
-            self._emit(slot, meta, rows[slot])
+        self._emit([(s, m, rows[s]) for s, m in active])
 
     # -- helpers -----------------------------------------------------------
 
-    def _emit(self, slot: int, meta: _Slot, logits_row: np.ndarray):
-        req = meta.req
-        tok = sample_token(logits_row, req.temperature, meta.rng)
-        meta.generated.append(tok)
-        meta.next_token = tok
-        if self.counters is not None:
-            self.counters.on_token(req.rid, first=len(meta.generated) == 1)
-        self.on_token(req, tok)
-        done = (len(meta.generated) >= req.max_new_tokens or
-                (req.eos_token is not None and tok == req.eos_token))
-        if done:
-            self._retire(slot, meta)
+    def _emit(self, emitting: list):
+        """Sample + book-keep one tick's emitting slots.  Sampling is the
+        batched `sample_tokens` (ONE argmax call for the whole block);
+        bookkeeping stays per-slot."""
+        toks = sample_tokens(
+            np.stack([row for _, _, row in emitting]),
+            [meta for _, meta, _ in emitting])
+        for (slot, meta, _), tok in zip(emitting, toks):
+            req, tok = meta.req, int(tok)
+            meta.generated.append(tok)
+            meta.next_token = tok
+            if self.counters is not None:
+                self.counters.on_token(req.rid,
+                                       first=len(meta.generated) == 1)
+            self.on_token(req, tok)
+            done = (len(meta.generated) >= req.max_new_tokens or
+                    (req.eos_token is not None and tok == req.eos_token))
+            if done:
+                self._retire(slot, meta)
 
     def _retire(self, slot: int, meta: _Slot, *, cancelled: bool = False):
         del self.slots[slot]
