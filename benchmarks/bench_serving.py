@@ -14,9 +14,15 @@ The ratio at batch 8 is the PR's acceptance gate (>= 4x on CPU).  Smoke
 configs keep this container-sized; the mechanism (amortizing dispatch and
 reading weights once per step for the whole batch) is exactly what scales
 on real accelerators.
+
+`--devices N` drives the engine on a data-parallel ("data",) serving
+mesh (the slot pool and per-tick batch shard, weights replicate) —
+`--smoke` shrinks the sweep to one batch size for CI, which runs this
+under XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -62,9 +68,10 @@ def seed_loop_tokens_per_s(model, params, prompts) -> float:
     return len(prompts) * N_TOKENS / dt
 
 
-def engine_tokens_per_s(model, params, prompts) -> tuple[float, dict]:
+def engine_tokens_per_s(model, params, prompts,
+                        mesh=None) -> tuple[float, dict]:
     engine = ServingEngine(model, params=params, max_batch=len(prompts),
-                           prefill_chunk=PROMPT_LEN)
+                           prefill_chunk=PROMPT_LEN, mesh=mesh)
     # compile both device programs outside the timed region
     warm = engine.submit(prompts[0], max_new_tokens=2)
     engine.run()
@@ -81,14 +88,20 @@ def engine_tokens_per_s(model, params, prompts) -> tuple[float, dict]:
     return snap["decode_tokens"] / dt, snap
 
 
-def run():
+def run(*, smoke: bool = False, devices: int | None = None):
     model = get_model(ARCH, smoke=True)
     params = model.init_params(jax.random.PRNGKey(0))
-    for n in (1, 8, 32):
+    mesh = None
+    tag = ""
+    if devices is not None:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(devices)
+        tag = f"/dp{mesh.devices.size}"
+    for n in ((8,) if smoke else (1, 8, 32)):
         prompts = _prompts(n, model.cfg.vocab)
         seed_tps = seed_loop_tokens_per_s(model, params, prompts)
-        eng_tps, snap = engine_tokens_per_s(model, params, prompts)
-        emit(f"serving/{ARCH}/batch{n}", 1e6 / max(eng_tps, 1e-9),
+        eng_tps, snap = engine_tokens_per_s(model, params, prompts, mesh)
+        emit(f"serving/{ARCH}{tag}/batch{n}", 1e6 / max(eng_tps, 1e-9),
              f"seed_tok_s={seed_tps:.1f};engine_tok_s={eng_tps:.1f};"
              f"speedup={eng_tps/seed_tps:.2f}x;"
              f"mean_ttft_ms={snap['mean_ttft_s']*1e3:.1f};"
@@ -97,4 +110,11 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one batch size (CI-sized)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="drive the engine on a data-parallel serving "
+                         "mesh over N local devices (0 = all visible)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, devices=args.devices)

@@ -35,9 +35,29 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def provenance() -> dict:
+    """Where this record was measured: jax version, device kind/count and
+    the active mesh shape (None outside any mesh).  Stamped into every
+    BENCH_*.json by `write_bench_json`, so a number can never be compared
+    across PRs without knowing what hardware/topology produced it."""
+    from repro.parallel.sharding import get_current_mesh
+    devices = jax.devices()
+    mesh = get_current_mesh()
+    return {
+        "jax_version": jax.__version__,
+        "device_kind": devices[0].device_kind,
+        "device_count": len(devices),
+        "mesh_shape": dict(mesh.shape) if mesh is not None else None,
+    }
+
+
 def write_bench_json(path: str, payload: dict) -> None:
     """Persist one benchmark's machine-readable record (a BENCH_*.json at
-    the repo root) so the perf trajectory is diffable across PRs."""
+    the repo root) so the perf trajectory is diffable across PRs.  The
+    measurement provenance (jax version, device kind/count, mesh shape)
+    is stamped into every record; a payload's own "provenance" key wins
+    if it sets one."""
+    payload = {"provenance": provenance(), **payload}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -19,8 +19,21 @@ API:
   cast_compute(tree, dtype)    -> packed-aware compute-dtype cast
   packed_abstract(spec)        -> ShapeDtypeStruct tree (dry-run input)
   packed_axes(spec_axes)       -> logical-sharding tree for the packed form
+
+Param preparation (one pass, shared by every serving path):
+  PreparedParams               -> container holding every per-path form of
+                                 one weight set (raw / decode / prefill) —
+                                 built once by serving.plan.build_plan
+  prepare_layer_stack_params   -> generic megakernel prep (compute cast +
+                                 fuse_layer_stack); models wrap it instead
+                                 of duplicating the plumbing
+  predecode_packed_leaves      -> decode named packed leaves in place (the
+                                 generic form of rwkv6's prefill prep)
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Any
 
 import numpy as np
 import jax
@@ -208,6 +221,69 @@ def unfuse_layer(rows, aux_vals, manifest, tdef):
         else:
             leaves.append(aux_vals[entry[1]])
     return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedParams:
+    """Every per-path form of one weight set, prepared ONCE at startup.
+
+    The serving engine used to keep three ad-hoc param transforms
+    (`pack_params` at init, `prepare_fused_model_params` for the
+    megakernel, `prepare_prefill_params` for the fused prefill) as
+    separate attributes wired by boolean flags.  This container is the
+    single product of that pipeline — built by
+    `repro.serving.plan.build_plan` in one pass:
+
+      raw      — the tree as stored (packed Δ-PoT when `quantized`);
+                 per-op paths consume it, unpacking IN-TRACE when packed.
+      decode   — the form the selected decode path consumes (e.g. the
+                 megakernel's pre-cast `FusedLayerStack` slabs; == raw for
+                 per-op / per-block paths).
+      prefill  — the form the selected prefill path consumes (e.g. rwkv6's
+                 pre-decoded elementwise leaves; == raw for per-op).
+
+    quantized / decode_path / prefill_path record which pipeline produced
+    the forms, so consumers (and error messages) never re-derive it."""
+    raw: Any
+    decode: Any
+    prefill: Any
+    quantized: bool = False
+    decode_path: str = "per_op"
+    prefill_path: str = "per_op"
+
+
+def prepare_layer_stack_params(params, cfg, extra_block_operands=None):
+    """Generic host-side prep for the whole-model megakernel: apply the
+    packed-aware compute cast, attach any extra per-block kernel operands
+    (rwkv4's hw LUT tables), and chunk the stacked per-layer weights into
+    per-dtype contiguous slabs (`fuse_layer_stack`) — the paper's per-layer
+    weight chunk, fetched as ONE stream per layer instead of one gather per
+    leaf.  Models' `prepare_fused_model_params` entries wrap this instead
+    of each duplicating the cast + fuse plumbing."""
+    params = cast_compute(params, jnp.dtype(cfg.dtype))
+    blocks = params["blocks"]
+    if extra_block_operands:
+        blocks = {**blocks, **extra_block_operands}
+    return {**params, "blocks": fuse_layer_stack(blocks, cfg.n_layers)}
+
+
+def predecode_packed_leaves(params, paths):
+    """Decode the packed leaves at the given key-paths (tuples of dict
+    keys) with `unpack_leaf`, leaving everything else — including plain
+    leaves at those paths — untouched.  The generic form of "this path
+    consumes a few leaves element-wise, so pre-decode them once at startup
+    and let every remaining uint8 code plane stream into a kernel"
+    (rwkv6's fused-prefill prep).  Same `unpack_leaf` as the per-op
+    oracle, so bits match."""
+    def update(node, path):
+        if not path:
+            return unpack_leaf(node) if _is_packed(node) else node
+        head, rest = path[0], path[1:]
+        return {**node, head: update(node[head], rest)}
+
+    for path in paths:
+        params = update(params, tuple(path))
+    return params
 
 
 def cast_compute(tree, dtype):

@@ -14,6 +14,7 @@ all-reduce only — see repro.parallel.sharding's AXIS_RULES).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 SINGLE_POD_SHAPE = (16, 16)
 MULTI_POD_SHAPE = (2, 16, 16)
@@ -28,3 +29,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """A 1x1 mesh over the real local device (smoke tests, examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(devices: int = 0):
+    """A 1-D ("data",) mesh over `devices` local devices (all when 0) —
+    the serving engine's data-parallel topology: the slot pool and
+    per-tick batch shard over "data", weights replicate (there is no
+    "model" axis — serving decode is DP-only; see
+    repro.parallel.sharding's pool helpers).  On a CPU host, spawn
+    virtual devices first with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N (must be set
+    before jax initializes)."""
+    avail = jax.devices()
+    n = len(avail) if devices in (0, None) else int(devices)
+    if n > len(avail):
+        raise ValueError(
+            f"requested {n} devices but only {len(avail)} are visible "
+            "(CPU hosts: set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before jax initializes)")
+    return jax.sharding.Mesh(np.asarray(avail[:n]), ("data",))

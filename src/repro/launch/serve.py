@@ -7,15 +7,27 @@ TTFT, latency) from `runtime.monitor.ServingCounters`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m --smoke \
         --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16] \
-        [--fused[=block|model]] [--fused-prefill]
+        [--fused[=block|model]] [--fused-prefill] [--devices N | --mesh]
 
-`--fused block` decodes through the per-block fused Pallas kernel (one
-launch per layer); `--fused model` through the whole-model megakernel
-(ONE launch per decode step, grid over layers — see docs/kernels.md).
-`--fused-prefill` absorbs prompt chunks through the fused chunked-prefill
-path (chunk-shaped matmuls + the on-chip WKV sequence kernel, packed
-Δ-PoT weights decoded in-kernel) instead of the per-op scan — same bits,
-measured faster in benchmarks/bench_prefill.py.
+Every flag combination resolves to ONE `repro.serving.plan.ExecutionPlan`
+(path selection + one-pass param prep + program cache + mesh placement);
+the engine just drives it.  `--fused block` decodes through the per-block
+fused Pallas kernel (one launch per layer); `--fused model` through the
+whole-model megakernel (ONE launch per decode step, grid over layers —
+see docs/kernels.md).  `--fused-prefill` absorbs prompt chunks through
+the fused chunked-prefill path (chunk-shaped matmuls + the on-chip WKV
+sequence kernel, packed Δ-PoT weights decoded in-kernel) instead of the
+per-op scan — same bits, measured faster in benchmarks/bench_prefill.py.
+
+`--devices N` serves data-parallel over N local devices (`--mesh` over
+all of them): the slot pool and per-tick batch shard across a 1-D
+("data",) mesh, weights replicate, tokens stay bit-identical to the
+1-device engine (docs/serving.md §multi-device serving).  On a CPU host
+spawn virtual devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m \
+        --smoke --batch 8 --devices 8
 
 `--legacy` keeps the seed behavior — one jitted decode_step in a
 single-batch host loop — and is also the reference baseline for
@@ -133,16 +145,25 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           n_tokens: int = 32, quantized: bool = False, seed: int = 0,
           prefill_chunk: int = 16, prompt_len: int = 8,
           temperature: float = 0.0, fused: bool | str | None = False,
-          fused_prefill: bool = False):
+          fused_prefill: bool = False, devices: int | None = None):
     """Continuous-batching serving: `batch` concurrent requests through the
-    slotted engine; prints the telemetry snapshot and returns the handles."""
+    slotted engine; prints the telemetry snapshot and returns the handles.
+    `devices` (0 = all visible) serves data-parallel over a ("data",)
+    serving mesh — pool and batch sharded, weights replicated."""
+    from repro.launch.mesh import make_serving_mesh
     from repro.serving import ServingEngine
 
+    mesh = None
+    if devices is not None:
+        mesh = make_serving_mesh(devices)
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{mesh.devices.size} x {mesh.devices.flat[0].device_kind}")
     engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
                            prefill_chunk=prefill_chunk,
                            quantized=quantized,
                            fused_decode=fused or False,
-                           fused_prefill=fused_prefill, seed=seed)
+                           fused_prefill=fused_prefill, seed=seed,
+                           mesh=mesh)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
     handles = [
@@ -184,6 +205,15 @@ def main():
                          "kernel, packed weights decoded in-kernel "
                          "(kernels/fused_prefill.py); bit-identical to "
                          "the per-op prefill scan")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="serve data-parallel over N local devices (the "
+                         "slot pool and per-tick batch shard over a "
+                         "('data',) mesh, weights replicate); CPU hosts "
+                         "need XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N set before launch")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shorthand for --devices over ALL visible "
+                         "devices")
     ap.add_argument("--legacy", action="store_true",
                     help="seed single-loop decode instead of the engine")
     ap.add_argument("--hw-numerics", action="store_true",
@@ -194,11 +224,13 @@ def main():
                      n_tokens=args.tokens, quantized=args.quantized,
                      hw_numerics=args.hw_numerics)
     else:
+        devices = 0 if args.mesh else args.devices
         serve(args.arch, smoke=args.smoke, batch=args.batch,
               n_tokens=args.tokens, quantized=args.quantized,
               prefill_chunk=args.prefill_chunk,
               prompt_len=args.prompt_len, temperature=args.temperature,
-              fused=args.fused, fused_prefill=args.fused_prefill)
+              fused=args.fused, fused_prefill=args.fused_prefill,
+              devices=devices)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,51 @@ def _is_axes_tuple(x) -> bool:
         isinstance(a, (str, type(None))) for a in x)
 
 
+@dataclasses.dataclass(frozen=True)
+class PathDescriptor:
+    """Declarative description of ONE executable serving path.
+
+    The registry used to expose a matrix of boolean capability flags
+    (`has_decode` / `has_fused_decode` / `has_fused_model_decode` /
+    `has_fused_prefill`) that the serving engine cross-referenced with
+    three separately-wired `prepare_*` transforms.  A PathDescriptor is
+    that row of the matrix as data: which module attribute implements the
+    step, which (if any) prepares its params, and whether packed Δ-PoT
+    leaves decode in-kernel (`fused=True`: codes pass through the trace
+    whole) or must be unpacked in-trace by the caller (`fused=False`, the
+    per-op oracle).  `repro.serving.plan.build_plan` selects one decode
+    and one prefill descriptor and builds programs from them; the old
+    `has_*` properties survive as thin views over the descriptor tables.
+
+    name    — plan key ("per_op" | "block" | "model" | "chunked")
+    kind    — "decode" | "prefill"
+    entry   — module attribute implementing the step
+    prepare — module attribute for one-time host-side param prep (None:
+              params pass through)
+    fused   — packed leaves decode inside the kernels (no in-trace unpack)
+    """
+    name: str
+    kind: str
+    entry: str
+    prepare: Optional[str] = None
+    fused: bool = False
+
+
+DECODE_PATHS = (
+    PathDescriptor("per_op", "decode", "decode_step"),
+    PathDescriptor("block", "decode", "decode_step_fused", fused=True),
+    PathDescriptor("model", "decode", "decode_step_fused_model",
+                   prepare="prepare_fused_model_params", fused=True),
+)
+
+PREFILL_PATHS = (
+    # the per-op prefill is a scan of decode_step; the plan builds the scan
+    PathDescriptor("per_op", "prefill", "decode_step"),
+    PathDescriptor("chunked", "prefill", "prefill_chunk",
+                   prepare="prepare_prefill_params", fused=True),
+)
+
+
 def _module_for(cfg: ModelConfig) -> ModuleType:
     if cfg.rwkv_version == 4:
         from repro.models import rwkv4
@@ -82,9 +127,33 @@ class Model:
             return a
         return jax.tree_util.tree_map(cast, params)
 
+    # -- serving paths (plan descriptors) ----------------------------------
+    def decode_paths(self) -> dict[str, PathDescriptor]:
+        """The decode paths this model can execute, keyed by plan name —
+        the declarative replacement for the has_* capability flags.  A
+        path is present iff the module ships its entry point."""
+        return {d.name: d for d in DECODE_PATHS
+                if hasattr(self.module, d.entry)}
+
+    def prefill_paths(self) -> dict[str, PathDescriptor]:
+        """The prefill paths this model can execute, keyed by plan name.
+        "per_op" (a scan of decode_step, built by the plan) is present for
+        any decoder; "chunked" needs the fused `prefill_chunk` entry."""
+        return {d.name: d for d in PREFILL_PATHS
+                if hasattr(self.module, d.entry)}
+
+    def prepare_path_params(self, desc: PathDescriptor, params, **kw):
+        """One-time host-side param prep for one path, dispatched through
+        its descriptor: runs the module's `desc.prepare` (identity when the
+        descriptor or the module has none).  `kw` forwards model extras
+        (rwkv4 megakernel: `hw=True` attaches the LUT operands)."""
+        prep = getattr(self.module, desc.prepare, None) if desc.prepare \
+            else None
+        return params if prep is None else prep(params, self.cfg, **kw)
+
     @property
     def has_decode(self) -> bool:
-        return hasattr(self.module, "decode_step")
+        return "per_op" in self.decode_paths()
 
     def init_decode_state(self, batch: int, max_len: int,
                           dtype=jnp.bfloat16):
@@ -101,7 +170,7 @@ class Model:
     def has_fused_decode(self) -> bool:
         """True when the model ships a single-launch Pallas decode step
         (`decode_step_fused`) alongside the per-op oracle."""
-        return hasattr(self.module, "decode_step_fused")
+        return "block" in self.decode_paths()
 
     def decode_step_fused(self, params, state, tokens, pos):
         """Fused-kernel decode (kernels.fused_decode): one Pallas launch
@@ -116,7 +185,7 @@ class Model:
         """True when the model ships the whole-model megakernel
         (`decode_step_fused_model`): ONE Pallas launch per decode step,
         grid over layers, residual carried in VMEM scratch."""
-        return hasattr(self.module, "decode_step_fused_model")
+        return "model" in self.decode_paths()
 
     def decode_step_fused_model(self, params, state, tokens, pos):
         """Megakernel decode (kernels.fused_decode.fused_model_decode):
@@ -133,8 +202,8 @@ class Model:
         without per-token repacking.  `kw` forwards model extras (rwkv4:
         `hw=True` attaches the LUT operands — the decode's `hw` flag must
         match the prepared form)."""
-        return self.module.prepare_fused_model_params(params, self.cfg,
-                                                      **kw)
+        return self.prepare_path_params(self.decode_paths()["model"],
+                                        params, **kw)
 
     @property
     def has_fused_prefill(self) -> bool:
@@ -142,7 +211,7 @@ class Model:
         (`prefill_chunk`): a whole prompt chunk per device program —
         chunk-shaped matmuls + the masked on-chip WKV sequence kernel —
         bit-identical to scanning `decode_step` over the chunk."""
-        return hasattr(self.module, "prefill_chunk")
+        return "chunked" in self.prefill_paths()
 
     def prefill_chunk(self, params, state, tokens, valid):
         """Fused chunked prefill (kernels.fused_prefill): tokens (B, C)
@@ -158,8 +227,9 @@ class Model:
         packed leaves the chunk datapath consumes element-wise (rwkv6's
         time_maa / maa_w2 / time_faaaa; rwkv4 needs nothing).  Run OUTSIDE
         the step, like `prepare_fused_model_params`."""
-        prep = getattr(self.module, "prepare_prefill_params", None)
-        return params if prep is None else prep(params, self.cfg)
+        desc = self.prefill_paths().get("chunked")
+        return params if desc is None else \
+            self.prepare_path_params(desc, params)
 
     # -- per-slot decode-state contract (serving engine) -------------------
     @property

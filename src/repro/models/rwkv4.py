@@ -353,15 +353,11 @@ def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
                                 jnp.zeros_like(logits))
 
 
-def prepare_prefill_params(params, cfg: ModelConfig):
-    """One-time host-side prep for the fused prefill path.  rwkv4's packed
-    Δ-PoT leaves are ALL consumed by chunk matmuls (r/k/v/wo, the FFN pair,
-    the head), so nothing needs pre-decoding — the tree passes through and
-    every uint8 code plane streams straight into a kernel.  Exists so the
-    engine can treat every model uniformly (rwkv6 pre-decodes its few
-    elementwise-consumed packed leaves here)."""
-    del cfg
-    return params
+# rwkv4 ships no `prepare_prefill_params`: its packed Δ-PoT leaves are ALL
+# consumed by chunk matmuls (r/k/v/wo, the FFN pair, the head), so nothing
+# needs pre-decoding — the registry's "chunked" prefill descriptor has no
+# module prep and passes the tree through (rwkv6 pre-decodes its few
+# elementwise-consumed packed leaves; see its PREFILL_PLAIN_LEAVES).
 
 
 def decode_step(params, state, tokens, pos, cfg: ModelConfig, *,
@@ -453,19 +449,14 @@ def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
 
 def prepare_fused_model_params(params, cfg: ModelConfig, *,
                                hw: bool = False):
-    """One-time host-side prep for the megakernel serving path: apply the
-    packed-aware compute cast, attach the hw LUT operands when requested,
-    and chunk the stacked per-layer weights into per-dtype contiguous
-    slabs (`core.quant.serving.fuse_layer_stack`) — the paper's per-layer
-    weight chunk, fetched as ONE stream per layer instead of one gather
-    per leaf.  `decode_step_fused_model` accepts the result directly; raw
-    trees also work but repack the slab every step."""
-    from repro.core.quant.serving import cast_compute, fuse_layer_stack
-    params = cast_compute(params, jnp.dtype(cfg.dtype))
-    blocks = params["blocks"]
-    if hw:
-        blocks = {**blocks, "_luts": _lut_operands(1)}
-    return {**params, "blocks": fuse_layer_stack(blocks, cfg.n_layers)}
+    """One-time host-side prep for the megakernel serving path — the
+    generic `core.quant.serving.prepare_layer_stack_params` (compute cast
+    + per-layer slab chunking), with the hw LUT operands attached as extra
+    block operands when requested.  `decode_step_fused_model` accepts the
+    result directly; raw trees also work but repack the slab every step."""
+    from repro.core.quant.serving import prepare_layer_stack_params
+    return prepare_layer_stack_params(
+        params, cfg, {"_luts": _lut_operands(1)} if hw else None)
 
 
 def _stack_has_luts(stack) -> bool:

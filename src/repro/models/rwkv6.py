@@ -340,7 +340,9 @@ def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
 
 # packed leaves block_prefill consumes OUTSIDE a matmul: element-wise mixes,
 # the einsum'd low-rank delta table, and the WKV bonus
-_PREFILL_PLAIN = ("time_maa_x", "time_maa", "maa_w2", "time_faaaa")
+PREFILL_PLAIN_LEAVES = tuple(
+    ("blocks", "att", k)
+    for k in ("time_maa_x", "time_maa", "maa_w2", "time_faaaa"))
 
 
 def prepare_prefill_params(params, cfg: ModelConfig):
@@ -348,15 +350,12 @@ def prepare_prefill_params(params, cfg: ModelConfig):
     few packed leaves the chunk datapath consumes element-wise (they're
     additive-sized — decoding them once at startup costs nothing), so the
     prefill TRACE never unpacks anything: every remaining packed leaf
-    streams its uint8 codes straight into a chunk-matmul kernel.  Decoding
-    uses the same `unpack_leaf` as the per-op oracle, so bits match."""
+    streams its uint8 codes straight into a chunk-matmul kernel.  The
+    generic `core.quant.serving.predecode_packed_leaves` does the work
+    (same `unpack_leaf` as the per-op oracle, so bits match)."""
     del cfg
-    from repro.core.quant.serving import is_packed_leaf, unpack_leaf
-    att = dict(params["blocks"]["att"])
-    for key in _PREFILL_PLAIN:
-        if is_packed_leaf(att[key]):
-            att[key] = unpack_leaf(att[key])
-    return {**params, "blocks": {**params["blocks"], "att": att}}
+    from repro.core.quant.serving import predecode_packed_leaves
+    return predecode_packed_leaves(params, PREFILL_PLAIN_LEAVES)
 
 
 def decode_step(params, state, tokens, pos, cfg: ModelConfig):
@@ -422,14 +421,12 @@ def decode_step_fused(params, state, tokens, pos, cfg: ModelConfig, *,
 
 
 def prepare_fused_model_params(params, cfg: ModelConfig):
-    """One-time host-side prep for the megakernel serving path: apply the
-    packed-aware compute cast and chunk the stacked per-layer weights into
-    per-dtype contiguous slabs (`core.quant.serving.fuse_layer_stack`) —
-    one weight stream per layer instead of one gather per leaf."""
-    from repro.core.quant.serving import cast_compute, fuse_layer_stack
-    params = cast_compute(params, jnp.dtype(cfg.dtype))
-    return {**params,
-            "blocks": fuse_layer_stack(params["blocks"], cfg.n_layers)}
+    """One-time host-side prep for the megakernel serving path — the
+    generic `core.quant.serving.prepare_layer_stack_params` (compute cast
+    + per-dtype per-layer slab chunking): one weight stream per layer
+    instead of one gather per leaf."""
+    from repro.core.quant.serving import prepare_layer_stack_params
+    return prepare_layer_stack_params(params, cfg)
 
 
 def decode_step_fused_model(params, state, tokens, pos, cfg: ModelConfig, *,

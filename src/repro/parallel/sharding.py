@@ -119,6 +119,53 @@ def shard_divisible(dim: int, mesh: Mesh, axis: str) -> str | None:
 
 
 # ---------------------------------------------------------------------------
+# Serving-pool placement: data-parallel slot pools and per-tick batches
+# ---------------------------------------------------------------------------
+#
+# The continuous-batching engine's state pool is a batch of INDEPENDENT
+# sequences (one per slot), which makes data-parallel sharding free: the
+# slot axis splits over the DP mesh axes, no step-time collectives appear
+# (nothing contracts across slots), and every other axis replicates on a
+# serving mesh (weights are replicated outright — `replicated_sharding` —
+# so decode never pays a weight all-gather).  `repro.serving.plan` is the
+# consumer: it places the pool and the per-tick token batch through these
+# helpers once at startup.
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes a slot pool may shard over, in rule order."""
+    rule = AXIS_RULES["batch"]
+    return tuple(a for a in rule if a in mesh.shape)
+
+
+def dp_size(mesh: Mesh) -> int:
+    """Total data-parallel ways for slot sharding on this mesh."""
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)] or [1]))
+
+
+def pool_shardings(axes_tree, state_tree, mesh: Mesh):
+    """NamedSharding tree for a slot state pool: each leaf's slot
+    ("batch") axis shards over the DP axes via the standard divisibility
+    rules — a pool width that does not divide the mesh replicates instead
+    of erroring, so any (max_slots, devices) combination stays runnable.
+    `state_tree` may hold concrete arrays or ShapeDtypeStructs; the
+    mapping itself is the generic `tree_shardings`."""
+    return tree_shardings(axes_tree, state_tree, mesh)
+
+
+def batch_sharding(shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+    """Per-tick batch placement (tokens (S, C), masks (S,)): dim 0 is the
+    slot axis, sharded like the pool; trailing dims replicate."""
+    return NamedSharding(mesh, batch_spec(shape, mesh))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement (serving weights: placed once, read
+    locally by every DP shard — no per-step weight collectives)."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# ---------------------------------------------------------------------------
 # Current-mesh context: layer code calls `constrain(x, axes)` which becomes a
 # no-op outside any mesh (CPU smoke tests) and a with_sharding_constraint
 # under the production mesh (set by the launcher / dryrun).

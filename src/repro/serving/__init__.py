@@ -3,14 +3,19 @@
 The JAX analog of the paper's fully-on-chip serving story: all requests'
 O(1) recurrent states stay resident in one preallocated device pool
 (`state_pool`), a scheduler interleaves chunked prefill with one fused
-masked decode step per tick (`scheduler`), and the engine front-end turns
-`submit(prompt)` into a token stream (`engine`).  docs/serving.md has the
-API guide; docs/architecture.md walks a request through the lifecycle.
+masked decode step per tick (`scheduler`), an `ExecutionPlan` selects the
+decode/prefill paths, prepares params once, caches the compiled programs
+and places everything on the (optional) mesh (`plan`), and the engine
+front-end turns `submit(prompt)` into a token stream (`engine`).
+docs/serving.md has the API guide; docs/architecture.md walks a request
+through the lifecycle and the plan diagram.
 """
 from repro.serving.engine import (RequestHandle, SamplingParams,
                                   ServingEngine)
+from repro.serving.plan import ExecutionPlan, build_plan
 from repro.serving.scheduler import Request, Scheduler, sample_token
 from repro.serving.state_pool import SlotStatePool
 
 __all__ = ["ServingEngine", "SamplingParams", "RequestHandle",
-           "Request", "Scheduler", "sample_token", "SlotStatePool"]
+           "Request", "Scheduler", "sample_token", "SlotStatePool",
+           "ExecutionPlan", "build_plan"]

@@ -1,31 +1,33 @@
 """Serving engine front-end: submit(prompt) -> token stream.
 
-Wires the slotted state pool and the scheduler to a model and builds the
-engine's only two device programs:
+Wires the slotted state pool and the scheduler to an `ExecutionPlan`
+(`repro.serving.plan`) — the engine no longer builds device programs
+itself.  The plan owns path selection (registry PathDescriptors instead
+of boolean capability flags), one-pass param preparation
+(`core.quant.serving.PreparedParams`), the compiled-program cache keyed
+by (path, batch bucket, dtype), and mesh placement; the engine's job is
+request lifecycle: handles, streaming, scheduler callbacks.
 
-  * the FUSED DECODE STEP — `decode_step` over the full pool with an
-    active-slot mask (optionally unpacking Δ-PoT-quantized weights inside
-    the jit, so int8 codes are what crosses HBM — the paper's bandwidth
-    win riding along for free), and
+The two programs the plan serves to the scheduler:
+
+  * the FUSED DECODE STEP — the selected decode path (`per_op` oracle,
+    `block` single-launch kernel, or the whole-`model` megakernel) over
+    the full pool with an active-slot mask; packed Δ-PoT weights unpack
+    in-trace (per-op) or decode in-kernel (fused), so int8 codes are what
+    crosses HBM — the paper's bandwidth win riding along for free, and
   * the PREFILL CHUNK — absorbing up to `prefill_chunk` prompt tokens for
-    EVERY prefilling slot in one device call; a per-slot-per-token
-    validity mask maps every prompt length onto one compiled shape, and a
-    fresh-slot mask resets newly admitted lanes to the initial state
-    inside the same call.  Two structures, selected by `fused_prefill`:
-    the per-op ORACLE (a `lax.scan` of the masked pool-wide `decode_step`
-    — one D-wide matvec per token), and the FUSED CHUNKED path
-    (`Model.prefill_chunk`): the whole chunk's token-shift / layernorm /
-    projections / FFN as (S·C, D)-shaped matmuls, the WKV recurrence
-    on-chip through the Pallas sequence kernels, and Δ-PoT-packed weights
-    decoded INSIDE the matmul kernels so uint8 codes are all that crosses
-    HBM during the prompt phase.  Both prefill structures are compiled
-    with defined rounding semantics (`kernels.common.exact_jit`), which
-    is what makes them BIT-identical to each other
+    EVERY prefilling slot in one device call, per-slot-per-token validity
+    masked, fresh lanes reset in-call; the `per_op` scan and the fused
+    `chunked` path both compile with defined rounding semantics
+    (`kernels.common.exact_jit`) and are bit-identical
     (tests/test_prefill.py).
 
-All programs are traced exactly once (`trace_counts` proves it in
-tests).  See docs/serving.md for the API walkthrough and
-docs/architecture.md for the request lifecycle.
+On a mesh (`mesh=` or a pre-built `plan=`), the pool and per-tick batch
+shard data-parallel while weights replicate — bit-identical tokens to the
+single-device engine (tests/test_plan.py).  All programs are traced
+exactly once (`trace_counts` proves it in tests).  See docs/serving.md
+for the API walkthrough and docs/architecture.md for the request
+lifecycle and the plan diagram.
 """
 from __future__ import annotations
 
@@ -34,13 +36,11 @@ import dataclasses
 import itertools
 from typing import Any, Iterator, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels.common import exact_jit
-from repro.models.registry import Model, get_model
+from repro.models.registry import Model
 from repro.runtime.monitor import ServingCounters
+from repro.serving.plan import ExecutionPlan, build_plan
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.state_pool import SlotStatePool
 
@@ -82,196 +82,68 @@ class ServingEngine:
                  `smoke=` like the rest of the launchers)
     params     — optional pre-built weights (f32/bf16 tree); initialized
                  from `seed` when omitted
-    quantized  — pack weights to Δ-PoT W8 once at startup; the fused step
-                 dequantizes inside the jit (core.quant.serving)
+    quantized  — pack weights to Δ-PoT W8 once at startup; per-op paths
+                 dequantize inside the jit, fused paths in-kernel
     max_batch  — pool width: max concurrent sequences (compiled shape)
     prefill_chunk — prompt tokens absorbed per tick per prefilling slot
-    fused_decode — decode-tick kernel granularity:
-                 False    — per-op `decode_step` (the oracle);
-                 "block"  — `decode_step_fused`: ONE Pallas launch per
-                            block (L launches per tick), the whole block
-                            datapath — including in-kernel Δ-PoT weight
-                            decode when `quantized` — on-chip per launch;
-                 "model"  — `decode_step_fused_model`: the whole-model
-                            megakernel, ONE launch per tick with the grid
-                            iterating over layers, the residual carried in
-                            VMEM scratch and each layer's weight stream
-                            double-buffered behind the previous layer's
-                            compute.
-                 `True` is accepted as "block" (PR 2 compatibility).  All
-                 modes are bit-identical (tests/test_fused_decode.py).
-    fused_prefill — prompt-phase kernel granularity:
-                 False — the per-op oracle: one `lax.scan` of the masked
-                         pool-wide `decode_step` over the chunk;
-                 True  — the fused chunked path (`Model.prefill_chunk`):
-                         chunk-shaped matmuls + the masked on-chip WKV
-                         sequence kernel, with packed Δ-PoT weights
-                         decoded in-kernel (no `unpack_params` in the
-                         prefill trace).  Bit-identical to the oracle
-                         (tests/test_prefill.py); decode is unaffected.
+    fused_decode — decode path: False (per-op oracle) | "block" (one
+                 Pallas launch per block) | "model" (the whole-model
+                 megakernel); `True` is accepted as "block" (PR 2
+                 compatibility).  All modes are bit-identical
+                 (tests/test_fused_decode.py).
+    fused_prefill — prefill path: False (per-op scan of decode_step) |
+                 True (the fused chunked `prefill_chunk` path).
+                 Bit-identical (tests/test_prefill.py).
+    mesh       — a `jax.sharding.Mesh` for data-parallel serving: the
+                 slot pool and per-tick batch shard over the DP axes,
+                 weights replicate (see docs/serving.md §multi-device);
+                 tokens are bit-identical to the 1-device engine.
+    plan       — a pre-built ExecutionPlan; overrides every path/quant/
+                 mesh argument above (they describe a plan, and the plan
+                 is the source of truth).
     """
 
     def __init__(self, model: Model | str, *, params: Any = None,
                  smoke: bool = True, max_batch: int = 8,
                  prefill_chunk: int = 16, max_len: int = 0,
                  state_dtype=jnp.bfloat16, quantized: bool = False,
-                 fused_decode: bool = False, fused_prefill: bool = False,
-                 seed: int = 0,
+                 fused_decode: bool | str | None = False,
+                 fused_prefill: bool = False, seed: int = 0,
+                 mesh=None, plan: Optional[ExecutionPlan] = None,
                  counters: Optional[ServingCounters] = None):
-        if isinstance(model, str):
-            model = get_model(model, smoke=smoke)
-        if not model.has_decode:
-            raise ValueError(f"{model.cfg.name} has no decode_step")
-        if not model.position_free_decode:
-            raise ValueError(
-                f"{model.cfg.name}: decode_step consumes `pos`; the slotted "
-                "engine needs a position-free recurrent state (rwkv4/rwkv6)")
-        if fused_decode is True:
-            fused_decode = "block"
-        if fused_decode not in (False, None, "block", "model"):
-            raise ValueError(
-                f"fused_decode={fused_decode!r}: expected False, 'block' "
-                "or 'model'")
-        fused_decode = fused_decode or False
-        if fused_decode == "block" and not model.has_fused_decode:
-            raise ValueError(
-                f"{model.cfg.name} has no decode_step_fused; fused_decode "
-                "needs a model with the single-launch Pallas block kernel")
-        if fused_decode == "model" and not model.has_fused_model_decode:
-            raise ValueError(
-                f"{model.cfg.name} has no decode_step_fused_model; "
-                "fused_decode='model' needs a model with the whole-model "
-                "Pallas megakernel")
-        if fused_prefill and not model.has_fused_prefill:
-            raise ValueError(
-                f"{model.cfg.name} has no prefill_chunk; fused_prefill "
-                "needs a model with the fused chunked-prefill entry "
-                "(kernels/fused_prefill.py)")
-        self.model = model
-        self.quantized = quantized
-        self.fused_decode = fused_decode
-        self.fused_prefill = bool(fused_prefill)
-        if params is None:
-            params = model.init_params(jax.random.PRNGKey(seed))
-        if quantized:
-            from repro.core.quant.serving import pack_params
-            params = pack_params(params)
-        self.params = params
-        # Megakernel hot path: cast + chunk the per-layer weight stream
-        # ONCE at startup (per-dtype contiguous slabs; see
-        # core.quant.serving.fuse_layer_stack).  Decode ticks consume the
-        # prepared form; prefill keeps the raw tree (its per-op scan
-        # needs stacked leaves).
-        self._decode_params = model.prepare_fused_model_params(params) \
-            if fused_decode == "model" else params
-        # Fused-prefill hot path: pre-decode the few packed leaves the
-        # chunk datapath consumes element-wise (rwkv6; rwkv4 is identity)
-        # ONCE at startup, so the prefill trace never unpacks anything —
-        # every remaining Δ-PoT code plane streams straight into a
-        # chunk-matmul kernel.
-        self._prefill_params = model.prepare_prefill_params(params) \
-            if fused_prefill else params
+        if plan is None:
+            plan = build_plan(model, params, smoke=smoke, mesh=mesh,
+                              quantized=quantized,
+                              fused_decode=fused_decode,
+                              fused_prefill=fused_prefill,
+                              prefill_chunk=prefill_chunk,
+                              max_len=max_len, state_dtype=state_dtype,
+                              seed=seed)
+        self.plan = plan
+        self.model = plan.model
+        self.quantized = plan.prepared.quantized
+        self.fused_decode = False if plan.decode_desc.name == "per_op" \
+            else plan.decode_desc.name
+        self.fused_prefill = plan.prefill_desc.name == "chunked"
+        self.params = plan.prepared.raw
         self.counters = counters if counters is not None else \
             ServingCounters()
-        self.pool = SlotStatePool(model, max_batch, max_len=max_len,
-                                  dtype=state_dtype)
-        self.trace_counts = {"decode": 0, "prefill": 0}
-        decode_fn, prefill_fn = self._build_steps(prefill_chunk)
+        self.pool = SlotStatePool(self.model, max_batch,
+                                  max_len=plan.max_len,
+                                  dtype=plan.state_dtype,
+                                  shardings=plan.state_shardings(max_batch))
         self.scheduler = Scheduler(
-            self.pool, decode_fn, prefill_fn, prefill_chunk=prefill_chunk,
-            counters=self.counters, on_token=self._on_token,
-            on_finish=self._on_finish)
+            self.pool, plan.decode_fn(max_batch), plan.prefill_fn(max_batch),
+            prefill_chunk=plan.prefill_chunk, counters=self.counters,
+            on_token=self._on_token, on_finish=self._on_finish)
         self._handles: dict[int, RequestHandle] = {}
         self._rids = itertools.count()
 
-    # -- compiled steps ------------------------------------------------------
-
-    def _build_steps(self, prefill_chunk: int):
-        model, axes = self.model, self.pool._axes
-        tdef = self.pool._tdef
-        quantized = self.quantized
-
-        def maybe_unpack(params):
-            if quantized:
-                from repro.core.quant.serving import unpack_params
-                return unpack_params(params)
-            return params
-
-        def masked(new_state, old_state, mask):
-            new_l = jax.tree_util.tree_leaves(new_state)
-            old_l = jax.tree_util.tree_leaves(old_state)
-            out = []
-            for n, o, ax in zip(new_l, old_l, axes):
-                m = mask.reshape(tuple(
-                    -1 if i == ax else 1 for i in range(n.ndim)))
-                out.append(jnp.where(m, n, o))
-            return jax.tree_util.tree_unflatten(tdef, out)
-
-        fused = self.fused_decode
-
-        def decode(params, state, tokens, mask):
-            self.trace_counts["decode"] += 1   # increments only on trace
-            if fused == "model":
-                # whole-model megakernel: ONE launch for the layer stack;
-                # packed Δ-PoT leaves pass through whole and decode inside
-                logits, new_state = model.decode_step_fused_model(
-                    params, state, tokens, jnp.int32(0))
-            elif fused == "block":
-                # single-launch block kernel; packed Δ-PoT leaves pass
-                # through whole and decode inside the launch
-                logits, new_state = model.decode_step_fused(
-                    params, state, tokens, jnp.int32(0))
-            else:
-                logits, new_state = model.decode_step(
-                    maybe_unpack(params), state, tokens, jnp.int32(0))
-            return logits, masked(new_state, state, mask)
-
-        # logits shape/dtype for the scan carry, without running anything
-        S = self.pool.max_slots
-        ab_logits = jax.eval_shape(
-            lambda p, s, t: model.decode_step(p, s, t, jnp.int32(0))[0],
-            jax.eval_shape(maybe_unpack, self.params),
-            self.pool.state, jax.ShapeDtypeStruct((S, 1), jnp.int32))
-        fresh_lane = self.pool._fresh   # batch-1 leaves broadcast per slot
-        fused_prefill = self.fused_prefill
-
-        def prefill(params, state, tokens, valid, fresh):
-            self.trace_counts["prefill"] += 1  # increments only on trace
-            # reset newly admitted lanes to the fresh state in-call
-            state = masked(state, fresh_lane, ~fresh)
-            if fused_prefill:
-                # fused chunked path: chunk-shaped matmuls + on-chip WKV
-                # scan; packed Δ-PoT leaves decode INSIDE the kernels, so
-                # no maybe_unpack here — codes cross HBM, not bf16
-                return model.prefill_chunk(params, state, tokens, valid)
-            p = maybe_unpack(params)
-
-            def body(carry, xs):
-                state, last = carry
-                tok, ok = xs                    # tok (S,), ok (S,)
-                logits, stepped = model.decode_step(
-                    p, state, tok[:, None], jnp.int32(0))
-                state = masked(stepped, state, ok)
-                last = jnp.where(ok[:, None, None], logits, last)
-                return (state, last), None
-
-            last0 = jnp.zeros(ab_logits.shape, ab_logits.dtype)
-            (state, last), _ = jax.lax.scan(
-                body, (state, last0), (tokens.T, valid.T))
-            return state, last
-
-        j_decode = jax.jit(decode, donate_argnums=(1,))
-        # BOTH prefill structures compile with defined rounding semantics
-        # (exact_jit: no excess-precision folding) — the property that
-        # makes the fused chunked path bit-identical to the per-op scan;
-        # decode keeps the plain jit (its bits are pinned by PR 2/3 tests).
-        j_prefill = exact_jit(prefill, donate_argnums=(1,))
-        return (lambda state, toks, mask:
-                j_decode(self._decode_params, state, jnp.asarray(toks),
-                         jnp.asarray(mask)),
-                lambda state, toks, valid, fresh:
-                j_prefill(self._prefill_params, state, jnp.asarray(toks),
-                          jnp.asarray(valid), jnp.asarray(fresh)))
+    @property
+    def trace_counts(self) -> dict:
+        """The plan's trace counters ({"decode": 1, "prefill": 1} after
+        any amount of serving — the no-recompile guarantee)."""
+        return self.plan.trace_counts
 
     # -- request API ---------------------------------------------------------
 

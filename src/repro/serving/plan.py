@@ -1,0 +1,382 @@
+"""Execution plans: the serving engine's declarative path + placement layer.
+
+PRs 1–4 grew the engine an ad-hoc capability matrix — `has_decode` /
+`has_fused_decode` / `has_fused_model_decode` / `has_fused_prefill`
+boolean flags, three separately-wired `prepare_*` param transforms, and
+program building inlined in `ServingEngine._build_steps`.  An
+`ExecutionPlan` collapses that matrix into one object:
+
+    plan = build_plan(model, params, mesh=mesh,
+                      fused_decode="model", fused_prefill=True,
+                      prefill_chunk=16, max_batch=8)
+
+owning, in order:
+
+  * PATH SELECTION — the decode and prefill paths are picked from the
+    registry's `PathDescriptor` tables (`models.registry.DECODE_PATHS` /
+    `PREFILL_PATHS`), not from booleans: a path exists iff the model ships
+    its entry point, and its descriptor says how params are prepared and
+    whether packed Δ-PoT leaves decode in-kernel.
+  * PARAM PREPARATION — `pack_params` (when quantized) plus each selected
+    path's one-time prep run in ONE pass, producing a
+    `core.quant.serving.PreparedParams` (raw / decode / prefill forms);
+    the engine never re-derives a transform per flag again.
+  * PROGRAM CACHE — compiled decode/prefill programs keyed by
+    (path, batch bucket, state dtype).  A key is traced exactly once for
+    the life of the plan (`trace_counts` proves it, exactly as the engine
+    tests always asserted); re-requesting a bucket is a cache hit, never a
+    recompile.  The masking semantics every program commits state through
+    live here too (`masked_state_commit`) — the single definition shared
+    with the sequential test oracle.
+  * MESH PLACEMENT — on a `jax.sharding.Mesh` the slot state pool and the
+    per-tick token batch shard data-parallel over the DP axes
+    (`parallel.sharding.pool_shardings` / `batch_sharding`, with the
+    divisibility fallback), while every prepared weight form — including
+    the megakernel's L-stacked `FusedLayerStack` slabs — is placed ONCE,
+    replicated, at plan build.  Slots are independent sequences, so DP
+    sharding introduces no step-time collectives and the sharded engine's
+    tokens are bit-identical to the 1-device engine's
+    (tests/test_plan.py runs the 8-virtual-device proof).
+
+See docs/architecture.md for the plan diagram and docs/serving.md for the
+multi-device serving walkthrough.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.serving import PreparedParams
+from repro.kernels.common import exact_jit
+from repro.models.registry import Model, PathDescriptor
+
+# ---------------------------------------------------------------------------
+# Shared semantics: masked state commits + in-trace Δ-PoT unpack
+# ---------------------------------------------------------------------------
+
+
+def masked_state_commit(new_state, old_state, mask, axes):
+    """Commit `new_state` only where `mask` is set along each leaf's slot
+    axis: `where(mask, new, old)` with the mask broadcast into position
+    `axes[i]` of leaf i (the `Model.decode_state_batch_axes` layout).
+
+    THE masking semantics of the serving engine — a lane whose mask is
+    False is *computed* (fixed shapes beat recompiles) but its state never
+    moves, so free or mid-prefill slots are undisturbed by decode traffic.
+    Defined once here and shared by every plan program AND the sequential
+    test oracle (tests/test_prefill.py), so the engine and its
+    bit-identity reference can never drift."""
+    new_l = jax.tree_util.tree_leaves(new_state)
+    old_l = jax.tree_util.tree_leaves(old_state)
+    tdef = jax.tree_util.tree_structure(old_state)
+    out = []
+    for n, o, ax in zip(new_l, old_l, axes):
+        m = mask.reshape(tuple(
+            -1 if i == ax else 1 for i in range(n.ndim)))
+        out.append(jnp.where(m, n, o))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def maybe_unpack(params, quantized: bool):
+    """In-trace Δ-PoT decode for the per-op paths: packed trees unpack
+    INSIDE the jit (uint8 codes cross HBM; the exp2 decode fuses into the
+    consumer matmuls).  Fused paths never call this — their descriptors
+    carry `fused=True` and the kernels decode per leaf."""
+    if quantized:
+        from repro.core.quant.serving import unpack_params
+        return unpack_params(params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+
+def _normalize_decode(fused_decode) -> str:
+    if fused_decode is True:          # PR 2 compatibility
+        fused_decode = "block"
+    if fused_decode in (False, None):
+        return "per_op"
+    if fused_decode in ("block", "model"):
+        return fused_decode
+    raise ValueError(
+        f"fused_decode={fused_decode!r}: expected False, 'block' "
+        "or 'model'")
+
+
+class ExecutionPlan:
+    """One model's executable serving configuration (see module docstring).
+
+    Attributes:
+      model         — the registry Model handle
+      prepared      — PreparedParams (raw / decode / prefill forms, placed
+                      on the mesh when one is set)
+      decode_desc / prefill_desc — the selected PathDescriptors
+      prefill_chunk — prompt tokens absorbed per prefill call per slot
+      mesh          — the serving mesh, or None (single device)
+      trace_counts  — {"decode": n, "prefill": n} trace counters; stays at
+                      1 per used (path, bucket, dtype) key for the life of
+                      the plan (the no-recompile guarantee)
+    """
+
+    def __init__(self, model: Model, prepared: PreparedParams,
+                 decode_desc: PathDescriptor, prefill_desc: PathDescriptor,
+                 *, prefill_chunk: int = 16, max_len: int = 0,
+                 state_dtype=jnp.bfloat16, mesh=None):
+        self.model = model
+        self.prepared = prepared
+        self.decode_desc = decode_desc
+        self.prefill_desc = prefill_desc
+        self.prefill_chunk = int(prefill_chunk)
+        self.max_len = int(max_len)
+        self.state_dtype = jnp.dtype(state_dtype)
+        self.mesh = mesh
+        self.state_axes = model.decode_state_batch_axes()
+        self.trace_counts = {"decode": 0, "prefill": 0}
+        self._programs: dict = {}
+        self._batch_shardings: dict = {}
+        self._fresh_lane_cache = None
+        if mesh is not None:
+            self._place_params()
+
+    # -- mesh placement ----------------------------------------------------
+
+    def _place_params(self):
+        """Replicate every prepared weight form across the mesh ONCE at
+        startup — including the megakernel's L-stacked FusedLayerStack
+        slabs — so no step ever moves a weight.  Placement is LEAF-wise
+        with an identity cache: a prepared form that rebuilt the tree but
+        kept most weight leaves (e.g. rwkv6's prefill prep, which decodes
+        4 small leaves and aliases every matmul weight) shares the raw
+        form's device buffers instead of replicating the model twice."""
+        from repro.parallel.sharding import replicated_sharding
+        rep = replicated_sharding(self.mesh)
+        placed: dict = {}   # id(leaf) -> (leaf pin, placed leaf)
+
+        def put(leaf):
+            key = id(leaf)
+            if key not in placed:
+                placed[key] = (leaf, jax.device_put(leaf, rep))
+            return placed[key][1]
+
+        self.prepared = dataclasses.replace(
+            self.prepared,
+            raw=jax.tree_util.tree_map(put, self.prepared.raw),
+            decode=jax.tree_util.tree_map(put, self.prepared.decode),
+            prefill=jax.tree_util.tree_map(put, self.prepared.prefill))
+
+    def state_shardings(self, batch: int):
+        """NamedSharding tree for a `batch`-slot pool on this plan's mesh
+        (None without a mesh): slot axis data-parallel, divisibility
+        fallback to replication."""
+        if self.mesh is None:
+            return None
+        from repro.parallel.sharding import pool_shardings
+        ab = jax.eval_shape(
+            lambda: self.model.init_slot_state(batch, self.max_len,
+                                               self.state_dtype))
+        return pool_shardings(self.model.decode_state_axes(), ab, self.mesh)
+
+    def _place_batch(self, x):
+        """Per-tick host batch (tokens / masks) -> device, slot axis
+        sharded like the pool.  The NamedSharding is cached per shape —
+        tick shapes are fixed for a program's life, so the spec-building
+        Python never runs in the serving hot loop."""
+        x = jnp.asarray(x)
+        if self.mesh is None:
+            return x
+        sh = self._batch_shardings.get(x.shape)
+        if sh is None:
+            from repro.parallel.sharding import batch_sharding
+            sh = self._batch_shardings[x.shape] = batch_sharding(
+                x.shape, self.mesh)
+        return jax.device_put(x, sh)
+
+    # -- program cache -----------------------------------------------------
+
+    def _key(self, kind: str, batch: int):
+        desc = self.decode_desc if kind == "decode" else self.prefill_desc
+        return (kind, desc.name, int(batch), self.state_dtype.name)
+
+    def _fresh_lane(self):
+        # batch-1 template; leaves broadcast per slot inside the programs
+        if self._fresh_lane_cache is None:
+            self._fresh_lane_cache = self.model.init_slot_state(
+                1, self.max_len, self.state_dtype)
+        return self._fresh_lane_cache
+
+    def decode_fn(self, batch: int):
+        """The compiled decode program for a `batch`-slot pool:
+        fn(state, tokens (S,1), mask (S,)) -> (logits, new_state).
+        Cached by (path, batch bucket, dtype) — the same key always
+        returns the same program, traced once."""
+        key = self._key("decode", batch)
+        if key not in self._programs:
+            self._programs[key] = self._build_decode()
+        return self._programs[key]
+
+    def prefill_fn(self, batch: int):
+        """The compiled prefill program for a `batch`-slot pool:
+        fn(state, tokens (S,C), valid (S,C), fresh (S,))
+        -> (new_state, last-valid logits).  Cached like `decode_fn`."""
+        key = self._key("prefill", batch)
+        if key not in self._programs:
+            self._programs[key] = self._build_prefill(batch)
+        return self._programs[key]
+
+    # -- program builders (the former ServingEngine._build_steps) ----------
+
+    def _decode_step(self):
+        """The selected decode path as a uniform
+        (params, state, tokens) -> (logits, new_state) step."""
+        model, quantized = self.model, self.prepared.quantized
+        name = self.decode_desc.name
+        if name == "model":
+            # whole-model megakernel: ONE launch for the layer stack;
+            # packed Δ-PoT leaves pass through whole and decode inside
+            return lambda p, s, t: model.decode_step_fused_model(
+                p, s, t, jnp.int32(0))
+        if name == "block":
+            # single-launch block kernel; packed leaves decode per launch
+            return lambda p, s, t: model.decode_step_fused(
+                p, s, t, jnp.int32(0))
+        return lambda p, s, t: model.decode_step(
+            maybe_unpack(p, quantized), s, t, jnp.int32(0))
+
+    def _build_decode(self):
+        axes = self.state_axes
+        step = self._decode_step()
+
+        def decode(params, state, tokens, mask):
+            self.trace_counts["decode"] += 1   # increments only on trace
+            logits, new_state = step(params, state, tokens)
+            return logits, masked_state_commit(new_state, state, mask, axes)
+
+        j_decode = jax.jit(decode, donate_argnums=(1,))
+        params = self.prepared.decode
+        return lambda state, toks, mask: j_decode(
+            params, state, self._place_batch(toks), self._place_batch(mask))
+
+    def _build_prefill(self, batch: int):
+        model, axes = self.model, self.state_axes
+        quantized = self.prepared.quantized
+        fresh_lane = self._fresh_lane()
+        chunked = self.prefill_desc.name == "chunked"
+        # logits shape/dtype for the scan carry, without running anything
+        ab_logits = jax.eval_shape(
+            lambda p, s, t: model.decode_step(p, s, t, jnp.int32(0))[0],
+            jax.eval_shape(lambda p: maybe_unpack(p, quantized),
+                           self.prepared.raw),
+            jax.eval_shape(
+                lambda: model.init_slot_state(batch, self.max_len,
+                                              self.state_dtype)),
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32))
+
+        def prefill(params, state, tokens, valid, fresh):
+            self.trace_counts["prefill"] += 1  # increments only on trace
+            # reset newly admitted lanes to the fresh state in-call (the
+            # batch-1 fresh template broadcasts into the masked-off lanes)
+            state = masked_state_commit(state, fresh_lane, ~fresh, axes)
+            if chunked:
+                # fused chunked path: chunk-shaped matmuls + on-chip WKV
+                # scan; packed Δ-PoT leaves decode INSIDE the kernels, so
+                # no maybe_unpack here — codes cross HBM, not bf16
+                return model.prefill_chunk(params, state, tokens, valid)
+            p = maybe_unpack(params, quantized)
+
+            def body(carry, xs):
+                state, last = carry
+                tok, ok = xs                    # tok (S,), ok (S,)
+                logits, stepped = model.decode_step(
+                    p, state, tok[:, None], jnp.int32(0))
+                state = masked_state_commit(stepped, state, ok, axes)
+                last = jnp.where(ok[:, None, None], logits, last)
+                return (state, last), None
+
+            last0 = jnp.zeros(ab_logits.shape, ab_logits.dtype)
+            (state, last), _ = jax.lax.scan(
+                body, (state, last0), (tokens.T, valid.T))
+            return state, last
+
+        # BOTH prefill structures compile with defined rounding semantics
+        # (exact_jit: no excess-precision folding) — the property that
+        # makes the fused chunked path bit-identical to the per-op scan;
+        # decode keeps the plain jit (its bits are pinned by PR 2/3 tests).
+        j_prefill = exact_jit(prefill, donate_argnums=(1,))
+        params = self.prepared.prefill
+        return lambda state, toks, valid, fresh: j_prefill(
+            params, state, self._place_batch(toks),
+            self._place_batch(valid), self._place_batch(fresh))
+
+
+def build_plan(model: Model | str, params: Any = None, *,
+               mesh=None, smoke: bool = True, quantized: bool = False,
+               fused_decode: bool | str | None = False,
+               fused_prefill: bool = False, prefill_chunk: int = 16,
+               max_len: int = 0, state_dtype=jnp.bfloat16,
+               seed: int = 0,
+               decode_prepare_kw: Optional[dict] = None) -> ExecutionPlan:
+    """Select paths, prepare params (one pass) and build an ExecutionPlan.
+
+    model         — a Model handle or arch id (resolved with `smoke=`)
+    params        — pre-built weights (f32/bf16 tree); initialized from
+                    `seed` when omitted
+    mesh          — a jax Mesh for data-parallel serving, or None
+    quantized     — pack weights to Δ-PoT W8 once; per-op paths unpack
+                    in-trace, fused paths decode in-kernel
+    fused_decode  — False | "block" | "model" (True means "block")
+    fused_prefill — False (per-op scan) | True (fused chunked path)
+
+    Raises ValueError with the engine's historical messages when the model
+    lacks a requested path — the descriptor tables are the source of
+    truth."""
+    from repro.models.registry import get_model
+    if isinstance(model, str):
+        model = get_model(model, smoke=smoke)
+    decode_paths = model.decode_paths()
+    prefill_paths = model.prefill_paths()
+    if "per_op" not in decode_paths:
+        raise ValueError(f"{model.cfg.name} has no decode_step")
+    if not model.position_free_decode:
+        raise ValueError(
+            f"{model.cfg.name}: decode_step consumes `pos`; the slotted "
+            "engine needs a position-free recurrent state (rwkv4/rwkv6)")
+    decode_name = _normalize_decode(fused_decode)
+    if decode_name == "block" and "block" not in decode_paths:
+        raise ValueError(
+            f"{model.cfg.name} has no decode_step_fused; fused_decode "
+            "needs a model with the single-launch Pallas block kernel")
+    if decode_name == "model" and "model" not in decode_paths:
+        raise ValueError(
+            f"{model.cfg.name} has no decode_step_fused_model; "
+            "fused_decode='model' needs a model with the whole-model "
+            "Pallas megakernel")
+    prefill_name = "chunked" if fused_prefill else "per_op"
+    if prefill_name == "chunked" and "chunked" not in prefill_paths:
+        raise ValueError(
+            f"{model.cfg.name} has no prefill_chunk; fused_prefill "
+            "needs a model with the fused chunked-prefill entry "
+            "(kernels/fused_prefill.py)")
+    decode_desc = decode_paths[decode_name]
+    prefill_desc = prefill_paths[prefill_name]
+
+    # -- param preparation: ONE pass over one weight set -------------------
+    if params is None:
+        params = model.init_params(jax.random.PRNGKey(seed))
+    if quantized:
+        from repro.core.quant.serving import pack_params
+        params = pack_params(params)
+    prepared = PreparedParams(
+        raw=params,
+        decode=model.prepare_path_params(decode_desc, params,
+                                         **(decode_prepare_kw or {})),
+        prefill=model.prepare_path_params(prefill_desc, params),
+        quantized=quantized,
+        decode_path=decode_name, prefill_path=prefill_name)
+    return ExecutionPlan(model, prepared, decode_desc, prefill_desc,
+                         prefill_chunk=prefill_chunk, max_len=max_len,
+                         state_dtype=state_dtype, mesh=mesh)

@@ -16,9 +16,15 @@ stalls).  Per tick the scheduler
      with an active-slot mask selecting which lanes' states commit.
 
 Because the pool, the chunk, and the fused step all have fixed shapes,
-the engine compiles exactly two device programs (fused prefill chunk +
+serving runs on exactly two device programs (fused prefill chunk +
 fused decode step) no matter how requests arrive, finish, or interleave
-— admission and retirement are pure host bookkeeping.
+— admission and retirement are pure host bookkeeping.  The scheduler
+does not build (or select) those programs: it is handed the two
+callables by the engine, which takes them from an `ExecutionPlan`'s
+compiled-program cache (`repro.serving.plan`) — path choice, param
+preparation and mesh placement all live there.  Under a mesh the
+callables place each tick's token/mask arrays onto the data-parallel
+sharding themselves; nothing here is sharding-aware.
 
 Masking semantics: inactive lanes are *computed* (wasted flops, bought
 deliberately — fixed shapes beat recompiles) but their state updates are

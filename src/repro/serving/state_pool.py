@@ -37,13 +37,23 @@ import jax.numpy as jnp
 
 
 class SlotStatePool:
-    """Preallocated `max_slots`-wide decode state + free-list admission."""
+    """Preallocated `max_slots`-wide decode state + free-list admission.
+
+    `shardings` (optional) is a NamedSharding tree matching the state —
+    built by `ExecutionPlan.state_shardings` from the mesh's DP axes —
+    applied once here so the pool buffers are BORN data-parallel: each
+    device holds its `max_slots / dp` slots for the life of the engine,
+    and the fused step's donated output keeps the placement.  Host-side
+    slot bookkeeping (the free list) is sharding-oblivious: a slot index
+    means the same lane wherever that lane's shard lives."""
 
     def __init__(self, model, max_slots: int, *, max_len: int = 0,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, shardings=None):
         self.model = model
         self.max_slots = int(max_slots)
         self.state = model.init_slot_state(self.max_slots, max_len, dtype)
+        if shardings is not None:
+            self.state = jax.device_put(self.state, shardings)
         self._axes = model.decode_state_batch_axes()
         self._tdef = jax.tree_util.tree_structure(self.state)
         # fresh batch-1 template used by reset_slot

@@ -23,7 +23,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.serving import pack_params, unpack_params
+from repro.core.quant.serving import pack_params
 from repro.kernels.common import exact_jit
 from repro.models.registry import get_model
 from repro.serving import ServingEngine
@@ -66,21 +66,15 @@ def _assert_bitwise(tree_a, tree_b):
 def oracle_prefill(model, params, state, tokens, valid, *,
                    quantized=False, hw=False):
     """The engine's per-op prefill semantics: scan `decode_step` over the
-    chunk, committing state only where `valid` — built here exactly as
-    `ServingEngine._build_steps` builds it."""
+    chunk, committing state only where `valid` — through the SAME
+    `masked_state_commit` / `maybe_unpack` the plan's programs use
+    (repro.serving.plan), so the masking semantics exist in exactly one
+    place and the oracle can never drift from the engine."""
+    from repro.serving.plan import masked_state_commit, maybe_unpack
     axes = model.decode_state_batch_axes()
-    tdef = jax.tree_util.tree_structure(state)
-
-    def masked(new, old, mask):
-        out = []
-        for n, o, ax in zip(jax.tree_util.tree_leaves(new),
-                            jax.tree_util.tree_leaves(old), axes):
-            m = mask.reshape(tuple(
-                -1 if i == ax else 1 for i in range(n.ndim)))
-            out.append(jnp.where(m, n, o))
-        return jax.tree_util.tree_unflatten(tdef, out)
-
-    p = unpack_params(params) if quantized else params
+    masked = lambda new, old, mask: masked_state_commit(new, old, mask,
+                                                        axes)
+    p = maybe_unpack(params, quantized)
     if hw:
         step = lambda pp, s, t: model.module.decode_step(
             pp, s, t, jnp.int32(0), model.cfg, hw=True)

@@ -35,6 +35,76 @@ class TestSlotStatePool:
         with pytest.raises(ValueError):     # double-free
             pool.release(a)
 
+    def _fill(self, pool, tag: float):
+        """A batch-1 lane tree holding `tag` in every element."""
+        return jax.tree_util.tree_map(
+            lambda a: jnp.full_like(a, tag).astype(a.dtype), pool._fresh)
+
+    def _assert_lane_is(self, pool, slot: int, tag: float):
+        for leaf in jax.tree_util.tree_leaves(pool.read_slot(slot)):
+            assert np.all(np.asarray(leaf, np.float32) == tag), \
+                f"slot {slot} lost its state (expected {tag})"
+
+    def _interleave(self, pool, steps: int, seed: int = 0):
+        """Deterministic interleaved admit/evict/cancel churn: every live
+        slot carries a unique tag written at admission; after every
+        release-or-admit step the free list must stay duplicate-free and
+        consistent with the live set, and NO live slot's state may change
+        — i.e. slot reuse never aliases live state, no matter how
+        fragmented the free list gets."""
+        rng = np.random.default_rng(seed)
+        live: dict[int, float] = {}
+        next_tag = 1.0
+        for _ in range(steps):
+            evict = live and (pool.n_free == 0 or rng.random() < 0.45)
+            if evict:
+                slot = int(rng.choice(sorted(live)))   # cancel mid-life
+                del live[slot]
+                pool.release(slot)
+            else:
+                slot = pool.acquire()
+                assert slot is not None and slot not in live
+                pool.write_slot(slot, self._fill(pool, next_tag))
+                live[slot] = next_tag
+                next_tag += 1.0
+            assert len(set(pool._free)) == len(pool._free)
+            assert pool.n_active == len(live)
+            assert set(pool._free).isdisjoint(live)
+        for slot, tag in live.items():
+            self._assert_lane_is(pool, slot, tag)
+
+    def test_fragmentation_interleaved_churn_never_aliases(self, rwkv4):
+        model, _ = rwkv4
+        pool = SlotStatePool(model, 4)
+        self._interleave(pool, steps=80)
+
+    def test_fragmentation_under_sharded_pool(self, rwkv4):
+        """Same churn on a pool whose slot axis is sharded over a serving
+        mesh (1 device here; all 8 under the CI multi-device leg):
+        per-lane dynamic-slice addressing must keep working across shard
+        boundaries, and `decode_state_batch_axes` must stay consistent
+        with the placed leaves — the slot axis is still where the axes
+        tree says it is, and only that axis may be sharded."""
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel.sharding import pool_shardings
+        model, _ = rwkv4
+        n_dev = len(jax.devices())
+        n_slots = max(4, n_dev)
+        mesh = make_serving_mesh(n_dev)
+        state_ab = jax.eval_shape(
+            lambda: model.init_slot_state(n_slots, 0, jnp.bfloat16))
+        sh = pool_shardings(model.decode_state_axes(), state_ab, mesh)
+        pool = SlotStatePool(model, n_slots, shardings=sh)
+        axes = model.decode_state_batch_axes()
+        leaves = jax.tree_util.tree_leaves(pool.state)
+        assert len(axes) == len(leaves)
+        for leaf, ax in zip(leaves, axes):
+            assert leaf.shape[ax] == n_slots
+            spec = tuple(leaf.sharding.spec) + (None,) * leaf.ndim
+            assert all(s is None for i, s in enumerate(spec[:leaf.ndim])
+                       if i != ax), "non-slot axis got sharded"
+        self._interleave(pool, steps=60, seed=3)
+
     @pytest.mark.parametrize("arch", ["rwkv4-169m", "rwkv6-7b",
                                       "zamba2-7b"])
     def test_slot_read_write_roundtrip(self, arch):
