@@ -7,7 +7,8 @@ TTFT, latency) from `runtime.monitor.ServingCounters`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m --smoke \
         --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16] \
-        [--fused[=block|model]] [--fused-prefill] [--devices N | --mesh]
+        [--fused[=block|model]] [--fused-prefill] [--devices N | --mesh] \
+        [--prefix-cache [--prefix-cache-slots N]]
 
 Every flag combination resolves to ONE `repro.serving.plan.ExecutionPlan`
 (path selection + one-pass param prep + program cache + mesh placement);
@@ -145,29 +146,49 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           n_tokens: int = 32, quantized: bool = False, seed: int = 0,
           prefill_chunk: int = 16, prompt_len: int = 8,
           temperature: float = 0.0, fused: bool | str | None = False,
-          fused_prefill: bool = False, devices: int | None = None):
+          fused_prefill: bool = False, devices: int | None = None,
+          prefix_cache: bool = False, cache_slots: int = 64,
+          cache_host_slots: int = 256):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles.
     `devices` (0 = all visible) serves data-parallel over a ("data",)
-    serving mesh — pool and batch sharded, weights replicated."""
+    serving mesh — pool and batch sharded, weights replicated.
+    `prefix_cache` enables the recurrent-state prefix cache; the demo
+    workload then gives every request a shared system-prompt prefix so the
+    hit path is actually exercised (docs/serving.md §prefix cache)."""
     from repro.launch.mesh import make_serving_mesh
-    from repro.serving import ServingEngine
+    from repro.serving import PrefixCacheConfig, ServingEngine
 
     mesh = None
     if devices is not None:
         mesh = make_serving_mesh(devices)
         print(f"serving mesh: {dict(mesh.shape)} over "
               f"{mesh.devices.size} x {mesh.devices.flat[0].device_kind}")
+    cache_cfg = PrefixCacheConfig(device_slots=cache_slots,
+                                  host_slots=cache_host_slots) \
+        if prefix_cache else None
     engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
                            prefill_chunk=prefill_chunk,
                            quantized=quantized,
                            fused_decode=fused or False,
                            fused_prefill=fused_prefill, seed=seed,
-                           mesh=mesh)
+                           mesh=mesh, prefix_cache=cache_cfg)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
+    # with the cache on, share one "system prompt" across all requests so
+    # every submission after the first resumes from a cached state; a
+    # warm-up request runs to completion first, since boundary states only
+    # publish when their request finishes
+    shared = []
+    if prefix_cache:
+        shared = rng.integers(0, cfg.vocab,
+                              size=max(prefill_chunk, prompt_len)).tolist()
+        engine.submit(shared + [int(rng.integers(0, cfg.vocab))],
+                      max_new_tokens=1)
+        engine.run()
     handles = [
-        engine.submit(rng.integers(0, cfg.vocab, size=prompt_len).tolist(),
+        engine.submit(shared +
+                      rng.integers(0, cfg.vocab, size=prompt_len).tolist(),
                       max_new_tokens=n_tokens, temperature=temperature,
                       seed=int(rng.integers(1 << 31)))
         for _ in range(batch)]
@@ -179,6 +200,11 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           f"latency {snap['mean_latency_s']*1e3:.0f} ms")
     for k, v in snap.items():
         print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+    if engine.prefix_cache is not None:
+        print("prefix cache:")
+        for k, v in engine.prefix_cache.snapshot().items():
+            print(f"  {k}: {v:.3f}" if isinstance(v, float)
+                  else f"  {k}: {v}")
     return handles
 
 
@@ -205,6 +231,17 @@ def main():
                          "kernel, packed weights decoded in-kernel "
                          "(kernels/fused_prefill.py); bit-identical to "
                          "the per-op prefill scan")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="recurrent-state prefix cache: repeated prompt "
+                         "prefixes resume from cached chunk-boundary "
+                         "states instead of prefilling (bit-identical "
+                         "tokens; serving/prefix_cache.py).  The demo "
+                         "workload shares a system prompt across requests "
+                         "so the hit path shows up in the telemetry")
+    ap.add_argument("--prefix-cache-slots", type=int, default=64,
+                    help="device-tier cache entries (lane states)")
+    ap.add_argument("--prefix-cache-host-slots", type=int, default=256,
+                    help="host spill-tier entries; 0 disables spilling")
     ap.add_argument("--devices", type=int, default=None,
                     help="serve data-parallel over N local devices (the "
                          "slot pool and per-tick batch shard over a "
@@ -230,7 +267,9 @@ def main():
               prefill_chunk=args.prefill_chunk,
               prompt_len=args.prompt_len, temperature=args.temperature,
               fused=args.fused, fused_prefill=args.fused_prefill,
-              devices=devices)
+              devices=devices, prefix_cache=args.prefix_cache,
+              cache_slots=args.prefix_cache_slots,
+              cache_host_slots=args.prefix_cache_host_slots)
 
 
 if __name__ == "__main__":

@@ -11,8 +11,12 @@ that policy, testable in-process via FailureInjector.
   ServingCounters   — throughput/latency telemetry for the continuous-
                       batching engine (repro.serving): tokens/s, TTFT
                       (with its prefill decomposition: per-request prefill
-                      ticks and admit -> first-token wall time),
-                      per-request latency, slot occupancy
+                      ticks, admit -> first-token wall time, and the
+                      prefix-cache probe/state-copy slices split out so a
+                      cache hit's TTFT is attributed honestly), prefix-
+                      cache hit/miss/eviction/spill counts with cached-vs-
+                      prefilled token accounting, per-request latency,
+                      slot occupancy
   HeartbeatMonitor  — per-host last-seen tracking with a dead-host predicate
   StragglerDetector — per-step duration EMA; flags hosts slower than
                       `threshold` x the fleet median (mitigation hook: the
@@ -52,9 +56,30 @@ class ServingCounters:
         self.latency_s: list[float] = []   # enqueue -> completion
         # time-to-first-token decomposition: how many prefill calls each
         # request's prompt took, and the admit -> first-token wall time
-        # (the part of TTFT the prefill path controls — queueing excluded)
+        # (the part of TTFT the prefill path controls — queueing excluded).
+        # prefill_s EXCLUDES the prefix-cache probe and state-copy time,
+        # which land in their own lists below: attributing the whole admit
+        # tick to "prefill" would make a cache hit look like prefill work.
         self.prefill_ticks: list[int] = []
         self.prefill_s: list[float] = []
+        # prefix-cache telemetry (repro.serving.prefix_cache): probe
+        # outcomes + token accounting from the scheduler, eviction/spill
+        # flow from the cache itself
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_inserts = 0
+        self.cache_evictions = 0
+        self.cache_spills = 0
+        self.cached_tokens = 0          # prompt tokens restored, not run
+        self.cache_probe_s: list[float] = []
+        self.state_copy_s: list[float] = []
+        self._admit_overhead: dict[int, float] = {}  # rid -> probe+copy s
+
+    def now(self) -> float:
+        """The counters' clock (injectable) — the scheduler times its
+        cache probe/copy slices on the same clock the latency samples
+        use, so the decomposition is exact under a fake clock."""
+        return self._clock()
 
     # -- hooks (called by the engine/scheduler) ----------------------------
     def on_enqueue(self, rid: int):
@@ -69,6 +94,33 @@ class ServingCounters:
         self.prefill_tokens += n_tokens
         self._prefill_ticks[rid] = self._prefill_ticks.get(rid, 0) + 1
 
+    def on_cache_probe(self, rid: int, *, hit: bool, n_cached: int = 0,
+                       probe_s: float = 0.0, copy_s: float = 0.0):
+        """One prefix-cache probe at request `rid`'s admission: outcome,
+        tokens restored from the hit state (0 on miss), and the wall time
+        of the probe and of the state copy into the slot.  Probe+copy are
+        subtracted from the request's `prefill_s` sample — they are cache
+        time, not prefill time."""
+        if hit:
+            self.cache_hits += 1
+            self.cached_tokens += n_cached
+        else:
+            self.cache_misses += 1
+        self.cache_probe_s.append(probe_s)
+        if hit:
+            self.state_copy_s.append(copy_s)
+        self._admit_overhead[rid] = \
+            self._admit_overhead.get(rid, 0.0) + probe_s + copy_s
+
+    def on_cache_insert(self):
+        self.cache_inserts += 1
+
+    def on_cache_evict(self):
+        self.cache_evictions += 1
+
+    def on_cache_spill(self):
+        self.cache_spills += 1
+
     def on_token(self, rid: int, *, first: bool = False):
         self.decode_tokens += 1
         if first:
@@ -76,7 +128,8 @@ class ServingCounters:
                 self.ttft_s.append(self._clock() - self._enqueue_t[rid])
             t_admit = self._admit_t.pop(rid, None)
             if t_admit is not None:
-                self.prefill_s.append(self._clock() - t_admit)
+                self.prefill_s.append(self._clock() - t_admit -
+                                      self._admit_overhead.pop(rid, 0.0))
             self.prefill_ticks.append(self._prefill_ticks.pop(rid, 0))
 
     def on_finish(self, rid: int):
@@ -91,6 +144,7 @@ class ServingCounters:
         self._enqueue_t.pop(rid, None)
         self._admit_t.pop(rid, None)
         self._prefill_ticks.pop(rid, None)
+        self._admit_overhead.pop(rid, None)
 
     def on_tick(self, *, active: int, queued: int):
         self.ticks += 1
@@ -118,6 +172,17 @@ class ServingCounters:
             "mean_prefill_s": mean(self.prefill_s),
             "peak_active_slots": self.peak_active,
             "peak_queue_depth": self.peak_queued,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": self.cache_hits /
+                (self.cache_hits + self.cache_misses)
+                if self.cache_hits + self.cache_misses else 0.0,
+            "cache_inserts": self.cache_inserts,
+            "cache_evictions": self.cache_evictions,
+            "cache_spills": self.cache_spills,
+            "cached_tokens": self.cached_tokens,
+            "mean_cache_probe_s": mean(self.cache_probe_s),
+            "mean_state_copy_s": mean(self.state_copy_s),
         }
 
 

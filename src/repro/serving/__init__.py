@@ -6,16 +6,21 @@ O(1) recurrent states stay resident in one preallocated device pool
 masked decode step per tick (`scheduler`), an `ExecutionPlan` selects the
 decode/prefill paths, prepares params once, caches the compiled programs
 and places everything on the (optional) mesh (`plan`), and the engine
-front-end turns `submit(prompt)` into a token stream (`engine`).
-docs/serving.md has the API guide; docs/architecture.md walks a request
-through the lifecycle and the plan diagram.
+front-end turns `submit(prompt)` into a token stream (`engine`).  A
+recurrent-state prefix cache (`prefix_cache`) turns repeated prompt
+prefixes into O(1) state restores — near-zero TTFT, bit-identical
+tokens.  docs/serving.md has the API guide; docs/architecture.md walks a
+request through the lifecycle and the plan diagram.
 """
 from repro.serving.engine import (RequestHandle, SamplingParams,
                                   ServingEngine)
 from repro.serving.plan import ExecutionPlan, build_plan
+from repro.serving.prefix_cache import (CacheVariant, PrefixCache,
+                                        PrefixCacheConfig, StateLease)
 from repro.serving.scheduler import Request, Scheduler, sample_token
 from repro.serving.state_pool import SlotStatePool
 
 __all__ = ["ServingEngine", "SamplingParams", "RequestHandle",
            "Request", "Scheduler", "sample_token", "SlotStatePool",
-           "ExecutionPlan", "build_plan"]
+           "ExecutionPlan", "build_plan", "PrefixCache",
+           "PrefixCacheConfig", "CacheVariant", "StateLease"]

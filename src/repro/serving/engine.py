@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.models.registry import Model
 from repro.runtime.monitor import ServingCounters
 from repro.serving.plan import ExecutionPlan, build_plan
+from repro.serving.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.state_pool import SlotStatePool
 
@@ -101,6 +102,17 @@ class ServingEngine:
     plan       — a pre-built ExecutionPlan; overrides every path/quant/
                  mesh argument above (they describe a plan, and the plan
                  is the source of truth).
+    prefix_cache — recurrent-state prefix cache (docs/serving.md §prefix
+                 cache): True builds one with default sizing, a
+                 `PrefixCacheConfig` sizes the device/host tiers, and a
+                 `PrefixCache` instance is SHARED (its chunk granularity
+                 must equal the plan's prefill_chunk).  On admission the
+                 scheduler restores the longest cached ancestor prefix's
+                 state into the slot and prefills only the uncached
+                 suffix — bit-identical tokens to cache-off serving
+                 (tests/test_prefix_cache.py).  Entries are keyed by the
+                 plan's `cache_variant()` so packed/fp, rwkv4/rwkv6 and
+                 per-op/chunked states never alias.
     """
 
     def __init__(self, model: Model | str, *, params: Any = None,
@@ -110,7 +122,8 @@ class ServingEngine:
                  fused_decode: bool | str | None = False,
                  fused_prefill: bool = False, seed: int = 0,
                  mesh=None, plan: Optional[ExecutionPlan] = None,
-                 counters: Optional[ServingCounters] = None):
+                 counters: Optional[ServingCounters] = None,
+                 prefix_cache=None):
         if plan is None:
             plan = build_plan(model, params, smoke=smoke, mesh=mesh,
                               quantized=quantized,
@@ -132,12 +145,39 @@ class ServingEngine:
                                   max_len=plan.max_len,
                                   dtype=plan.state_dtype,
                                   shardings=plan.state_shardings(max_batch))
+        self.prefix_cache = self._build_cache(prefix_cache)
         self.scheduler = Scheduler(
             self.pool, plan.decode_fn(max_batch), plan.prefill_fn(max_batch),
             prefill_chunk=plan.prefill_chunk, counters=self.counters,
-            on_token=self._on_token, on_finish=self._on_finish)
+            on_token=self._on_token, on_finish=self._on_finish,
+            prefix_cache=self.prefix_cache,
+            cache_variant=None if self.prefix_cache is None
+            else self.plan.cache_variant())
         self._handles: dict[int, RequestHandle] = {}
         self._rids = itertools.count()
+
+    def _build_cache(self, prefix_cache) -> Optional[PrefixCache]:
+        """Resolve the `prefix_cache=` ctor arg (None/False | True |
+        PrefixCacheConfig | a shared PrefixCache) into a cache whose chunk
+        granularity matches the plan — cached boundaries must be tick
+        boundaries or a resumed suffix would re-chunk differently from a
+        full prefill and lose bit parity."""
+        if prefix_cache is None or prefix_cache is False:
+            return None
+        if isinstance(prefix_cache, PrefixCache):
+            if prefix_cache.chunk != self.plan.prefill_chunk:
+                raise ValueError(
+                    f"shared prefix cache has chunk={prefix_cache.chunk} but "
+                    f"the plan prefills in chunks of {self.plan.prefill_chunk}"
+                    " — boundary states would not land on tick boundaries")
+            cache = prefix_cache
+        else:
+            cfg = prefix_cache if isinstance(prefix_cache, PrefixCacheConfig) \
+                else PrefixCacheConfig()
+            cache = PrefixCache(self.plan.prefill_chunk, config=cfg)
+        if cache.counters is None:
+            cache.counters = self.counters
+        return cache
 
     @property
     def trace_counts(self) -> dict:

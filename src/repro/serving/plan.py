@@ -169,6 +169,23 @@ class ExecutionPlan:
             decode=jax.tree_util.tree_map(put, self.prepared.decode),
             prefill=jax.tree_util.tree_map(put, self.prepared.prefill))
 
+    def cache_variant(self, *, numerics: str = "exact"):
+        """The prefix-cache `CacheVariant` this plan's prefill states file
+        under — derived HERE so the isolation key can never drift from
+        what actually executes: arch from the model config, quant form
+        from the prepared params, prefill path from the selected
+        descriptor, state dtype from the pool dtype.  The engine's paths
+        all run exact numerics; `numerics="hw_lut"` exists for callers
+        driving the paper's LUT/PWL variant directly
+        (tests/test_prefix_cache.py)."""
+        from repro.serving.prefix_cache import CacheVariant
+        return CacheVariant(
+            arch=self.model.cfg.name,
+            quant="dpot_w8" if self.prepared.quantized else "fp",
+            numerics=numerics,
+            prefill=self.prefill_desc.name,
+            state_dtype=self.state_dtype.name)
+
     def state_shardings(self, batch: int):
         """NamedSharding tree for a `batch`-slot pool on this plan's mesh
         (None without a mesh): slot axis data-parallel, divisibility

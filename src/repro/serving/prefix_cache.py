@@ -1,0 +1,352 @@
+"""Recurrent-state prefix cache: near-zero TTFT for repeated prefixes.
+
+RWKV collapses an arbitrarily long prompt prefix into ONE O(1) recurrent
+state (the RWKV paper calls the final hidden state a "free sentence
+embedding"), so a serving engine can replace most prefill work with a
+state lookup — something paged-KV transformer engines need far more
+machinery to approximate.  This module is that lookup:
+
+  * CONTENT-HASH KEYING — prompts are hashed at PREFILL-CHUNK granularity
+    with a rolling hash over token chunks (`digests`): the digest at
+    boundary n covers tokens [0, n), and is derived from the digest at
+    n - chunk, so any cached ancestor prefix of a new prompt hits without
+    re-hashing shared tokens per candidate.  A digest is a lookup key,
+    never a proof: every hit re-compares the actual prefix tokens, so a
+    hash-equal-but-token-unequal chunk is rejected (and counted), not
+    served.
+  * VARIANT ISOLATION — entries are keyed by a `CacheVariant`
+    (model arch, quant form, hw-numerics variant, prefill path, state
+    dtype) alongside the chunk hash.  States from packed Δ-PoT and fp
+    weights, rwkv4 and rwkv6, LUT and exact numerics, or per-op and
+    chunked prefill are different bit patterns for the same tokens; the
+    variant key makes aliasing between them structurally impossible
+    (tests/test_prefix_cache.py sweeps the cross-products).  One cache
+    instance may therefore be shared between engines, like a plan.
+  * TWO TIERS — a device-side LRU (`device_slots` lane states, the
+    arrays `SlotStatePool.read_slot` produced) over a host-memory spill
+    tier (`host_slots`, numpy copies).  Device eviction spills to host;
+    host eviction drops; a host hit is promoted back to device when room
+    exists (bit-exact roundtrip — bf16 survives device_get/put).
+  * WRITE-ONCE + REFCOUNTS — `insert` never overwrites (the first state
+    computed for a key is the only one ever served), and `probe` returns
+    a `StateLease` that pins its entry against eviction/spill until
+    released, so an admitting request can never be handed a state that a
+    concurrent insert's eviction sweep is tearing down.  `check_state`
+    asserts the tier/refcount invariants; the churn tests call it every
+    step, mirroring the state-pool fragmentation tests.
+
+The scheduler wires this into admission (repro.serving.scheduler): probe
+on admit, copy the longest-hit state into the request's slot via the
+pool's existing per-lane write machinery, prefill only the uncached
+suffix, and insert chunk-boundary states captured during prefill when
+the request completes.  Cached-state resume is BIT-IDENTICAL to full
+prefill — the cached state was committed by the same masked prefill
+program at the same chunk boundary the scheduler would have stopped at
+anyway (tests/test_prefix_cache.py pins the whole matrix).  Telemetry
+(hits/misses/evictions/spills, cached-token accounting, probe/copy time)
+flows through `runtime.monitor.ServingCounters`; docs/serving.md
+§"Prefix cache" covers sizing and the CLI flags.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEVICE, HOST = "device", "host"
+
+
+def default_chunk_hash(prev: bytes, tokens: tuple) -> bytes:
+    """Rolling chunk hash: digest of (parent digest, this chunk's tokens).
+    blake2b-128 over the int64 token bytes — stable across processes, so
+    a persisted cache could be rehydrated.  Injectable (`hash_fn=`) so
+    collision handling is testable."""
+    h = hashlib.blake2b(prev, digest_size=16)
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheVariant:
+    """Everything that changes the BITS of a prefix state for the same
+    tokens — the non-hash half of every cache key.  Two engines sharing a
+    cache can only share entries when all five fields agree; `ExecutionPlan
+    .cache_variant()` derives the engine's variant from the plan so the
+    fields can never drift from what actually executes."""
+    arch: str               # model config name ("rwkv4-169m-smoke", ...)
+    quant: str              # "fp" | "dpot_w8"
+    numerics: str           # "exact" | "hw_lut" (paper LUT/PWL units)
+    prefill: str            # "per_op" | "chunked" (PathDescriptor name)
+    state_dtype: str = "bfloat16"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Sizing knobs (entries, not bytes — every entry is one fixed-size
+    lane state).  `host_slots=0` disables the spill tier."""
+    device_slots: int = 64
+    host_slots: int = 256
+
+
+@dataclasses.dataclass
+class _Entry:
+    key: tuple                      # (variant, n_tokens, digest)
+    tokens: tuple                   # the full prefix — hash-collision guard
+    n_tokens: int
+    state: Any                      # device tree (DEVICE) / numpy (HOST)
+    tier: str = DEVICE
+    refcount: int = 0
+
+
+class StateLease:
+    """A refcount pin on one cache entry: between `probe` and `release`
+    the entry cannot be evicted, spilled, or overwritten, so `state` is
+    safe to copy into a pool slot no matter what insert/evict churn runs
+    concurrently.  Release is idempotent."""
+
+    def __init__(self, entry: _Entry):
+        self._entry = entry
+        entry.refcount += 1
+
+    @property
+    def n_tokens(self) -> int:
+        return self._entry.n_tokens
+
+    @property
+    def tokens(self) -> tuple:
+        return self._entry.tokens
+
+    @property
+    def state(self):
+        """The cached lane state as a DEVICE tree (host-tier entries are
+        materialized on the fly when promotion had no room)."""
+        if self._entry.tier == HOST:
+            return jax.tree_util.tree_map(jnp.asarray, self._entry.state)
+        return self._entry.state
+
+    def release(self):
+        if self._entry is not None:
+            self._entry.refcount -= 1
+            self._entry = None
+
+
+class PrefixCache:
+    """Two-tier LRU of chunk-boundary lane states (see module docstring).
+
+    chunk     — prefill-chunk granularity; boundaries are multiples of it
+                and MUST equal the serving plan's `prefill_chunk` (the
+                engine asserts this), or cached boundaries would not be
+                tick boundaries and resume would lose bit parity
+    config    — PrefixCacheConfig tier sizes
+    counters  — optional runtime.monitor.ServingCounters receiving the
+                eviction/spill/insert hooks (hits/misses are reported by
+                the scheduler, which knows the request)
+    hash_fn   — rolling chunk hash override (tests force collisions)
+    """
+
+    def __init__(self, chunk: int, *,
+                 config: PrefixCacheConfig = PrefixCacheConfig(),
+                 counters=None,
+                 hash_fn: Callable[[bytes, tuple], bytes] =
+                 default_chunk_hash):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.chunk = int(chunk)
+        self.config = config
+        self.counters = counters
+        self._hash = hash_fn
+        self._device: collections.OrderedDict = collections.OrderedDict()
+        self._host: collections.OrderedDict = collections.OrderedDict()
+        self.stats = collections.Counter(
+            hits=0, host_hits=0, misses=0, inserts=0, rejects=0,
+            collisions=0, evictions=0, spills=0, drops=0, insert_dropped=0)
+
+    # -- keying ------------------------------------------------------------
+
+    def digests(self, prompt) -> dict:
+        """Rolling digests for every chunk boundary of `prompt`:
+        {n: digest} for n = chunk, 2*chunk, ... <= len(prompt).  Computed
+        once per request at admission and reused by probe/contains/insert
+        so per-tick bookkeeping never re-hashes the prompt."""
+        out, h = {}, b""
+        for n in range(self.chunk, len(prompt) + 1, self.chunk):
+            h = self._hash(h, tuple(prompt[n - self.chunk:n]))
+            out[n] = h
+        return out
+
+    def _key(self, variant: CacheVariant, n: int, digest: bytes) -> tuple:
+        return (variant, int(n), digest)
+
+    def _tokens_match(self, entry: _Entry, prompt, n: int) -> bool:
+        if entry.tokens == tuple(prompt[:n]):
+            return True
+        self.stats["collisions"] += 1       # full-key compare rejected it
+        return False
+
+    # -- probe -------------------------------------------------------------
+
+    def probe(self, variant: CacheVariant, prompt,
+              digests: Optional[dict] = None) -> Optional[StateLease]:
+        """Longest cached ancestor prefix of `prompt` under `variant`, as
+        a refcount lease — or None.  Only PROPER prefixes are served
+        (n < len(prompt)): the scheduler always needs at least the last
+        prompt token's logits to sample the first generated token, so a
+        whole-prompt hit could not skip the final prefill call anyway."""
+        if digests is None:
+            digests = self.digests(prompt)
+        for n in sorted(digests, reverse=True):
+            if n >= len(prompt):
+                continue
+            key = self._key(variant, n, digests[n])
+            entry = self._device.get(key)
+            if entry is not None and self._tokens_match(entry, prompt, n):
+                self._device.move_to_end(key)
+                self.stats["hits"] += 1
+                return StateLease(entry)
+            entry = self._host.get(key)
+            if entry is not None and self._tokens_match(entry, prompt, n):
+                self.stats["hits"] += 1
+                self.stats["host_hits"] += 1
+                # pin BEFORE promoting: the promotion's own room-making
+                # sweep only evicts refcount-0 entries, so the lease keeps
+                # the hit itself from being the host-tier victim
+                lease = StateLease(entry)
+                self._promote(key, entry)
+                return lease
+        self.stats["misses"] += 1
+        return None
+
+    def contains(self, variant: CacheVariant, prompt, n: int,
+                 digests: Optional[dict] = None) -> bool:
+        """True when boundary `n` of `prompt` is already cached under
+        `variant` (either tier) — the scheduler's capture-skip check."""
+        if n % self.chunk or not 0 < n <= len(prompt):
+            return False
+        digest = (digests if digests is not None
+                  else self.digests(prompt)).get(n)
+        if digest is None:
+            return False
+        key = self._key(variant, n, digest)
+        entry = self._device.get(key) or self._host.get(key)
+        return entry is not None and entry.tokens == tuple(prompt[:n])
+
+    # -- insert / evict ----------------------------------------------------
+
+    def insert(self, variant: CacheVariant, prompt, n: int, state,
+               digests: Optional[dict] = None) -> bool:
+        """Insert the lane state holding exactly tokens [0, n) of `prompt`
+        into the device tier.  WRITE-ONCE: a key already present in either
+        tier is never overwritten (the first computed state wins — any
+        later computation of the same key is bit-identical by the resume
+        oracle, so there is nothing to update).  Returns False when
+        rejected (present, misaligned, or no evictable room)."""
+        if n % self.chunk or not 0 < n <= len(prompt):
+            return False
+        digest = (digests if digests is not None
+                  else self.digests(prompt)).get(n)
+        if digest is None:
+            return False
+        key = self._key(variant, n, digest)
+        if key in self._device or key in self._host:
+            self.stats["rejects"] += 1
+            return False
+        if not self._make_device_room():
+            self.stats["insert_dropped"] += 1
+            return False
+        self._device[key] = _Entry(key=key, tokens=tuple(prompt[:n]),
+                                   n_tokens=int(n), state=state)
+        self.stats["inserts"] += 1
+        if self.counters is not None:
+            self.counters.on_cache_insert()
+        return True
+
+    def _make_device_room(self) -> bool:
+        """Ensure one free device slot, spilling LRU unleased entries to
+        host (or dropping them when the host tier is full of leased/none).
+        False when every device entry is refcount-pinned."""
+        while len(self._device) >= self.config.device_slots:
+            victim_key = next((k for k, e in self._device.items()
+                               if e.refcount == 0), None)
+            if victim_key is None:
+                return False
+            entry = self._device.pop(victim_key)
+            self.stats["evictions"] += 1
+            if self.counters is not None:
+                self.counters.on_cache_evict()
+            if self._make_host_room():
+                entry.state = jax.tree_util.tree_map(jax.device_get,
+                                                     entry.state)
+                entry.tier = HOST
+                self._host[victim_key] = entry
+                self.stats["spills"] += 1
+                if self.counters is not None:
+                    self.counters.on_cache_spill()
+            else:
+                self.stats["drops"] += 1
+        return True
+
+    def _make_host_room(self) -> bool:
+        if self.config.host_slots < 1:
+            return False
+        while len(self._host) >= self.config.host_slots:
+            victim_key = next((k for k, e in self._host.items()
+                               if e.refcount == 0), None)
+            if victim_key is None:
+                return False
+            del self._host[victim_key]
+            self.stats["drops"] += 1
+        return True
+
+    def _promote(self, key: tuple, entry: _Entry):
+        """Host hit -> device tier (MRU), when an unleased device slot can
+        be made; otherwise the entry stays host-resident and the lease
+        materializes a device copy per use."""
+        if not self._make_device_room():
+            return
+        del self._host[key]
+        entry.state = jax.tree_util.tree_map(jnp.asarray, entry.state)
+        entry.tier = DEVICE
+        self._device[key] = entry
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def n_device(self) -> int:
+        return len(self._device)
+
+    @property
+    def n_host(self) -> int:
+        return len(self._host)
+
+    def snapshot(self) -> dict:
+        """Stats + occupancy as a plain dict (merged into the serve CLI's
+        telemetry printout and the benchmark records)."""
+        probes = self.stats["hits"] + self.stats["misses"]
+        return {**self.stats,
+                "device_entries": self.n_device,
+                "host_entries": self.n_host,
+                "hit_rate": self.stats["hits"] / probes if probes else 0.0}
+
+    def check_state(self):
+        """Assert the structural invariants the churn tests pin every
+        step: tier capacities respected, no key in both tiers, refcounts
+        non-negative, every entry's tier tag / tokens / boundary
+        consistent with where it lives.  (A LEASED entry may sit in either
+        tier — a host hit is pinned before promotion, and stays host-
+        resident when every device slot is also leased — but room-making
+        only ever victimizes refcount-0 entries, which eviction/spill
+        churn under held leases exercises.)"""
+        assert len(self._device) <= self.config.device_slots
+        assert len(self._host) <= self.config.host_slots
+        assert not set(self._device) & set(self._host), "key in both tiers"
+        for store, tier in ((self._device, DEVICE), (self._host, HOST)):
+            for key, e in store.items():
+                assert e.key == key and e.tier == tier
+                assert e.refcount >= 0, f"negative refcount on {key}"
+                assert e.n_tokens == len(e.tokens) == key[1]
+                assert e.n_tokens % self.chunk == 0 and e.n_tokens > 0

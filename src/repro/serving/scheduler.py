@@ -4,7 +4,13 @@ One `tick()` is the software analog of the paper's pipeline reordering
 (PAPER.md §3: overlap data movement with computation so the datapath never
 stalls).  Per tick the scheduler
 
-  1. ADMITS queued requests into free pool slots,
+  1. ADMITS queued requests into free pool slots — and, when a prefix
+     cache is wired in (`repro.serving.prefix_cache`), probes it with the
+     request's prompt: the longest cached ancestor prefix's state is
+     copied into the slot via the pool's per-lane write machinery and
+     only the uncached SUFFIX is prefilled (the slot starts at
+     n_prefilled = hit length with its fresh-reset suppressed, so the
+     prefill call advances the restored state instead of wiping it),
   2. advances EVERY prefilling slot by up to one fixed-size prompt chunk
      in ONE fused call (per-op: a jitted scan of `decode_step` over the
      whole pool; fused: the chunk-matmul + on-chip-WKV `prefill_chunk`
@@ -18,7 +24,13 @@ stalls).  Per tick the scheduler
 Because the pool, the chunk, and the fused step all have fixed shapes,
 serving runs on exactly two device programs (fused prefill chunk +
 fused decode step) no matter how requests arrive, finish, or interleave
-— admission and retirement are pure host bookkeeping.  The scheduler
+— admission and retirement are pure host bookkeeping.  The prefix cache
+rides the same two programs: a cache hit is a per-lane state write at
+admission (the pool's traced-once `write_slot`), chunk-boundary capture
+is a per-lane `read_slot`, and the resumed suffix prefills through the
+unchanged chunk program at the same tick boundaries a full prefill would
+have used — which is exactly why cached-state resume is bit-identical to
+full prefill (tests/test_prefix_cache.py).  The scheduler
 does not build (or select) those programs: it is handed the two
 callables by the engine, which takes them from an `ExecutionPlan`'s
 compiled-program cache (`repro.serving.plan`) — path choice, param
@@ -36,6 +48,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -65,6 +78,12 @@ class _Slot:
     next_token: int = -1            # token the next decode tick consumes
     generated: list[int] = dataclasses.field(default_factory=list)
     rng: Optional[np.random.Generator] = None
+    # prefix-cache bookkeeping: tokens restored from a probe hit, the
+    # prompt's rolling boundary digests (hashed once at admission), and
+    # boundary states captured during prefill, published at completion
+    cached_tokens: int = 0
+    digests: Optional[dict] = None
+    pending_inserts: list = dataclasses.field(default_factory=list)
 
 
 def sample_token(logits_row: np.ndarray, temperature: float,
@@ -120,7 +139,8 @@ class Scheduler:
     def __init__(self, pool, decode_fn: Callable, prefill_fn: Callable, *,
                  prefill_chunk: int, counters=None,
                  on_token: Optional[Callable] = None,
-                 on_finish: Optional[Callable] = None):
+                 on_finish: Optional[Callable] = None,
+                 prefix_cache=None, cache_variant=None):
         self.pool = pool
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
@@ -128,6 +148,16 @@ class Scheduler:
         self.counters = counters
         self.on_token = on_token or (lambda req, tok: None)
         self.on_finish = on_finish or (lambda req: None)
+        # prefix cache (repro.serving.prefix_cache.PrefixCache) + the
+        # CacheVariant this scheduler's states are filed under; both or
+        # neither.  The cache's chunk granularity must equal
+        # prefill_chunk — boundaries must be tick boundaries, or resumed
+        # suffixes would re-chunk differently from a full prefill and
+        # lose bit parity (the engine validates this at construction).
+        self.prefix_cache = prefix_cache
+        self.cache_variant = cache_variant
+        if prefix_cache is not None and cache_variant is None:
+            raise ValueError("prefix_cache needs a cache_variant")
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: dict[int, _Slot] = {}
 
@@ -179,10 +209,63 @@ class Scheduler:
         while self.queue and self.pool.n_free:
             slot = self.pool.acquire()
             req = self.queue.popleft()
-            self.slots[slot] = _Slot(
-                req=req, rng=np.random.default_rng(req.seed))
+            meta = _Slot(req=req, rng=np.random.default_rng(req.seed))
+            self.slots[slot] = meta
             if self.counters is not None:
                 self.counters.on_admit(req.rid)
+            if self.prefix_cache is not None:
+                self._cache_probe(slot, meta)
+
+    def _now(self) -> float:
+        return self.counters.now() if self.counters is not None \
+            else time.monotonic()
+
+    def _cache_probe(self, slot: int, meta: _Slot):
+        """Admission-side cache path: probe for the longest cached
+        ancestor prefix of the prompt and, on a hit, install its state
+        into the freshly acquired lane.  The slot then starts mid-prefill
+        (n_prefilled = hit length) with `fresh=False`, so the next
+        prefill call advances the restored state instead of resetting the
+        lane, and only the uncached suffix is ever computed.  Probe and
+        state-copy wall time are reported separately from prefill time
+        (ServingCounters.on_cache_probe) — a hit's TTFT is cache time
+        plus suffix prefill, and the decomposition should say so."""
+        req = meta.req
+        meta.digests = self.prefix_cache.digests(req.prompt)
+        t0 = self._now()
+        lease = self.prefix_cache.probe(self.cache_variant, req.prompt,
+                                        meta.digests)
+        t_probe = self._now() - t0
+        if lease is None:
+            if self.counters is not None:
+                self.counters.on_cache_probe(req.rid, hit=False,
+                                             probe_s=t_probe)
+            return
+        t0 = self._now()
+        self.pool.write_slot(slot, lease.state)
+        self.pool.sync()            # block so the copy time is honest
+        t_copy = self._now() - t0
+        meta.fresh = False
+        meta.n_prefilled = meta.cached_tokens = lease.n_tokens
+        if self.counters is not None:
+            self.counters.on_cache_probe(req.rid, hit=True,
+                                         n_cached=lease.n_tokens,
+                                         probe_s=t_probe, copy_s=t_copy)
+        lease.release()
+
+    def _cache_capture(self, slot: int, meta: _Slot):
+        """After a prefill tick: if the lane now holds exactly a
+        chunk-boundary prefix that is not already cached, copy it out
+        (pool.read_slot) and stage it on the slot.  Staged states are
+        published to the cache only when the request COMPLETES (_retire)
+        — write-once, and cancelled requests never publish."""
+        n = meta.n_prefilled
+        if n == 0 or n % self.prefill_chunk or n <= meta.cached_tokens:
+            return
+        if self.prefix_cache.contains(self.cache_variant, meta.req.prompt,
+                                      n, meta.digests):
+            return
+        meta.pending_inserts.append((n, self.pool.read_slot(slot)))
 
     def _prefill_tick(self):
         prefilling = [(s, m) for s, m in self.slots.items()
@@ -209,6 +292,8 @@ class Scheduler:
             meta.n_prefilled += parts[slot]
             if self.counters is not None:
                 self.counters.on_prefill(meta.req.rid, parts[slot])
+            if self.prefix_cache is not None:
+                self._cache_capture(slot, meta)
             if meta.n_prefilled == len(meta.req.prompt):
                 # prompt fully absorbed: the last prompt token's logits
                 # yield the first generated token; the slot joins the
@@ -257,6 +342,15 @@ class Scheduler:
                 self._retire(slot, meta)
 
     def _retire(self, slot: int, meta: _Slot, *, cancelled: bool = False):
+        if not cancelled and self.prefix_cache is not None:
+            # publish the boundary states captured during prefill —
+            # write-once (the cache keeps the first state for a key;
+            # any rival is bit-identical by the resume oracle)
+            for n, state in meta.pending_inserts:
+                self.prefix_cache.insert(self.cache_variant,
+                                         meta.req.prompt, n, state,
+                                         meta.digests)
+        meta.pending_inserts.clear()
         del self.slots[slot]
         self.pool.release(slot)
         if self.counters is not None:

@@ -21,12 +21,15 @@ generic per-lane device API (three jitted helpers, traced once each):
   write_slot(i, lane)  -> install a batch-1 state tree into lane i
   reset_slot(i)        -> write the fresh-state template
 
-Note the scheduler's hot path does NOT use these: lane resets happen
-inside the fused prefill call via its fresh-slot mask, so a released
-slot keeps its stale state until the next admission overwrites it (no
-cross-request leakage — nothing ever reads a lane before that reset).
-The helpers exist for out-of-band uses: tests, debugging, and state
-migration/snapshot of individual requests.
+The scheduler's per-token hot path does NOT use these: lane resets
+happen inside the fused prefill call via its fresh-slot mask, so a
+released slot keeps its stale state until the next admission overwrites
+it (no cross-request leakage — nothing ever reads a lane before that
+reset).  The helpers serve the per-REQUEST paths instead: the prefix
+cache (repro.serving.prefix_cache) restores a cached prefix state into
+a slot with `write_slot` at admission and captures chunk-boundary
+states with `read_slot` during prefill — plus tests, debugging, and
+state migration/snapshot of individual requests.
 """
 from __future__ import annotations
 
@@ -118,3 +121,10 @@ class SlotStatePool:
     def reset_slot(self, slot: int):
         """Restore slot `slot` to the fresh (just-initialized) state."""
         self.write_slot(slot, self._fresh)
+
+    def sync(self):
+        """Block until every in-flight update to the pool buffers has
+        landed.  The scheduler's prefix-cache path calls this after a
+        hit-state `write_slot` so the state-copy wall time it reports is
+        the real transfer, not just the async dispatch."""
+        jax.block_until_ready(self.state)

@@ -1,0 +1,614 @@
+"""Prefix cache: the bit-parity resume oracle + cache-structure invariants.
+
+THE tentpole claim (docs/serving.md §prefix cache): resuming a prompt
+from a cached chunk-boundary state is BIT-IDENTICAL to prefilling the
+whole prompt — states AND last logits — because the cached state is the
+state the engine's own tick-chunking produces, the pool's read/write
+helpers are dtype-preserving dynamic slices, and the resumed suffix
+re-chunks on the same tick boundaries a full prefill uses.  The matrix
+here pins it across rwkv4 + rwkv6, fp + packed Δ-PoT weights, per-op +
+fused chunked prefill, every resume boundary (including partial-chunk
+suffixes), a host-tier spill roundtrip, the paper's hw LUT/PWL numerics,
+and multi-turn resume-of-a-resume through the live engine.
+
+The cache structure itself gets the same treatment as the slot pool:
+variant/collision aliasing sweeps (a cache entry must NEVER be served
+across quant/arch/numerics/path variants, nor on a hash collision),
+write-once + refcount-lease semantics, and seeded LRU churn with
+`check_state()` invariants asserted every step — including over states
+read from a mesh-sharded pool (all 8 virtual devices under the CI
+multi-device leg).  ServingCounters' TTFT decomposition (probe/copy time
+split out of prefill_s) is pinned with a fake clock.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import exact_jit
+from repro.models.registry import get_model
+from repro.runtime.monitor import ServingCounters
+from repro.serving import (CacheVariant, PrefixCache, PrefixCacheConfig,
+                           ServingEngine, SlotStatePool)
+from repro.serving.plan import build_plan
+from repro.serving.prefix_cache import DEVICE, default_chunk_hash
+
+ARCHS = ["rwkv4-169m", "rwkv6-7b"]
+C = 4                                   # prefill chunk for every test
+
+
+def _assert_bitwise(tree_a, tree_b):
+    la = jax.tree_util.tree_leaves(tree_a)
+    lb = jax.tree_util.tree_leaves(tree_b)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def _variant(**kw) -> CacheVariant:
+    base = dict(arch="rwkv4-169m-smoke", quant="fp", numerics="exact",
+                prefill="per_op", state_dtype="bfloat16")
+    base.update(kw)
+    return CacheVariant(**base)
+
+
+def _lane(tag: float, dtype=jnp.bfloat16):
+    """A tiny sentinel 'lane state' tree for pure-cache tests."""
+    return {"a": jnp.full((2, 3), tag, dtype),
+            "b": jnp.full((4,), tag + 0.5, jnp.float32)}
+
+
+def _chunked(prompt, n0=0):
+    """[(lo, hi)] tick chunks the scheduler would run for prompt[n0:]."""
+    return [(lo, min(lo + C, len(prompt)))
+            for lo in range(n0, len(prompt), C)]
+
+
+# ---------------------------------------------------------------------------
+# THE resume oracle: plan-level bit parity at every boundary
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused_prefill", [False, True],
+                         ids=["per_op", "chunked"])
+@pytest.mark.parametrize("quantized", [False, True], ids=["fp", "dpot"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_resume_bit_parity_matrix(arch, quantized, fused_prefill):
+    """For EVERY chunk boundary n of a prompt with a partial final chunk:
+    (capture state at n during a full prefill) then (write it into a
+    fresh pool lane, prefill only prompt[n:]) ends bit-identical — final
+    state and final logits — to the uninterrupted full prefill.  This is
+    exactly the cache's hit path: probe -> write_slot -> suffix chunks on
+    the same tick boundaries."""
+    model = get_model(arch, smoke=True)
+    plan = build_plan(model, quantized=quantized,
+                      fused_prefill=fused_prefill, prefill_chunk=C)
+    prefill = plan.prefill_fn(1)
+    rng = np.random.default_rng(len(arch) + 2 * quantized)
+    prompt = rng.integers(0, model.cfg.vocab, size=2 * C + 2).tolist()
+
+    def run(pool, chunks, fresh0):
+        fresh = fresh0
+        boundary_states, last = {}, None
+        for lo, hi in chunks:
+            toks = np.zeros((1, C), np.int32)
+            valid = np.zeros((1, C), bool)
+            toks[0, :hi - lo] = prompt[lo:hi]
+            valid[0, :hi - lo] = True
+            pool.state, last = prefill(pool.state, toks, valid,
+                                       np.array([fresh]))
+            fresh = False
+            if hi % C == 0:
+                boundary_states[hi] = pool.read_slot(0)
+        return boundary_states, pool.read_slot(0), last
+
+    pool = SlotStatePool(model, 1, dtype=plan.state_dtype)
+    cached, s_full, l_full = run(pool, _chunked(prompt), True)
+    assert sorted(cached) == [C, 2 * C]       # 10 tokens -> 2 boundaries
+    for n, state in cached.items():
+        pool2 = SlotStatePool(model, 1, dtype=plan.state_dtype)
+        pool2.write_slot(0, state)            # the cache-hit restore
+        _, s_res, l_res = run(pool2, _chunked(prompt, n), False)
+        _assert_bitwise(s_full, s_res)
+        _assert_bitwise(l_full, l_res)
+
+
+def test_resume_bit_parity_survives_host_spill(rng):
+    """The spill tier's device_get -> device roundtrip is bit-exact for
+    the bf16 state: resuming from a state that took the host detour ends
+    identical to resuming from the device-resident copy."""
+    model = get_model("rwkv4-169m", smoke=True)
+    plan = build_plan(model, prefill_chunk=C)
+    prefill = plan.prefill_fn(1)
+    prompt = rng.integers(0, model.cfg.vocab, size=C + 3).tolist()
+    pool = SlotStatePool(model, 1, dtype=plan.state_dtype)
+    toks = np.asarray([prompt[:C]], np.int32)
+    pool.state, _ = prefill(pool.state, toks, np.ones((1, C), bool),
+                            np.array([True]))
+    state = pool.read_slot(0)
+    spilled = jax.tree_util.tree_map(
+        jnp.asarray, jax.tree_util.tree_map(jax.device_get, state))
+    _assert_bitwise(state, spilled)
+
+    def suffix(lane):
+        p = SlotStatePool(model, 1, dtype=plan.state_dtype)
+        p.write_slot(0, lane)
+        t = np.zeros((1, C), np.int32)
+        v = np.zeros((1, C), bool)
+        t[0, :3], v[0, :3] = prompt[C:], True
+        p.state, last = prefill(p.state, t, v, np.array([False]))
+        return p.read_slot(0), last
+
+    _assert_bitwise(suffix(state), suffix(spilled))
+
+
+def test_resume_bit_parity_hw_lut_numerics(rng):
+    """The paper's LUT-exp / PWL-sigmoid / LUT-div numerics resume
+    bit-identically too (their states are filed under numerics='hw_lut',
+    never aliasing the exact-numerics entries): a masked scan of
+    decode_step(hw=True) over the suffix, seeded with the boundary state
+    (after a host roundtrip), matches the uninterrupted scan."""
+    from repro.models import rwkv4
+    from repro.serving.plan import masked_state_commit
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.cast_params(model.init_params(jax.random.PRNGKey(0)))
+    cfg, axes = model.cfg, model.decode_state_batch_axes()
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, size=2 * C + 2),
+                         jnp.int32)
+
+    def scan(state, tokens):
+        def body(st, tok):
+            logits, stepped = rwkv4.decode_step(
+                params, st, tok[None, None], jnp.int32(0), cfg, hw=True)
+            return masked_state_commit(stepped, st,
+                                       jnp.ones((1,), bool), axes), logits
+        return jax.lax.scan(body, state, tokens)
+
+    scan = exact_jit(scan)
+    fresh = model.init_decode_state(1, 0)
+    s_full, l_full = scan(fresh, prompt)
+    s_mid, _ = scan(fresh, prompt[:C])
+    s_mid = jax.tree_util.tree_map(                 # host-tier roundtrip
+        jnp.asarray, jax.tree_util.tree_map(jax.device_get, s_mid))
+    s_res, l_res = scan(s_mid, prompt[C:])
+    _assert_bitwise(s_full, s_res)
+    _assert_bitwise(l_full[-1], l_res[-1])
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: cached serving streams the exact cache-off tokens
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(model, params, prompts, *, cache, n_new=5, **kw):
+    eng = ServingEngine(model, params=params, max_batch=2, prefill_chunk=C,
+                        prefix_cache=cache, **kw)
+    toks = []
+    for p in prompts:                  # sequential: later submits can hit
+        h = eng.submit(p, max_new_tokens=n_new)
+        eng.run()
+        toks.append(h.tokens)
+    assert eng.trace_counts == {"decode": 1, "prefill": 1}
+    return eng, toks
+
+
+@pytest.mark.parametrize("quantized,fused_prefill",
+                         [(False, False), (False, True), (True, True)],
+                         ids=["fp-per_op", "fp-chunked", "dpot-chunked"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_engine_cached_greedy_equivalence(arch, quantized, fused_prefill):
+    """End to end through the live engine: with the cache on, repeated
+    and extended prefixes stream the exact greedy tokens of cache-off
+    serving, on both prefill paths, fp and packed — and still on exactly
+    two device programs (a hit is a per-lane write, not a new trace)."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, model.cfg.vocab, size=2 * C).tolist()
+    prompts = [base + [7], base + [9, 3],          # sibling suffixes
+               base[:C] + [5],                     # shorter shared prefix
+               base + rng.integers(0, model.cfg.vocab, size=C + 1).tolist()]
+    kw = dict(quantized=quantized, fused_prefill=fused_prefill)
+    _, want = _run_engine(model, params, prompts, cache=None, **kw)
+    eng, got = _run_engine(model, params, prompts,
+                           cache=PrefixCacheConfig(device_slots=8,
+                                                   host_slots=8), **kw)
+    assert got == want
+    snap = eng.prefix_cache.snapshot()
+    assert snap["hits"] >= 3 and snap["collisions"] == 0
+    eng.prefix_cache.check_state()
+
+
+def test_engine_resume_of_a_resume(rwkv4_fixture):
+    """Multi-turn: request B resumes from A's cached boundary and extends
+    it; request C resumes from a boundary B captured WHILE ITSELF running
+    resumed — tokens stay bit-identical to cache-off serving, and the
+    cached-token accounting shows each turn skipped the whole shared
+    prefix."""
+    model, params = rwkv4_fixture
+    rng = np.random.default_rng(2)
+    p1 = rng.integers(0, model.cfg.vocab, size=2 * C).tolist()
+    p2 = rng.integers(0, model.cfg.vocab, size=C).tolist()
+    p3 = rng.integers(0, model.cfg.vocab, size=C + 2).tolist()
+    prompts = [p1 + [3], p1 + p2 + [5], p1 + p2 + p3]
+    _, want = _run_engine(model, params, prompts, cache=None)
+    counters = ServingCounters()
+    eng, got = _run_engine(model, params, prompts,
+                           cache=PrefixCacheConfig(device_slots=8,
+                                                   host_slots=8),
+                           counters=counters)
+    assert got == want
+    # B restored 2C (all of p1), C restored 3C (p1+p2, captured during
+    # B's own resumed run)
+    assert counters.cached_tokens == 2 * C + 3 * C
+    assert counters.cache_hits == 2 and counters.cache_misses == 1
+
+
+def test_engine_cached_serving_on_mesh(rwkv4_fixture):
+    """The cache's per-lane read/write rides the sharded pool: cached
+    serving over a ('data',) mesh (all visible devices — 8 under the CI
+    multi-device leg) streams the cache-off tokens bit-identically."""
+    from repro.launch.mesh import make_serving_mesh
+    model, params = rwkv4_fixture
+    rng = np.random.default_rng(4)
+    base = rng.integers(0, model.cfg.vocab, size=2 * C).tolist()
+    prompts = [base + [1], base + [2, 3]]
+    _, want = _run_engine(model, params, prompts, cache=None)
+    mesh = make_serving_mesh(len(jax.devices()))
+    eng, got = _run_engine(model, params, prompts,
+                           cache=PrefixCacheConfig(device_slots=4,
+                                                   host_slots=4),
+                           mesh=mesh)
+    assert got == want
+    assert eng.prefix_cache.stats["hits"] == 1
+
+
+def test_engine_rejects_chunk_mismatched_shared_cache(rwkv4_fixture):
+    """A shared cache whose chunk granularity differs from the plan's
+    prefill_chunk would capture states at non-tick boundaries — the
+    engine refuses it outright."""
+    model, params = rwkv4_fixture
+    shared = PrefixCache(C + 1)
+    with pytest.raises(ValueError, match="chunk"):
+        ServingEngine(model, params=params, max_batch=2, prefill_chunk=C,
+                      prefix_cache=shared)
+
+
+# ---------------------------------------------------------------------------
+# Cache-key aliasing: variants and collisions never cross
+# ---------------------------------------------------------------------------
+
+
+def test_variant_isolation_full_sweep():
+    """Every pairwise-distinct CacheVariant over the arch/quant/numerics/
+    prefill/state-dtype cross-product gets its own namespace: after
+    inserting a distinct sentinel state under each variant FOR THE SAME
+    TOKENS, each probe returns exactly its own sentinel."""
+    variants = [CacheVariant(arch=a, quant=q, numerics=n, prefill=p,
+                             state_dtype=d)
+                for a, q, n, p, d in itertools.product(
+                    ("rwkv4-169m-smoke", "rwkv6-7b-smoke"),
+                    ("fp", "dpot_w8"), ("exact", "hw_lut"),
+                    ("per_op", "chunked"), ("bfloat16", "float32"))]
+    cache = PrefixCache(C, config=PrefixCacheConfig(
+        device_slots=len(variants), host_slots=0))
+    prompt = list(range(C + 1))
+    for i, v in enumerate(variants):
+        assert cache.insert(v, prompt, C, _lane(float(i)))
+    for i, v in enumerate(variants):
+        lease = cache.probe(v, prompt)
+        assert lease is not None
+        np.testing.assert_array_equal(
+            np.asarray(lease.state["a"], np.float32), float(i))
+        lease.release()
+    cache.check_state()
+    assert cache.stats["collisions"] == 0
+
+
+def test_hash_collision_rejected_by_token_compare():
+    """A hash-equal-but-token-unequal chunk is a lookup-table accident,
+    not a hit: with a constant hash function every same-length prompt
+    collides, and the full-key token compare must reject all of them
+    (counted as collisions), never serving another prompt's state."""
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=4,
+                                                    host_slots=0),
+                        hash_fn=lambda prev, toks: b"collide")
+    v = _variant()
+    a, b = list(range(10, 10 + C + 1)), list(range(50, 50 + C + 1))
+    assert cache.insert(v, a, C, _lane(1.0))
+    assert cache.probe(v, b) is None
+    assert cache.stats["collisions"] == 1 and cache.stats["misses"] == 1
+    # the colliding key is occupied by a's state, so b can neither see
+    # itself as cached nor insert its own state under that key — a
+    # collision degrades to a miss, never to a wrong state
+    assert not cache.contains(v, b, C)
+    assert not cache.insert(v, b, C, _lane(2.0))
+    lease = cache.probe(v, a)
+    assert lease is not None
+    np.testing.assert_array_equal(np.asarray(lease.state["a"], np.float32),
+                                  1.0)
+    lease.release()
+
+
+def test_rolling_digests_ancestor_sharing(rng):
+    """Rolling-hash structure: two prompts agree on every boundary digest
+    up to their common prefix and disagree on every boundary after the
+    first differing token — so any cached ancestor hits and nothing past
+    the divergence can."""
+    cache = PrefixCache(C)
+    p = rng.integers(0, 1000, size=4 * C + 2).tolist()
+    q = list(p)
+    q[2 * C + 1] += 1                       # diverge inside chunk 3
+    dp, dq = cache.digests(p), cache.digests(q)
+    assert sorted(dp) == sorted(dq) == [C, 2 * C, 3 * C, 4 * C]
+    assert dp[C] == dq[C] and dp[2 * C] == dq[2 * C]
+    assert dp[3 * C] != dq[3 * C] and dp[4 * C] != dq[4 * C]
+    # process-stability: the digest is a pure function of the tokens
+    assert default_chunk_hash(b"", tuple(p[:C])) == dp[C]
+
+
+def test_probe_serves_only_proper_prefixes():
+    """A whole-prompt boundary entry must not be served for the SAME
+    prompt (the last token's logits are still needed to sample the first
+    generated token) — but it IS the longest hit for any extension."""
+    cache = PrefixCache(C)
+    v = _variant()
+    prompt = list(range(2 * C))
+    assert cache.insert(v, prompt, 2 * C, _lane(1.0))
+    assert cache.probe(v, prompt) is None          # n == len(prompt)
+    lease = cache.probe(v, prompt + [99])
+    assert lease is not None and lease.n_tokens == 2 * C
+    lease.release()
+
+
+def test_write_once_first_state_wins():
+    cache = PrefixCache(C)
+    v = _variant()
+    prompt = list(range(C + 1))
+    assert cache.insert(v, prompt, C, _lane(1.0))
+    assert not cache.insert(v, prompt, C, _lane(2.0))
+    assert cache.stats["rejects"] == 1 and cache.stats["inserts"] == 1
+    lease = cache.probe(v, prompt)
+    np.testing.assert_array_equal(np.asarray(lease.state["a"], np.float32),
+                                  1.0)
+    lease.release()
+    # misaligned / out-of-range boundaries are refused outright
+    assert not cache.insert(v, prompt, C - 1, _lane(3.0))
+    assert not cache.insert(v, prompt, 0, _lane(3.0))
+    assert not cache.insert(v, prompt, 2 * C, _lane(3.0))
+
+
+# ---------------------------------------------------------------------------
+# LRU tiers, refcount leases, churn invariants
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_spills_lru_and_host_hit_promotes():
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=2,
+                                                    host_slots=2))
+    v = _variant()
+    prompts = [[i * 100 + j for j in range(C + 1)] for i in range(3)]
+    for i, p in enumerate(prompts):
+        assert cache.insert(v, p, C, _lane(float(i)))
+    # 0 was LRU -> spilled to host; 1, 2 device-resident
+    assert (cache.n_device, cache.n_host) == (2, 1)
+    assert cache.stats["evictions"] == cache.stats["spills"] == 1
+    lease = cache.probe(v, prompts[0])             # host hit
+    assert cache.stats["host_hits"] == 1
+    np.testing.assert_array_equal(np.asarray(lease.state["a"], np.float32),
+                                  0.0)
+    lease.release()
+    # promotion put 0 back on device, displacing the new LRU (1) to host
+    key0 = (v, C, cache.digests(prompts[0])[C])
+    assert key0 in cache._device and cache._device[key0].tier == DEVICE
+    assert (v, C, cache.digests(prompts[1])[C]) in cache._host
+    cache.check_state()
+
+
+def test_leases_pin_entries_against_eviction():
+    """A refcount-held entry is never the eviction/spill victim; when
+    EVERY device entry is leased, inserts drop instead of tearing down a
+    state someone is copying."""
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=2,
+                                                    host_slots=2))
+    v = _variant()
+    pa, pb, pc, pd = ([i * 10 + j for j in range(C + 1)] for i in range(4))
+    cache.insert(v, pa, C, _lane(1.0))
+    cache.insert(v, pb, C, _lane(2.0))
+    hold_a = cache.probe(v, pa)
+    cache.insert(v, pc, C, _lane(3.0))     # victim must be b, not leased a
+    assert (v, C, cache.digests(pa)[C]) in cache._device
+    assert (v, C, cache.digests(pb)[C]) in cache._host
+    hold_c = cache.probe(v, pc)
+    assert not cache.insert(v, pd, C, _lane(4.0))  # all device slots leased
+    assert cache.stats["insert_dropped"] == 1
+    cache.check_state()
+    hold_a.release(), hold_c.release()
+    hold_a.release()                               # idempotent
+    assert cache._device[(v, C, cache.digests(pa)[C])].refcount == 0
+    assert cache.insert(v, pd, C, _lane(4.0))      # room again
+    cache.check_state()
+
+
+def test_host_hit_pinned_through_promotion_churn():
+    """The host-hit lease is taken BEFORE promotion, so the promotion's
+    own room-making (device eviction -> host spill -> host eviction) can
+    never victimize the entry being served — the regression that would
+    otherwise KeyError with both tiers at capacity."""
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=1,
+                                                    host_slots=1))
+    v = _variant()
+    pa = [10 + j for j in range(C + 1)]
+    pb = [90 + j for j in range(C + 1)]
+    cache.insert(v, pa, C, _lane(1.0))
+    cache.insert(v, pb, C, _lane(2.0))     # a spills to the 1-slot host
+    assert (cache.n_device, cache.n_host) == (1, 1)
+    lease = cache.probe(v, pa)             # host hit, both tiers full
+    assert lease is not None and lease.n_tokens == C
+    np.testing.assert_array_equal(np.asarray(lease.state["a"], np.float32),
+                                  1.0)
+    cache.check_state()
+    lease.release()
+    cache.check_state()
+
+
+def _churn(cache, variant, steps, seed, state_for):
+    """Seeded random probe/insert/hold/release schedule; invariants
+    checked EVERY step.  `state_for(i)` builds the state inserted for
+    prompt family i."""
+    rng = np.random.default_rng(seed)
+    prompts = [[i * 1000 + j for j in range(rng.integers(1, 4) * C + 1)]
+               for i in range(12)]
+    held = []
+    for _ in range(steps):
+        op = rng.random()
+        p = prompts[int(rng.integers(len(prompts)))]
+        if op < 0.45:
+            n = int(rng.integers(1, len(p) // C + 1)) * C
+            cache.insert(variant, p, n, state_for(n))
+        elif op < 0.8:
+            lease = cache.probe(variant, p)
+            if lease is not None:
+                assert lease.n_tokens < len(p)
+                assert lease.tokens == tuple(p[:lease.n_tokens])
+                if rng.random() < 0.5 and len(held) < 4:
+                    held.append(lease)     # hold across future churn
+                else:
+                    lease.release()
+        elif held:
+            held.pop(int(rng.integers(len(held)))).release()
+        cache.check_state()
+    for lease in held:
+        lease.release()
+    cache.check_state()
+    snap = cache.snapshot()
+    assert snap["inserts"] > 0 and snap["hits"] > 0
+    assert snap["device_entries"] <= cache.config.device_slots
+
+
+def test_lru_churn_invariants_every_step():
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=3,
+                                                    host_slots=4))
+    _churn(cache, _variant(), steps=300, seed=0,
+           state_for=lambda n: _lane(float(n)))
+    assert cache.stats["evictions"] > 0 and cache.stats["spills"] > 0
+
+
+def test_lru_churn_over_sharded_pool_states(rwkv4_fixture):
+    """Same churn, but the cached states are REAL lane trees read from a
+    pool sharded over a serving mesh (1 device locally, all 8 under the
+    CI multi-device leg): read_slot -> insert -> probe -> write_slot back
+    must preserve the lane bits across shard boundaries and the host
+    spill tier."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.parallel.sharding import pool_shardings
+    model, _ = rwkv4_fixture
+    n_dev = len(jax.devices())
+    n_slots = max(4, n_dev)
+    mesh = make_serving_mesh(n_dev)
+    state_ab = jax.eval_shape(
+        lambda: model.init_slot_state(n_slots, 0, jnp.bfloat16))
+    sh = pool_shardings(model.decode_state_axes(), state_ab, mesh)
+    pool = SlotStatePool(model, n_slots, shardings=sh)
+
+    def tag_lane(tag):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.full_like(a, tag).astype(a.dtype), pool._fresh)
+
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=2,
+                                                    host_slots=2))
+    _churn(cache, _variant(), steps=120, seed=7,
+           state_for=lambda n: tag_lane(float(n)))
+    # roundtrip a probed state through a pool lane and back, bit-exact
+    v = _variant()
+    p = list(range(C + 1))
+    cache2 = PrefixCache(C)
+    cache2.insert(v, p, C, tag_lane(21.0))
+    lease = cache2.probe(v, p)
+    pool.write_slot(2, lease.state)
+    lease.release()
+    _assert_bitwise(pool.read_slot(2), tag_lane(21.0))
+
+
+def test_host_tier_disabled_drops_instead_of_spilling():
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=2,
+                                                    host_slots=0))
+    v = _variant()
+    for i in range(4):
+        cache.insert(v, [i * 100 + j for j in range(C + 1)], C,
+                     _lane(float(i)))
+    assert cache.n_host == 0 and cache.stats["spills"] == 0
+    assert cache.stats["evictions"] == 2 and cache.stats["drops"] == 2
+    cache.check_state()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: the TTFT decomposition and the token accounting
+# ---------------------------------------------------------------------------
+
+
+def test_counters_prefill_excludes_probe_and_copy_time():
+    """The satellite counter fix, pinned with a settable clock: the
+    request's prefill_s sample is admit -> first-token MINUS the cache
+    probe and state-copy slices — cache time must not masquerade as
+    prefill work (and a cancelled request drops its pending overhead)."""
+    t = [0.0]
+    c = ServingCounters(clock=lambda: t[0])
+    c.on_enqueue(1)
+    t[0] = 1.0
+    c.on_admit(1)
+    c.on_cache_probe(1, hit=True, n_cached=8, probe_s=0.25, copy_s=0.75)
+    t[0] = 5.0
+    c.on_token(1, first=True)
+    assert c.ttft_s == [5.0]
+    assert c.prefill_s == [3.0]            # 4s wall - 1s cache overhead
+    assert c.cached_tokens == 8 and c.cache_hits == 1
+    assert c.cache_probe_s == [0.25] and c.state_copy_s == [0.75]
+    # miss: probe time still subtracted, no copy sample
+    c.on_enqueue(2)
+    t[0] = 6.0
+    c.on_admit(2)
+    c.on_cache_probe(2, hit=False, probe_s=0.5)
+    t[0] = 8.0
+    c.on_token(2, first=True)
+    assert c.prefill_s[-1] == 1.5 and len(c.state_copy_s) == 1
+    # cancellation clears the pending overhead (no leak)
+    c.on_admit(3)
+    c.on_cache_probe(3, hit=True, n_cached=4, probe_s=1.0, copy_s=1.0)
+    c.on_cancel(3)
+    assert 3 not in c._admit_overhead
+    snap = c.snapshot()
+    assert snap["cache_hit_rate"] == 2 / 3
+    assert snap["mean_cache_probe_s"] == pytest.approx((0.25 + 0.5 + 1) / 3)
+
+
+def test_engine_cached_vs_prefilled_token_accounting(rwkv4_fixture):
+    """Across a cached run, every prompt token is accounted exactly once:
+    restored-from-cache or actually prefilled — and the cache-side stats
+    agree with the scheduler-side counters."""
+    model, params = rwkv4_fixture
+    rng = np.random.default_rng(9)
+    base = rng.integers(0, model.cfg.vocab, size=2 * C).tolist()
+    prompts = [base + [1], base + [2], base[:C] + [3]]
+    counters = ServingCounters()
+    eng, _ = _run_engine(model, params, prompts,
+                         cache=PrefixCacheConfig(device_slots=8,
+                                                 host_slots=8),
+                         counters=counters)
+    total = sum(len(p) for p in prompts)
+    assert counters.cached_tokens + counters.prefill_tokens == total
+    assert counters.cached_tokens == 2 * C + C      # full base, then half
+    snap = eng.prefix_cache.snapshot()
+    assert snap["hits"] == counters.cache_hits == 2
+    assert snap["misses"] == counters.cache_misses == 1
+    assert counters.cache_inserts == snap["inserts"] > 0
+
+
+@pytest.fixture(scope="module")
+def rwkv4_fixture():
+    model = get_model("rwkv4-169m", smoke=True)
+    return model, model.init_params(jax.random.PRNGKey(0))
