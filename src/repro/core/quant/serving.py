@@ -250,6 +250,10 @@ class PreparedParams:
     quantized: bool = False
     decode_path: str = "per_op"
     prefill_path: str = "per_op"
+    # truncated-stack drafter weights for the speculative path (the first
+    # `draft_depth` layers of `raw`, leaves aliased — see
+    # Model.truncate_params); None when the plan has no SpeculativePath
+    draft: Any = None
 
 
 def prepare_layer_stack_params(params, cfg, extra_block_operands=None):

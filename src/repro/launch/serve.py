@@ -8,7 +8,8 @@ TTFT, latency) from `runtime.monitor.ServingCounters`.
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv4-169m --smoke \
         --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16] \
         [--fused[=block|model]] [--fused-prefill] [--devices N | --mesh] \
-        [--prefix-cache [--prefix-cache-slots N]]
+        [--prefix-cache [--prefix-cache-slots N]] \
+        [--speculative K [--draft-depth D]]
 
 Every flag combination resolves to ONE `repro.serving.plan.ExecutionPlan`
 (path selection + one-pass param prep + program cache + mesh placement);
@@ -80,14 +81,13 @@ def sequential_decode(model, params, prompt: list[int], n_new: int):
     the engine's bit-identity oracle (docs/serving.md) — the example and the
     scheduler tests both compare against it.
 
-    The PROMPT phase compiles with defined rounding semantics
-    (`kernels.common.exact_jit`), in lockstep with the engine's prefill
-    programs: the engine pins `xla_allow_excess_precision=False` there so
-    its per-op and fused chunked prefill are bit-identical, and the oracle
-    must round the same way or near-tie argmaxes drift.  Generation uses
-    the plain jit, matching the engine's (unflagged) decode tick."""
+    BOTH phases compile with defined rounding semantics
+    (`kernels.common.exact_jit`), in lockstep with the engine: the engine
+    pins `xla_allow_excess_precision=False` on every token-producing
+    program (prefill, decode, and the speculative verifier), and the
+    oracle must round the same way or near-tie argmaxes drift."""
     from repro.kernels.common import exact_jit
-    step = jax.jit(model.decode_step)
+    step = exact_jit(model.decode_step)
     prompt_step = exact_jit(model.decode_step)
     state = model.init_decode_state(1, 0)
     logits = None
@@ -148,7 +148,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           temperature: float = 0.0, fused: bool | str | None = False,
           fused_prefill: bool = False, devices: int | None = None,
           prefix_cache: bool = False, cache_slots: int = 64,
-          cache_host_slots: int = 256):
+          cache_host_slots: int = 256, speculative: int | None = None,
+          draft_depth: int | None = None):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles.
     `devices` (0 = all visible) serves data-parallel over a ("data",)
@@ -172,6 +173,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
                            quantized=quantized,
                            fused_decode=fused or False,
                            fused_prefill=fused_prefill, seed=seed,
+                           speculative=speculative, draft_depth=draft_depth,
                            mesh=mesh, prefix_cache=cache_cfg)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
@@ -242,6 +244,16 @@ def main():
                     help="device-tier cache entries (lane states)")
     ap.add_argument("--prefix-cache-host-slots", type=int, default=256,
                     help="host spill-tier entries; 0 disables spilling")
+    ap.add_argument("--speculative", type=int, default=None, metavar="K",
+                    help="self-speculative decode: a truncated-stack "
+                         "drafter proposes K-1 tokens per tick and one "
+                         "chunk-shaped verify call scores the whole "
+                         "window; the longest verifier-agreed prefix is "
+                         "accepted (bit-identical tokens — K only moves "
+                         "tokens/s; serving/plan.py SpeculativePath)")
+    ap.add_argument("--draft-depth", type=int, default=None,
+                    help="layers the speculative drafter keeps (default "
+                         "half the stack)")
     ap.add_argument("--devices", type=int, default=None,
                     help="serve data-parallel over N local devices (the "
                          "slot pool and per-tick batch shard over a "
@@ -269,7 +281,8 @@ def main():
               fused=args.fused, fused_prefill=args.fused_prefill,
               devices=devices, prefix_cache=args.prefix_cache,
               cache_slots=args.prefix_cache_slots,
-              cache_host_slots=args.prefix_cache_host_slots)
+              cache_host_slots=args.prefix_cache_host_slots,
+              speculative=args.speculative, draft_depth=args.draft_depth)
 
 
 if __name__ == "__main__":

@@ -73,6 +73,36 @@ PREFILL_PATHS = (
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class DraftDescriptor:
+    """Declarative drafter contract for self-speculative decoding.
+
+    A drafter is a CHEAP proposal model whose guesses a bit-exact verifier
+    (the chunked-prefill path scoring the whole draft window in one call)
+    either confirms or corrects — so the drafter's quality only moves the
+    ACCEPTANCE RATE, never the output (repro.serving.plan.SpeculativePath).
+    The "truncated" drafter is the first `depth` layers of the SAME model:
+    because layer l's state transition depends only on layers below it, a
+    truncated stack's recurrent state is exactly the full model's first
+    `depth` state slices — the draft state is a (static) slice of the live
+    pool state, never a second pool (`Model.truncate_state`).
+
+    name    — plan key ("truncated")
+    entry   — module attribute the draft loop chains per proposed token
+              (the per-op `decode_step`, run on a depth-`n_layers` config)
+    depth   — default layers kept when the plan does not pick one
+              (None: half the stack, at least one layer)
+    """
+    name: str
+    entry: str = "decode_step"
+    depth: Optional[int] = None
+
+
+DRAFT_PATHS = (
+    DraftDescriptor("truncated"),
+)
+
+
 def _module_for(cfg: ModelConfig) -> ModuleType:
     if cfg.rwkv_version == 4:
         from repro.models import rwkv4
@@ -141,6 +171,67 @@ class Model:
         any decoder; "chunked" needs the fused `prefill_chunk` entry."""
         return {d.name: d for d in PREFILL_PATHS
                 if hasattr(self.module, d.entry)}
+
+    def draft_paths(self) -> dict[str, DraftDescriptor]:
+        """The self-speculative drafters this model can run, keyed by plan
+        name.  The "truncated" drafter needs (1) the per-op decode step on
+        a position-free recurrent state, (2) a stacked `blocks` param tree
+        whose leaves carry the layer axis first (so the first-`depth`
+        slice IS the truncated model's weights), and (3) a `layers`-named
+        axis in every decode-state leaf (so the draft state is a slice of
+        the live pool state)."""
+        if not (hasattr(self.module, "decode_step")
+                and self.position_free_decode):
+            return {}
+        try:
+            self.decode_state_layer_axes()
+        except (ValueError, AttributeError):
+            return {}
+        if "blocks" not in self.spec():
+            return {}
+        return {d.name: d for d in DRAFT_PATHS}
+
+    def truncated(self, depth: int) -> "Model":
+        """The first-`depth`-layers model as a registry handle: same module,
+        config with `n_layers=depth`.  Combined with `truncate_params` /
+        `truncate_state` this IS the truncated-stack drafter — its
+        decode_step runs the same per-op math over the shallow stack."""
+        if not 1 <= depth <= self.cfg.n_layers:
+            raise ValueError(
+                f"draft depth {depth} outside [1, {self.cfg.n_layers}] "
+                f"for {self.cfg.name}")
+        return Model(cfg=dataclasses.replace(self.cfg, n_layers=depth),
+                     module=self.module)
+
+    def truncate_params(self, params, depth: int):
+        """Truncated-stack drafter weights: the first `depth` layers of the
+        stacked block tree; embedding, outer norms and head are SHARED with
+        the full model (aliased leaves, no copy).  Works on packed Δ-PoT
+        trees too — code and scale planes both carry the layer axis
+        first."""
+        blocks = jax.tree_util.tree_map(lambda leaf: leaf[:depth],
+                                        params["blocks"])
+        return {**params, "blocks": blocks}
+
+    def decode_state_layer_axes(self) -> list[int]:
+        """Position of the layer axis in every decode-state leaf, aligned
+        with tree_leaves(state) — the truncation analog of
+        `decode_state_batch_axes`."""
+        axes = self.decode_state_axes()
+        flat, _ = jax.tree_util.tree_flatten(axes, is_leaf=_is_axes_tuple)
+        return [ax.index("layers") for ax in flat]
+
+    def truncate_state(self, state, depth: int):
+        """The first `depth` layer slices of a decode-state tree — exactly
+        the truncated model's state, because layer l's transition depends
+        only on layers below it.  Static slice; traceable (the plan's draft
+        program slices the live pool state in-trace every tick)."""
+        axes = self.decode_state_layer_axes()
+        leaves = jax.tree_util.tree_leaves(state)
+        tdef = jax.tree_util.tree_structure(state)
+        out = [jax.lax.slice_in_dim(leaf, 0, depth, axis=ax)
+               for leaf, ax in zip(leaves, axes)]
+        return jax.tree_util.tree_unflatten(tdef, out)
 
     def prepare_path_params(self, desc: PathDescriptor, params, **kw):
         """One-time host-side param prep for one path, dispatched through
@@ -221,6 +312,17 @@ class Model:
         `{"packed","scale"}` leaves reach the matmul kernels intact."""
         return self.module.prefill_chunk(params, state, tokens, valid,
                                          jnp.int32(0), self.cfg)
+
+    def prefill_chunk_logits(self, params, state, tokens, valid):
+        """All-position variant of `prefill_chunk` for the speculative
+        VERIFIER: tokens (B, K) with a prefix validity mask -> (new_state,
+        logits (B, K, V)) where row k scores token k+1 — the same program
+        the plain decode path would run on each position, so greedy
+        acceptance against it is lossless by construction.  Invalid
+        positions return zero logits and leave state untouched."""
+        return self.module.prefill_chunk(params, state, tokens, valid,
+                                         jnp.int32(0), self.cfg,
+                                         all_logits=True)
 
     def prepare_prefill_params(self, params):
         """One-time host-side prep for the fused prefill: pre-decode any

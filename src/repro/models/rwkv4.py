@@ -315,9 +315,16 @@ def block_prefill(lp, st, x, valid, cfg: ModelConfig, nm=_Std, *,
 
 
 def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
-                  hw: bool = False, interpret: bool | None = None):
+                  hw: bool = False, interpret: bool | None = None,
+                  all_logits: bool = False):
     """Fused chunked prefill: tokens (B, C) with a per-slot PREFIX validity
     mask (B, C) -> (new_state, last-valid logits (B, 1, V)).
+
+    `all_logits=True` is the speculative VERIFIER variant: the head scores
+    EVERY position -> (new_state, (B, C, V)), row k holding the logits the
+    plain decode tick would produce after consuming token k.  Row-wise
+    bit-identical to the last-valid gather (the (B·C, D) head matmul
+    computes each row independently); invalid positions return zeros.
 
     Bit-identical to the engine's per-op prefill oracle — a `lax.scan` of
     `decode_step` with per-step masked state commits — while restructuring
@@ -346,6 +353,12 @@ def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
 
     x, new_state = jax.lax.scan(body, x, (blocks, state))
     n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    if all_logits:
+        xf = L.apply_norm(params["ln_f"], x, "layernorm")
+        logits = chunk_matmul(xf, params["head"], xf.dtype,
+                              interpret=interpret)
+        return new_state, jnp.where(valid[:, :, None], logits,
+                                    jnp.zeros_like(logits))
     xl = gather_last_valid(x, jnp.maximum(n_valid - 1, 0))[:, None]
     xl = L.apply_norm(params["ln_f"], xl, "layernorm")
     logits = chunk_matmul(xl, params["head"], xl.dtype, interpret=interpret)

@@ -307,14 +307,15 @@ def block_prefill(lp, st, x, valid, cfg: ModelConfig, *,
 
 
 def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, all_logits: bool = False):
     """Fused chunked prefill: tokens (B, C) with a per-slot PREFIX validity
     mask (B, C) -> (new_state, last-valid logits (B, 1, V)).  Bit-identical
     to the engine's scan-of-`decode_step` prefill oracle; packed Δ-PoT
     projection weights decode inside the chunk-matmul kernels (run
     `prepare_prefill_params` once first so the few element-wise-consumed
     packed leaves arrive plain).  See models/rwkv4.py `prefill_chunk` for
-    the shared contract."""
+    the shared contract and the `all_logits=True` verifier variant
+    (-> (new_state, (B, C, V)), one logits row per valid position)."""
     del pos
     from repro.core.quant.serving import broadcast_packed_scales, \
         cast_compute
@@ -331,6 +332,12 @@ def prefill_chunk(params, state, tokens, valid, pos, cfg: ModelConfig, *,
 
     x, new_state = jax.lax.scan(body, x, (blocks, state))
     n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    if all_logits:
+        xf = L.apply_norm(params["ln_f"], x, "layernorm")
+        logits = chunk_matmul(xf, params["head"], xf.dtype,
+                              interpret=interpret)
+        return new_state, jnp.where(valid[:, :, None], logits,
+                                    jnp.zeros_like(logits))
     xl = gather_last_valid(x, jnp.maximum(n_valid - 1, 0))[:, None]
     xl = L.apply_norm(params["ln_f"], xl, "layernorm")
     logits = chunk_matmul(xl, params["head"], xl.dtype, interpret=interpret)

@@ -74,6 +74,15 @@ class ServingCounters:
         self.cache_probe_s: list[float] = []
         self.state_copy_s: list[float] = []
         self._admit_overhead: dict[int, float] = {}  # rid -> probe+copy s
+        # self-speculative decode telemetry (repro.serving scheduler's
+        # _spec_tick): drafted counts every token the drafter proposed,
+        # accepted the ones the verifier confirmed AND the lane consumed,
+        # rejected the rest — acceptance_rate = accepted / drafted is the
+        # one number that says whether a (K, draft_depth) choice pays
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rejected_tokens = 0
+        self.spec_ticks = 0             # per-lane window walks, not ticks
 
     def now(self) -> float:
         """The counters' clock (injectable) — the scheduler times its
@@ -120,6 +129,19 @@ class ServingCounters:
 
     def on_cache_spill(self):
         self.cache_spills += 1
+
+    def on_speculate(self, rid: int, *, drafted: int, accepted: int):
+        """One lane finished one speculative window walk: the drafter
+        proposed `drafted` tokens, the verifier confirmed `accepted` of
+        them (0 <= accepted <= drafted; the window's base token is not a
+        draft and is not counted).  Emitted-token accounting stays with
+        `on_token` — speculation changes how many decode tokens a tick
+        produces, not what a token is."""
+        del rid
+        self.spec_ticks += 1
+        self.drafted_tokens += drafted
+        self.accepted_tokens += accepted
+        self.rejected_tokens += drafted - accepted
 
     def on_token(self, rid: int, *, first: bool = False):
         self.decode_tokens += 1
@@ -183,6 +205,12 @@ class ServingCounters:
             "cached_tokens": self.cached_tokens,
             "mean_cache_probe_s": mean(self.cache_probe_s),
             "mean_state_copy_s": mean(self.state_copy_s),
+            "spec_ticks": self.spec_ticks,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "rejected_tokens": self.rejected_tokens,
+            "acceptance_rate": self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0,
         }
 
 

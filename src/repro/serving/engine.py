@@ -95,6 +95,16 @@ class ServingEngine:
     fused_prefill — prefill path: False (per-op scan of decode_step) |
                  True (the fused chunked `prefill_chunk` path).
                  Bit-identical (tests/test_prefill.py).
+    speculative — K >= 1: self-speculative decode.  Each decode tick a
+                 truncated-stack drafter proposes K-1 tokens per lane,
+                 one chunk-shaped verify call scores pending + drafts in
+                 parallel, and the longest verifier-agreed prefix is
+                 accepted (rejected lanes roll back through
+                 masked_state_commit).  Every emitted token is sampled
+                 from verifier logits, so the token streams are
+                 bit-identical to the non-speculative engine
+                 (tests/test_speculative.py) — K only moves throughput.
+    draft_depth — layers the drafter keeps (default half the stack).
     mesh       — a `jax.sharding.Mesh` for data-parallel serving: the
                  slot pool and per-tick batch shard over the DP axes,
                  weights replicate (see docs/serving.md §multi-device);
@@ -121,6 +131,8 @@ class ServingEngine:
                  state_dtype=jnp.bfloat16, quantized: bool = False,
                  fused_decode: bool | str | None = False,
                  fused_prefill: bool = False, seed: int = 0,
+                 speculative: Optional[int] = None,
+                 draft_depth: Optional[int] = None,
                  mesh=None, plan: Optional[ExecutionPlan] = None,
                  counters: Optional[ServingCounters] = None,
                  prefix_cache=None):
@@ -131,7 +143,8 @@ class ServingEngine:
                               fused_prefill=fused_prefill,
                               prefill_chunk=prefill_chunk,
                               max_len=max_len, state_dtype=state_dtype,
-                              seed=seed)
+                              seed=seed, speculative=speculative,
+                              draft_depth=draft_depth)
         self.plan = plan
         self.model = plan.model
         self.quantized = plan.prepared.quantized
@@ -146,13 +159,21 @@ class ServingEngine:
                                   dtype=plan.state_dtype,
                                   shardings=plan.state_shardings(max_batch))
         self.prefix_cache = self._build_cache(prefix_cache)
+        sp = plan.speculative
+        self.speculative = 0 if sp is None else sp.k
         self.scheduler = Scheduler(
             self.pool, plan.decode_fn(max_batch), plan.prefill_fn(max_batch),
             prefill_chunk=plan.prefill_chunk, counters=self.counters,
             on_token=self._on_token, on_finish=self._on_finish,
             prefix_cache=self.prefix_cache,
             cache_variant=None if self.prefix_cache is None
-            else self.plan.cache_variant())
+            else self.plan.cache_variant(),
+            speculative=self.speculative,
+            draft_fn=plan.draft_fn(max_batch)
+            if sp is not None and sp.k > 1 else None,
+            verify_fn=plan.verify_fn(max_batch) if sp is not None else None,
+            rollback_fn=plan.rollback_fn(max_batch)
+            if sp is not None else None)
         self._handles: dict[int, RequestHandle] = {}
         self._rids = itertools.count()
 

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 
 from repro.core.quant.serving import PreparedParams
 from repro.kernels.common import exact_jit
-from repro.models.registry import Model, PathDescriptor
+from repro.models.registry import DraftDescriptor, Model, PathDescriptor
 
 # ---------------------------------------------------------------------------
 # Shared semantics: masked state commits + in-trace Δ-PoT unpack
@@ -96,6 +96,33 @@ def maybe_unpack(params, quantized: bool):
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class SpeculativePath:
+    """The plan's self-speculative decode configuration.
+
+    Each decode tick becomes draft -> verify -> accept: a cheap drafter
+    (the first `draft_depth` layers of the SAME model, running the per-op
+    decode step on a slice of the live pool state) proposes k-1 tokens per
+    lane, ONE chunk-shaped verify call — the PR 4 prefill restructuring,
+    `exact_jit`-pinned — scores the lane's pending token plus all drafts
+    in parallel, and the scheduler accepts the longest prefix the verifier
+    agrees with, rolling rejected lanes back through the same
+    `masked_state_commit` every other program uses.  The drafter's quality
+    only moves the ACCEPTANCE RATE: every emitted token is sampled from
+    verifier logits, so the output stream is bit-identical to the
+    non-speculative engine by construction (tests/test_speculative.py).
+
+    k           — verify window width per tick: the lane's pending token
+                  plus k-1 drafted tokens (k=1 is the degenerate
+                  verify-only tick: no drafter, no draft program)
+    draft_depth — layers the truncated-stack drafter keeps
+    desc        — the registry DraftDescriptor this path was built from
+    """
+    k: int
+    draft_depth: int
+    desc: DraftDescriptor
+
+
 def _normalize_decode(fused_decode) -> str:
     if fused_decode is True:          # PR 2 compatibility
         fused_decode = "block"
@@ -126,7 +153,8 @@ class ExecutionPlan:
     def __init__(self, model: Model, prepared: PreparedParams,
                  decode_desc: PathDescriptor, prefill_desc: PathDescriptor,
                  *, prefill_chunk: int = 16, max_len: int = 0,
-                 state_dtype=jnp.bfloat16, mesh=None):
+                 state_dtype=jnp.bfloat16, mesh=None,
+                 speculative: Optional[SpeculativePath] = None):
         self.model = model
         self.prepared = prepared
         self.decode_desc = decode_desc
@@ -135,8 +163,16 @@ class ExecutionPlan:
         self.max_len = int(max_len)
         self.state_dtype = jnp.dtype(state_dtype)
         self.mesh = mesh
+        self.speculative = speculative
         self.state_axes = model.decode_state_batch_axes()
         self.trace_counts = {"decode": 0, "prefill": 0}
+        if speculative is not None:
+            # speculative programs get their own counters; the keys exist
+            # only when the path is configured, so non-speculative plans
+            # keep the exact historical {"decode", "prefill"} shape
+            self.trace_counts.update({"verify": 0, "rollback": 0})
+            if speculative.k > 1:
+                self.trace_counts["draft"] = 0
         self._programs: dict = {}
         self._batch_shardings: dict = {}
         self._fresh_lane_cache = None
@@ -167,7 +203,9 @@ class ExecutionPlan:
             self.prepared,
             raw=jax.tree_util.tree_map(put, self.prepared.raw),
             decode=jax.tree_util.tree_map(put, self.prepared.decode),
-            prefill=jax.tree_util.tree_map(put, self.prepared.prefill))
+            prefill=jax.tree_util.tree_map(put, self.prepared.prefill),
+            draft=None if self.prepared.draft is None else
+            jax.tree_util.tree_map(put, self.prepared.draft))
 
     def cache_variant(self, *, numerics: str = "exact"):
         """The prefix-cache `CacheVariant` this plan's prefill states file
@@ -245,6 +283,45 @@ class ExecutionPlan:
             self._programs[key] = self._build_prefill(batch)
         return self._programs[key]
 
+    def draft_fn(self, batch: int):
+        """The compiled drafter for a `batch`-slot pool:
+        fn(state, tokens (S,1)) -> drafted (S, K-1) int32 — a greedy
+        argmax chain of the truncated layer stack, its state sliced from
+        the live pool IN-trace (`Model.truncate_state`; never a second
+        pool).  Cached like `decode_fn`; only exists for K > 1."""
+        sp = self.speculative
+        key = ("draft", sp.desc.name, int(batch), self.state_dtype.name)
+        if key not in self._programs:
+            self._programs[key] = self._build_draft()
+        return self._programs[key]
+
+    def verify_fn(self, batch: int):
+        """The compiled speculative verifier for a `batch`-slot pool:
+        fn(state, tokens (S,K), valid (S,K))
+        -> (logits (S,K,V), new_state).  Row j holds the logits the plain
+        decode tick would produce after consuming tokens[:, :j+1]; state
+        commits through every valid position (the chunked-prefill
+        machinery, all-position head).  NOT donating its input state —
+        the caller's pre-verify pool-state reference IS the rollback
+        snapshot.  Cached like `decode_fn`."""
+        key = ("verify", self.prefill_desc.name, int(batch),
+               self.state_dtype.name)
+        if key not in self._programs:
+            self._programs[key] = self._build_verify()
+        return self._programs[key]
+
+    def rollback_fn(self, batch: int):
+        """The compiled speculation rollback for a `batch`-slot pool:
+        fn(committed, snapshot, reject (S,)) -> state where rejected
+        lanes take the pre-verify snapshot and everyone else keeps the
+        verified commit — `masked_state_commit`, the engine's one masking
+        semantics.  Donates `committed` (consumed); the snapshot
+        survives.  Cached like `decode_fn`."""
+        key = ("rollback", "masked", int(batch), self.state_dtype.name)
+        if key not in self._programs:
+            self._programs[key] = self._build_rollback()
+        return self._programs[key]
+
     # -- program builders (the former ServingEngine._build_steps) ----------
 
     def _decode_step(self):
@@ -273,7 +350,11 @@ class ExecutionPlan:
             logits, new_state = step(params, state, tokens)
             return logits, masked_state_commit(new_state, state, mask, axes)
 
-        j_decode = jax.jit(decode, donate_argnums=(1,))
+        # exact_jit like every other token-producing program: defined
+        # rounding semantics make the speculative verifier's bit-parity
+        # with this step STRUCTURAL, not an accident of fusion choices
+        # (bits unchanged vs. the former plain jit — PR 2/3 pins hold)
+        j_decode = exact_jit(decode, donate_argnums=(1,))
         params = self.prepared.decode
         return lambda state, toks, mask: j_decode(
             params, state, self._place_batch(toks), self._place_batch(mask))
@@ -321,13 +402,92 @@ class ExecutionPlan:
 
         # BOTH prefill structures compile with defined rounding semantics
         # (exact_jit: no excess-precision folding) — the property that
-        # makes the fused chunked path bit-identical to the per-op scan;
-        # decode keeps the plain jit (its bits are pinned by PR 2/3 tests).
+        # makes the fused chunked path bit-identical to the per-op scan.
         j_prefill = exact_jit(prefill, donate_argnums=(1,))
         params = self.prepared.prefill
         return lambda state, toks, valid, fresh: j_prefill(
             params, state, self._place_batch(toks),
             self._place_batch(valid), self._place_batch(fresh))
+
+    def _build_draft(self):
+        sp = self.speculative
+        model, quantized = self.model, self.prepared.quantized
+        dmodel = model.truncated(sp.draft_depth)
+        depth, steps = sp.draft_depth, sp.k - 1
+
+        def draft(params, state, tokens):
+            self.trace_counts["draft"] += 1    # increments only on trace
+            p = maybe_unpack(params, quantized)
+            tstate = model.truncate_state(state, depth)
+
+            def body(carry, _):
+                tok, st = carry
+                logits, st = dmodel.decode_step(p, st, tok, jnp.int32(0))
+                nxt = jnp.argmax(logits[:, 0].astype(jnp.float32),
+                                 axis=-1).astype(jnp.int32)[:, None]
+                return (nxt, st), nxt[:, 0]
+
+            _, toks = jax.lax.scan(body, (tokens, tstate), None,
+                                   length=steps)
+            return toks.T                      # (S, K-1)
+
+        # ONE device call proposes the whole window (greedy feedback runs
+        # in the scan, not in K-1 host round-trips).  NO donation: the
+        # pool state this slices from is the tick's rollback snapshot.
+        j_draft = exact_jit(draft)
+        params = self.prepared.draft
+        return lambda state, toks: j_draft(params, state,
+                                           self._place_batch(toks))
+
+    def _build_verify(self):
+        model, axes = self.model, self.state_axes
+        quantized = self.prepared.quantized
+        chunked = self.prefill_desc.name == "chunked"
+
+        def verify(params, state, tokens, valid):
+            self.trace_counts["verify"] += 1   # increments only on trace
+            if chunked:
+                # the PR 4 chunk-shaped restructuring with an all-position
+                # head: every valid window token's logits in one call
+                new_state, logits = model.prefill_chunk_logits(
+                    params, state, tokens, valid)
+                return logits, new_state
+            p = maybe_unpack(params, quantized)
+
+            def body(state, xs):
+                tok, ok = xs                   # (S,), (S,)
+                logits, stepped = model.decode_step(
+                    p, state, tok[:, None], jnp.int32(0))
+                state = masked_state_commit(stepped, state, ok, axes)
+                row = jnp.where(ok[:, None], logits[:, 0],
+                                jnp.zeros_like(logits[:, 0]))
+                return state, row
+
+            state, rows = jax.lax.scan(body, state, (tokens.T, valid.T))
+            return jnp.swapaxes(rows, 0, 1), state      # (S, K, V)
+
+        # exact_jit (same rounding semantics as the decode step — the
+        # losslessness theorem); NO donation: the caller's pre-verify
+        # pool-state reference is the rollback snapshot.
+        j_verify = exact_jit(verify)
+        params = self.prepared.prefill
+        return lambda state, toks, valid: j_verify(
+            params, state, self._place_batch(toks),
+            self._place_batch(valid))
+
+    def _build_rollback(self):
+        axes = self.state_axes
+
+        def rollback(committed, snapshot, reject):
+            self.trace_counts["rollback"] += 1  # increments only on trace
+            return masked_state_commit(snapshot, committed, reject, axes)
+
+        # `committed` is consumed (donated); the snapshot survives — the
+        # scheduler re-advances rejected lanes from the rolled-back state
+        # through the verifier with accepted-prefix validity masks.
+        j_rollback = exact_jit(rollback, donate_argnums=(0,))
+        return lambda committed, snapshot, reject: j_rollback(
+            committed, snapshot, self._place_batch(reject))
 
 
 def build_plan(model: Model | str, params: Any = None, *,
@@ -335,7 +495,8 @@ def build_plan(model: Model | str, params: Any = None, *,
                fused_decode: bool | str | None = False,
                fused_prefill: bool = False, prefill_chunk: int = 16,
                max_len: int = 0, state_dtype=jnp.bfloat16,
-               seed: int = 0,
+               seed: int = 0, speculative: Optional[int] = None,
+               draft_depth: Optional[int] = None,
                decode_prepare_kw: Optional[dict] = None) -> ExecutionPlan:
     """Select paths, prepare params (one pass) and build an ExecutionPlan.
 
@@ -347,6 +508,10 @@ def build_plan(model: Model | str, params: Any = None, *,
                     in-trace, fused paths decode in-kernel
     fused_decode  — False | "block" | "model" (True means "block")
     fused_prefill — False (per-op scan) | True (fused chunked path)
+    speculative   — K >= 1: self-speculative decode with a K-token verify
+                    window per tick (SpeculativePath; K=1 is verify-only)
+    draft_depth   — layers the truncated-stack drafter keeps (default:
+                    the registry DraftDescriptor's, else half the stack)
 
     Raises ValueError with the engine's historical messages when the model
     lacks a requested path — the descriptor tables are the source of
@@ -381,6 +546,29 @@ def build_plan(model: Model | str, params: Any = None, *,
     decode_desc = decode_paths[decode_name]
     prefill_desc = prefill_paths[prefill_name]
 
+    # -- speculative path selection ----------------------------------------
+    spec_path = None
+    if speculative is not None:
+        k = int(speculative)
+        if k < 1:
+            raise ValueError(
+                f"speculative={k}: the verify window needs at least the "
+                "lane's pending token (K >= 1)")
+        drafts = model.draft_paths()
+        if "truncated" not in drafts:
+            raise ValueError(
+                f"{model.cfg.name} has no truncated-stack drafter; "
+                "speculative decode needs a position-free decode_step, "
+                "stacked `blocks` params and a named `layers` state axis")
+        desc = drafts["truncated"]
+        depth = draft_depth if draft_depth is not None else (
+            desc.depth if desc.depth is not None
+            else max(1, model.cfg.n_layers // 2))
+        model.truncated(int(depth))     # validates 1 <= depth <= n_layers
+        spec_path = SpeculativePath(k=k, draft_depth=int(depth), desc=desc)
+    elif draft_depth is not None:
+        raise ValueError("draft_depth without speculative=K does nothing")
+
     # -- param preparation: ONE pass over one weight set -------------------
     if params is None:
         params = model.init_params(jax.random.PRNGKey(seed))
@@ -393,7 +581,12 @@ def build_plan(model: Model | str, params: Any = None, *,
                                          **(decode_prepare_kw or {})),
         prefill=model.prepare_path_params(prefill_desc, params),
         quantized=quantized,
-        decode_path=decode_name, prefill_path=prefill_name)
+        decode_path=decode_name, prefill_path=prefill_name,
+        # the drafter consumes the raw (possibly packed) tree: its per-op
+        # step unpacks in-trace exactly like the per-op decode path
+        draft=None if spec_path is None or spec_path.k == 1 else
+        model.truncate_params(params, spec_path.draft_depth))
     return ExecutionPlan(model, prepared, decode_desc, prefill_desc,
                          prefill_chunk=prefill_chunk, max_len=max_len,
-                         state_dtype=state_dtype, mesh=mesh)
+                         state_dtype=state_dtype, mesh=mesh,
+                         speculative=spec_path)

@@ -84,6 +84,11 @@ class _Slot:
     cached_tokens: int = 0
     digests: Optional[dict] = None
     pending_inserts: list = dataclasses.field(default_factory=list)
+    # speculation bookkeeping: the tokens the drafter proposed for the
+    # CURRENT tick's verify window (tick-local; cleared at emission or on
+    # eviction — a drafted token is never engine output until the verifier
+    # confirms it)
+    drafted: list[int] = dataclasses.field(default_factory=list)
 
 
 def sample_token(logits_row: np.ndarray, temperature: float,
@@ -96,6 +101,32 @@ def sample_token(logits_row: np.ndarray, temperature: float,
         return int(np.argmax(logits_row))
     g = rng.gumbel(size=logits_row.shape)
     return int(np.argmax(logits_row.astype(np.float64) / temperature + g))
+
+
+def greedy_accept(window_row, argmax_rows) -> tuple[list[int], int]:
+    """The pure acceptance rule for ONE lane of a speculative tick.
+
+    window_row  — the K verified tokens: the lane's pending token followed
+                  by K-1 drafted tokens
+    argmax_rows — the verifier's greedy choice after consuming each window
+                  prefix (argmax of verify logits row j)
+
+    Emission walks the window: position j's verifier choice e_j is EMITTED
+    (it came from true logits — losslessness is unconditional), and the
+    walk continues only while e_j confirms the NEXT drafted token.
+    Returns (emitted tokens, window tokens consumed); consumed == j+1 and
+    the accepted draft prefix is exactly the verifier argmax prefix — the
+    property the hypothesis suite drives directly.  `Scheduler._spec_tick`
+    follows this walk shape with sampling/retire/evict handling around
+    it."""
+    emitted, j, k = [], 0, len(window_row)
+    while True:
+        e = int(argmax_rows[j])
+        emitted.append(e)
+        if j + 1 < k and e == int(window_row[j + 1]):
+            j += 1
+            continue
+        return emitted, j + 1
 
 
 def sample_tokens(rows: np.ndarray, metas) -> np.ndarray:
@@ -134,18 +165,56 @@ class Scheduler:
     prefill_fn(pool_state, tokens (S,C) i32, valid (S,C) bool,
                fresh (S,) bool)
         -> (new_pool_state, last_logits (S,1,V))      [fused, chunked]
+
+    With `speculative=K` the decode tick is replaced by the speculative
+    draft -> verify -> accept tick (`_spec_tick`), driven by three more
+    plan programs instead of decode_fn:
+
+    draft_fn(pool_state, tokens (S,1))    -> drafted (S, K-1) i32
+    verify_fn(pool_state, tokens (S,K), valid (S,K))
+        -> (logits (S,K,V), new_pool_state)           [commit-all, no
+                                                       donation: input
+                                                       state = snapshot]
+    rollback_fn(committed, snapshot, reject (S,))     -> pool_state
     """
 
     def __init__(self, pool, decode_fn: Callable, prefill_fn: Callable, *,
                  prefill_chunk: int, counters=None,
                  on_token: Optional[Callable] = None,
                  on_finish: Optional[Callable] = None,
-                 prefix_cache=None, cache_variant=None):
+                 prefix_cache=None, cache_variant=None,
+                 speculative: int = 0,
+                 draft_fn: Optional[Callable] = None,
+                 verify_fn: Optional[Callable] = None,
+                 rollback_fn: Optional[Callable] = None):
         self.pool = pool
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
         self.prefill_chunk = int(prefill_chunk)
         self.counters = counters
+        # self-speculative decode (repro.serving.plan.SpeculativePath):
+        # with speculative=K >= 1 the decode tick becomes
+        # draft -> verify -> accept, driven by the plan's three extra
+        # programs.  draft_fn is only needed for K > 1 (K=1 is the
+        # degenerate verify-only window).
+        self.spec_k = int(speculative)
+        self.draft_fn = draft_fn
+        self.verify_fn = verify_fn
+        self.rollback_fn = rollback_fn
+        if self.spec_k:
+            if verify_fn is None or rollback_fn is None:
+                raise ValueError(
+                    "speculative decode needs verify_fn and rollback_fn")
+            if self.spec_k > 1 and draft_fn is None:
+                raise ValueError(
+                    f"speculative={self.spec_k} needs a draft_fn "
+                    "(K=1 is the only drafterless window)")
+        # tick-local speculation state, exposed for leak auditing: the
+        # rollback snapshot and the lanes whose drafts are in flight.
+        # ALWAYS empty between ticks (cleared in a finally) — the churn
+        # invariant test asserts exactly that.
+        self._spec_snapshot = None
+        self._spec_inflight: dict[int, _Slot] = {}
         self.on_token = on_token or (lambda req, tok: None)
         self.on_finish = on_finish or (lambda req: None)
         # prefix cache (repro.serving.prefix_cache.PrefixCache) + the
@@ -177,7 +246,10 @@ class Scheduler:
         """One scheduling round; returns True while work remains."""
         self._admit()
         self._prefill_tick()
-        self._decode_tick()
+        if self.spec_k:
+            self._spec_tick()
+        else:
+            self._decode_tick()
         if self.counters is not None:
             self.counters.on_tick(active=len(self.slots),
                                   queued=len(self.queue))
@@ -319,6 +391,113 @@ class Scheduler:
         rows = np.asarray(logits[:, -1], np.float32)
         self._emit([(s, m, rows[s]) for s, m in active])
 
+    def _spec_tick(self):
+        """The speculative decode tick: draft -> verify -> accept.
+
+        One drafter call proposes K-1 tokens per lane (greedy chain of the
+        truncated stack over a SLICE of the live pool state), one verify
+        call — the chunked-prefill machinery with an all-position head —
+        scores the lane's pending token plus every draft in parallel and
+        commits state through the whole window, and the host accepts the
+        longest prefix the verifier agrees with, sampling every emitted
+        token from VERIFIER logits (losslessness does not depend on the
+        drafter).  Lanes that consumed fewer than K window tokens roll
+        back to the pre-verify snapshot (`rollback_fn` = the engine's one
+        `masked_state_commit`) and re-advance by their accepted prefix
+        through the same verify program.  Worst case (every draft
+        rejected) each lane still emits one token per tick, exactly like
+        `_decode_tick`."""
+        active = [(s, m) for s, m in self.slots.items()
+                  if m.phase == DECODE]
+        if not active:
+            return
+        S, K = self.pool.max_slots, self.spec_k
+        toks = np.zeros((S, 1), np.int32)
+        for slot, meta in active:
+            toks[slot, 0] = meta.next_token
+        # the pre-verify pool state IS the rollback snapshot: verify_fn
+        # never donates its input, so holding this reference is enough
+        snapshot = self.pool.state
+        window = np.zeros((S, K), np.int32)
+        window[:, 0] = toks[:, 0]
+        if K > 1:
+            window[:, 1:] = np.asarray(self.draft_fn(snapshot, toks))
+        valid = np.zeros((S, K), bool)
+        for slot, meta in active:
+            valid[slot] = True
+            meta.drafted = [int(t) for t in window[slot, 1:]]
+        self._spec_snapshot = snapshot
+        self._spec_inflight = {m.req.rid: m for _, m in active}
+        try:
+            logits, committed = self.verify_fn(snapshot, window, valid)
+            rows = np.asarray(logits, np.float32)          # (S, K, V)
+            consumed = self._spec_emit(active, rows, window)
+            # lanes still live that consumed < K window tokens: restore
+            # the snapshot, then re-advance by the accepted prefix only
+            # (retired/evicted lanes are left as-committed — their lane
+            # is fresh-reset or prefilled on reacquisition)
+            reject = np.zeros((S,), bool)
+            readvance = np.zeros((S, K), bool)
+            for slot, meta in active:
+                if slot not in self.slots or self.slots[slot] is not meta:
+                    continue
+                n = consumed.get(slot, 0)
+                if n < K:
+                    reject[slot] = True
+                    readvance[slot, :n] = True
+            if reject.any():
+                rolled = self.rollback_fn(committed, snapshot, reject)
+                _, self.pool.state = self.verify_fn(rolled, window,
+                                                    readvance)
+            else:
+                self.pool.state = committed
+        finally:
+            self._spec_snapshot = None
+            self._spec_inflight = {}
+
+    def _spec_emit(self, active, rows, window) -> dict[int, int]:
+        """Per-lane acceptance walk of one verify window (the
+        `greedy_accept` rule, with sampling and lifecycle handling).
+        Returns {slot: window tokens consumed} for every lane that
+        emitted.  Sampling is per-row `sample_token` from EACH SLOT'S OWN
+        Generator, one draw per EMITTED token — a seeded stream advances
+        by accepted tokens only, so its output is bit-stable no matter
+        how many drafts were rejected (tests/test_speculative.py pins
+        this).  `on_token` callbacks may evict lanes mid-tick; membership
+        checks keep a dead lane's drafts from emitting."""
+        K = self.spec_k
+        consumed: dict[int, int] = {}
+        for slot, meta in active:
+            if slot not in self.slots or self.slots[slot] is not meta:
+                continue    # evicted by an earlier lane's callback
+            req, j = meta.req, 0
+            while True:
+                tok = sample_token(rows[slot, j], req.temperature,
+                                   meta.rng)
+                consumed[slot] = j + 1
+                meta.generated.append(tok)
+                meta.next_token = tok
+                if self.counters is not None:
+                    self.counters.on_token(
+                        req.rid, first=len(meta.generated) == 1)
+                self.on_token(req, tok)
+                if slot not in self.slots or self.slots[slot] is not meta:
+                    break   # evicted by its own token callback
+                if (len(meta.generated) >= req.max_new_tokens or
+                        (req.eos_token is not None and
+                         tok == req.eos_token)):
+                    self._retire(slot, meta)
+                    break
+                if j + 1 < K and tok == int(window[slot, j + 1]):
+                    j += 1  # verifier confirmed the next draft: keep going
+                    continue
+                break
+            meta.drafted = []
+            if self.counters is not None and K > 1:
+                self.counters.on_speculate(req.rid, drafted=K - 1,
+                                           accepted=consumed[slot] - 1)
+        return consumed
+
     # -- helpers -----------------------------------------------------------
 
     def _emit(self, emitting: list):
@@ -351,6 +530,11 @@ class Scheduler:
                                          meta.req.prompt, n, state,
                                          meta.digests)
         meta.pending_inserts.clear()
+        # mid-speculation eviction: the lane's drafted tokens die with it
+        # and its in-flight marker clears NOW (not at tick end), so a
+        # snapshot can never outlive the request that caused it
+        meta.drafted.clear()
+        self._spec_inflight.pop(meta.req.rid, None)
         del self.slots[slot]
         self.pool.release(slot)
         if self.counters is not None:

@@ -1,0 +1,661 @@
+"""Self-speculative decoding: the provably-lossless acceptance oracle.
+
+The contract under test (docs/serving.md §speculative decode): with
+`ServingEngine(speculative=K)` each decode tick becomes draft -> verify
+-> accept — a truncated-stack drafter proposes K-1 tokens per lane, ONE
+chunk-shaped verify call (the PR 4 prefill machinery with an
+all-position head) scores the pending token plus every draft, and the
+scheduler accepts the longest verifier-agreed prefix, rolling rejected
+lanes back through `masked_state_commit`.  Every emitted token is
+sampled from VERIFIER logits and both sides compile under `exact_jit`,
+so the token stream is BIT-IDENTICAL to the non-speculative engine no
+matter what the drafter proposes — greedy acceptance is lossless by
+construction, and the drafter only moves the acceptance rate.
+
+The suite proves that claim in layers, mirroring tests/test_prefill.py:
+
+  * VERIFIER ORACLE — `prefill_chunk_logits` (all-position head) row j
+    bit-equals the logits a masked scan of `decode_step` produces after
+    consuming tokens[:, :j+1]: fp + packed Δ-PoT x rwkv4/rwkv6, plus the
+    paper's hw-LUT numerics (the engine itself always runs exact
+    numerics — the LUT leg pins the kernel composition).
+  * ROLLBACK ORACLE — post-rollback state bit-equals the pre-verify
+    snapshot, and re-advancing by the accepted prefix bit-equals a lane
+    that never speculated.
+  * ACCEPTANCE RULE — `greedy_accept` examples + a hypothesis property
+    (optional dep, conftest stubs): the accepted draft prefix IS the
+    verifier argmax prefix.
+  * ENGINE STREAMS — bitwise token-stream equivalence vs the plain
+    engine across archs x quantization x K in {1, 2, 4}, per-op and
+    chunked verify, forced all-accept / all-reject / ragged-per-lane
+    acceptance (deterministic stub drafters driven by the baseline
+    stream), seeded temperature sampling (per-slot RNG streams advance
+    by ACCEPTED tokens only), and resume from a prefix-cache hit.
+  * LIFECYCLE — mid-speculation eviction (own lane and another lane's
+    callback) never leaks a snapshot or a draft, and a 300-step
+    submit/cancel churn holds the scheduler + prefix-cache invariants
+    with speculative lanes every step.
+"""
+import functools
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: property tests importorskip at run time
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
+
+from test_prefill import _assert_bitwise, _prefix_valid, _random_state
+
+from repro.core.quant.serving import pack_params, unpack_params
+from repro.kernels.common import exact_jit
+from repro.models.registry import get_model
+from repro.serving import ServingEngine
+from repro.serving.plan import build_plan
+from repro.serving.scheduler import DECODE, Scheduler, greedy_accept
+
+ARCHS = ["rwkv4-169m", "rwkv6-7b"]
+B, K = 4, 4
+# per-lane window prefixes: full window, partial, empty (free lane), base-only
+WINDOW_LENS = (K, 2, 0, 1)
+PROMPT_LENS = (1, 5, 9)
+MAX_NEW = 10
+
+
+# ---------------------------------------------------------------------------
+# The verifier oracle: all-position logits == stepwise decode prefixes
+# ---------------------------------------------------------------------------
+
+
+def oracle_verify(model, params, state, tokens, valid, *,
+                  quantized=False, hw=False):
+    """The verify program's per-op semantics: scan `decode_step` over the
+    window, committing state only where `valid`, collecting EVERY
+    position's logits row (zeros where invalid) — through the SAME
+    `masked_state_commit` / `maybe_unpack` the plan programs use.  Row j
+    is, by construction, exactly what the plain decode tick would emit
+    after consuming tokens[:, :j+1] — the losslessness anchor."""
+    from repro.serving.plan import masked_state_commit, maybe_unpack
+    axes = model.decode_state_batch_axes()
+    p = maybe_unpack(params, quantized)
+    if hw:
+        step = lambda pp, s, t: model.module.decode_step(
+            pp, s, t, jnp.int32(0), model.cfg, hw=True)
+    else:
+        step = lambda pp, s, t: model.decode_step(pp, s, t, jnp.int32(0))
+
+    def body(st, xs):
+        tok, ok = xs
+        logits, stepped = step(p, st, tok[:, None])
+        st = masked_state_commit(stepped, st, ok, axes)
+        row = jnp.where(ok[:, None], logits[:, 0], jnp.zeros_like(logits[:, 0]))
+        return st, row
+
+    st, rows = jax.lax.scan(body, state, (tokens.T, valid.T))
+    return st, jnp.swapaxes(rows, 0, 1)            # (B, K, V)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_verify_all_position_parity(arch, quantized, rng):
+    """THE verifier claim: the chunked all-position head
+    (`prefill_chunk_logits`) bit-equals the masked scan of decode_step at
+    EVERY window position — states and all K logits rows — over full,
+    partial, empty and base-only validity prefixes."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    if quantized:
+        params = pack_params(params)
+    state = _random_state(model, rng)
+    tokens = jnp.asarray(rng.integers(0, model.cfg.vocab, (B, K)), jnp.int32)
+    valid = _prefix_valid(WINDOW_LENS, cols=K)
+    s1, r1 = exact_jit(lambda p, s: oracle_verify(
+        model, p, s, tokens, valid, quantized=quantized))(params, state)
+    prep = model.prepare_prefill_params(params) if quantized else params
+    s2, r2 = exact_jit(lambda p, s: model.prefill_chunk_logits(
+        p, s, tokens, valid))(prep, state)
+    _assert_bitwise(s1, s2)
+    _assert_bitwise(r1, r2)
+
+
+def test_verify_hw_numerics_parity(rng):
+    """The paper's LUT/PWL numerics compose with the all-position verify
+    head: same bits as scanning decode_step(hw=True).  (The serving
+    engine always runs exact numerics — this pins the kernel
+    composition for callers driving the hw variant directly.)"""
+    from repro.models import rwkv4
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.cast_params(model.init_params(jax.random.PRNGKey(0)))
+    state = _random_state(model, rng)
+    tokens = jnp.asarray(rng.integers(0, model.cfg.vocab, (B, K)), jnp.int32)
+    valid = _prefix_valid(WINDOW_LENS, cols=K)
+    s1, r1 = exact_jit(lambda p, s: oracle_verify(
+        model, p, s, tokens, valid, hw=True))(params, state)
+    s2, r2 = exact_jit(lambda p, s: rwkv4.prefill_chunk(
+        p, s, tokens, valid, jnp.int32(0), model.cfg, hw=True,
+        all_logits=True))(params, state)
+    _assert_bitwise(s1, s2)
+    _assert_bitwise(r1, r2)
+
+
+# ---------------------------------------------------------------------------
+# Truncated-stack drafter: params / state slicing semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_truncate_state_slices_layer_axis(arch, rng):
+    """`truncate_state` takes the first `depth` layer slices of every
+    decode-state leaf (layer l's transition depends only on layers below,
+    so the slice IS the truncated model's state)."""
+    model = get_model(arch, smoke=True)
+    state = _random_state(model, rng)
+    axes = model.decode_state_layer_axes()
+    tstate = model.truncate_state(state, 1)
+    full = jax.tree_util.tree_leaves(state)
+    cut = jax.tree_util.tree_leaves(tstate)
+    assert len(full) == len(cut) == len(axes)
+    for f, c, ax in zip(full, cut, axes):
+        np.testing.assert_array_equal(
+            np.asarray(np.take(np.asarray(f, np.float32), [0], axis=ax)),
+            np.asarray(c, np.float32))
+    # the truncated model accepts the sliced state (shape contract)
+    assert jax.tree_util.tree_structure(tstate) == \
+        jax.tree_util.tree_structure(model.truncated(1).init_decode_state(
+            B, 0, jnp.bfloat16))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_truncate_params_aliases_and_packed_commutes(arch):
+    """Drafter weights share every non-block leaf with the full model (no
+    copies), and truncation COMMUTES with Δ-PoT unpack — the scale planes
+    carry a broadcast layer axis, so slicing packed trees is exact."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    tp = model.truncate_params(params, 1)
+    assert all(tp[k] is params[k] for k in params if k != "blocks")
+    packed = pack_params(params)
+    _assert_bitwise(unpack_params(model.truncate_params(packed, 1)),
+                    model.truncate_params(unpack_params(packed), 1))
+
+
+def test_truncated_depth_validation():
+    model = get_model("rwkv4-169m", smoke=True)
+    for bad in (0, model.cfg.n_layers + 1, -1):
+        with pytest.raises(ValueError, match="depth"):
+            model.truncated(bad)
+
+
+def test_draft_paths_capability():
+    for arch in ARCHS:
+        assert "truncated" in get_model(arch, smoke=True).draft_paths()
+
+
+# ---------------------------------------------------------------------------
+# Plan programs: draft chain oracle + rollback/readvance bit-parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_draft_fn_matches_truncated_greedy_chain(arch, rng):
+    """The plan's one-call drafter (a lax.scan with greedy feedback over
+    the truncated stack, state sliced in-trace) proposes exactly the
+    tokens a stepwise truncated-model argmax chain would."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    plan = build_plan(model, params, speculative=K, draft_depth=1)
+    state = _random_state(model, rng)
+    toks = jnp.asarray(rng.integers(0, model.cfg.vocab, (B, 1)), jnp.int32)
+    got = np.asarray(plan.draft_fn(B)(state, toks))
+    assert got.shape == (B, K - 1) and got.dtype == np.int32
+    # stepwise oracle: same per-op step under the same exact_jit semantics
+    dmodel = model.truncated(1)
+    dparams = model.truncate_params(params, 1)
+    dstate = model.truncate_state(state, 1)
+    step = exact_jit(dmodel.decode_step)
+    tok, want = toks, []
+    for _ in range(K - 1):
+        logits, dstate = step(dparams, dstate, tok, jnp.int32(0))
+        nxt = np.argmax(np.asarray(logits[:, 0], np.float32), axis=-1)
+        tok = jnp.asarray(nxt[:, None].astype(np.int32))
+        want.append(nxt)
+    np.testing.assert_array_equal(got, np.stack(want, axis=1))
+    # deterministic: same inputs, same drafts
+    np.testing.assert_array_equal(got, np.asarray(plan.draft_fn(B)(state, toks)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_rollback_restores_snapshot_then_readvance_is_unspeculated(arch, rng):
+    """The rollback theorem, at the plan level: after a full-window verify
+    commit, `rollback_fn` returns the pre-verify snapshot BIT-EXACTLY for
+    rejected lanes, and re-advancing by each lane's accepted prefix
+    through the verify program bit-equals a lane that NEVER speculated
+    (the masked scan oracle over just that prefix)."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    plan = build_plan(model, params, speculative=K, fused_prefill=True)
+    vfn, rfn = plan.verify_fn(B), plan.rollback_fn(B)
+    snapshot = _random_state(model, rng)
+    window = jnp.asarray(rng.integers(0, model.cfg.vocab, (B, K)), jnp.int32)
+    _, committed = vfn(snapshot, window, np.ones((B, K), bool))
+    rolled = rfn(committed, snapshot, np.ones((B,), bool))   # donates committed
+    _assert_bitwise(rolled, snapshot)
+    # ragged accepted prefixes (incl. 0 = lane untouched by readvance)
+    prefix = _prefix_valid(WINDOW_LENS, cols=K)
+    _, readvanced = vfn(rolled, window, prefix)
+    want, _ = exact_jit(lambda p, s: oracle_verify(
+        model, p, s, window, prefix))(params, snapshot)
+    _assert_bitwise(readvanced, want)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance rule
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_accept_examples():
+    # all-accept: every verifier choice confirms the next draft
+    assert greedy_accept([5, 7, 9], [7, 9, 2]) == ([7, 9, 2], 3)
+    # all-reject: the first choice already disagrees
+    assert greedy_accept([5, 7, 9], [1, 9, 2]) == ([1], 1)
+    # partial: one draft confirmed, then divergence
+    assert greedy_accept([5, 7, 9], [7, 4, 2]) == ([7, 4], 2)
+    # K=1: the degenerate verify-only window always consumes its base
+    assert greedy_accept([5], [3]) == ([3], 1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_greedy_accept_prefix_property(data):
+    """PROPERTY (satellite 2): the accepted draft prefix IS the verifier
+    argmax prefix — emitted == argmax_rows[:consumed], the confirmed
+    drafts window[1:consumed] == argmax_rows[:consumed-1], and the walk
+    stops exactly at the first disagreement (or the window end)."""
+    pytest.importorskip("hypothesis")
+    k = data.draw(st.integers(min_value=1, max_value=6))
+    window = data.draw(st.lists(st.integers(0, 9), min_size=k, max_size=k))
+    argmax = data.draw(st.lists(st.integers(0, 9), min_size=k, max_size=k))
+    emitted, consumed = greedy_accept(window, argmax)
+    assert 1 <= consumed <= k
+    assert emitted == argmax[:consumed]
+    assert window[1:consumed] == argmax[:consumed - 1]
+    if consumed < k:
+        assert argmax[consumed - 1] != window[consumed]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level stream equivalence
+# ---------------------------------------------------------------------------
+
+
+def _prompts(model, seed=7, lens=PROMPT_LENS):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, model.cfg.vocab, size=n).tolist() for n in lens]
+
+
+def _serve(model, params, prompts, *, max_new=MAX_NEW, temperature=0.0,
+           speculative=None, draft_depth=None, fused_prefill=True,
+           quantized=False, max_batch=3, prefix_cache=None):
+    eng = ServingEngine(model, params=params, max_batch=max_batch,
+                        prefill_chunk=4, fused_prefill=fused_prefill,
+                        quantized=quantized, speculative=speculative,
+                        draft_depth=draft_depth, prefix_cache=prefix_cache)
+    handles = [eng.submit(p, max_new_tokens=max_new,
+                          temperature=temperature, seed=11 + i)
+               for i, p in enumerate(prompts)]
+    snap = eng.run()
+    return eng, [h.tokens for h in handles], snap
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline(arch, quantized):
+    """Plain-engine greedy streams per (arch, quant) — computed once for
+    the whole equivalence matrix."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng, toks, _ = _serve(model, params, _prompts(model), quantized=quantized)
+    assert eng.trace_counts == {"decode": 1, "prefill": 1}   # shape guard
+    return toks
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_stream_bit_equivalence(arch, quantized, k):
+    """THE tentpole claim, end to end: the speculative engine streams the
+    EXACT token sequences of the plain engine — rwkv4 + rwkv6, fp +
+    packed Δ-PoT, K in {1 (verify-only), 2, 4} — with the real
+    truncated-stack drafter, and the speculative tick never executes the
+    plain decode program."""
+    model = get_model(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng, toks, snap = _serve(model, params, _prompts(model),
+                             speculative=k, quantized=quantized)
+    assert toks == _baseline(arch, quantized)
+    want = {"decode": 0, "prefill": 1, "verify": 1,
+            "rollback": 1 if k > 1 else 0}
+    if k > 1:
+        want["draft"] = 1
+        assert snap["drafted_tokens"] > 0
+    assert eng.trace_counts == want
+    assert snap["drafted_tokens"] == \
+        snap["accepted_tokens"] + snap["rejected_tokens"]
+
+
+def test_spec_per_op_verify_equivalence():
+    """The verify program's per-op fallback (fused_prefill=False: a masked
+    scan of decode_step) streams the same bits as the chunked verifier."""
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    _, toks, _ = _serve(model, params, _prompts(model), speculative=2,
+                        fused_prefill=False)
+    assert toks == _baseline("rwkv4-169m", False)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic stub drafters (driven by the baseline stream)
+# ---------------------------------------------------------------------------
+
+
+def _install_stub_draft(eng, streams, kind):
+    """Replace the engine's drafter with a deterministic stub that knows
+    each lane's true continuation (the baseline stream, keyed by rid ==
+    submission order):
+
+      "accept" — drafts exactly the continuation -> the verifier confirms
+                 every draft (in-vocab by construction; no out-of-range
+                 tokens, whose embeds gather NaN under jnp's OOB fill)
+      "reject" — drafts (next_true_token + 1) % vocab -> the verifier's
+                 first choice always disagrees
+      "ragged" — even slots accept, odd slots reject, in the SAME tick
+    """
+    S, km1 = eng.pool.max_slots, eng.speculative - 1
+    V = eng.model.cfg.vocab
+
+    def draft(state, toks):
+        out = np.zeros((S, km1), np.int32)
+        for slot, meta in eng.scheduler.slots.items():
+            if meta.phase != DECODE:
+                continue
+            s, g = streams[meta.req.rid], len(meta.generated)
+            accept = kind == "accept" or (kind == "ragged" and slot % 2 == 0)
+            if accept:
+                out[slot] = [s[min(g + i, len(s) - 1)] for i in range(km1)]
+            else:
+                out[slot] = (s[min(g, len(s) - 1)] + 1) % V
+        return out
+
+    eng.scheduler.draft_fn = draft
+    return eng
+
+
+def _serve_stubbed(model, params, prompts, kind, streams, *, k=3,
+                   max_new, temperature=0.0):
+    eng = ServingEngine(model, params=params, max_batch=3, prefill_chunk=4,
+                        fused_prefill=True, speculative=k)
+    _install_stub_draft(eng, streams, kind)
+    handles = [eng.submit(p, max_new_tokens=max_new,
+                          temperature=temperature, seed=11 + i)
+               for i, p in enumerate(prompts)]
+    snap = eng.run()
+    return eng, [h.tokens for h in handles], snap
+
+
+@pytest.fixture(scope="module")
+def rwkv4():
+    model = get_model("rwkv4-169m", smoke=True)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def test_spec_all_accept_stub(rwkv4):
+    """Forced all-accept: a drafter that proposes the true continuation is
+    confirmed in full — acceptance_rate == 1.0, zero rollbacks (the
+    rollback program is never even traced), and the stream is still the
+    baseline's bits.  max_new = 1 + 2K so every window fills exactly."""
+    model, params = rwkv4
+    k, max_new = 3, 1 + 2 * 3
+    prompts = _prompts(model, lens=(5, 5, 5))
+    _, base, _ = _serve(model, params, prompts, max_new=max_new)
+    eng, toks, snap = _serve_stubbed(model, params, prompts, "accept", base,
+                                     k=k, max_new=max_new)
+    assert toks == base
+    assert snap["acceptance_rate"] == 1.0
+    assert snap["rejected_tokens"] == 0
+    assert eng.trace_counts["rollback"] == 0
+
+
+def test_spec_all_reject_stub(rwkv4):
+    """Forced all-reject: the engine degrades to one token per lane per
+    tick — acceptance_rate == 0.0, every tick rolls back — and the stream
+    is STILL the baseline's bits (losslessness does not depend on the
+    drafter)."""
+    model, params = rwkv4
+    prompts = _prompts(model, lens=(5, 5, 5))
+    _, base, _ = _serve(model, params, prompts)
+    eng, toks, snap = _serve_stubbed(model, params, prompts, "reject", base,
+                                     max_new=MAX_NEW)
+    assert toks == base
+    assert snap["acceptance_rate"] == 0.0
+    assert snap["accepted_tokens"] == 0 and snap["drafted_tokens"] > 0
+    assert eng.trace_counts["rollback"] == 1
+
+
+def test_spec_ragged_acceptance_one_batch(rwkv4):
+    """Ragged per-lane acceptance INSIDE one tick: even slots accept whole
+    windows while odd slots reject everything, so a single verify commit
+    serves both and the rollback mask is genuinely mixed.  Streams stay
+    bit-identical; the aggregate acceptance rate is strictly between the
+    extremes."""
+    model, params = rwkv4
+    k, max_new = 3, 1 + 2 * 3
+    prompts = _prompts(model, lens=(5, 5, 5))
+    _, base, _ = _serve(model, params, prompts, max_new=max_new)
+    _, toks, snap = _serve_stubbed(model, params, prompts, "ragged", base,
+                                   k=k, max_new=max_new)
+    assert toks == base
+    assert 0.0 < snap["acceptance_rate"] < 1.0
+
+
+def test_spec_rng_streams_advance_by_accepted_only(rwkv4):
+    """SATELLITE FIX regression: with temperature sampling, each slot's
+    RNG stream draws exactly one Gumbel vector per EMITTED token — never
+    per drafted token — so a reject-heavy speculative run is bit-equal to
+    the plain engine's sampled stream, and a ragged-acceptance run too."""
+    model, params = rwkv4
+    prompts = _prompts(model, lens=(5, 5, 5))
+    _, base, _ = _serve(model, params, prompts, temperature=0.9)
+    for kind in ("reject", "ragged"):
+        _, toks, _ = _serve_stubbed(model, params, prompts, kind, base,
+                                    max_new=MAX_NEW, temperature=0.9)
+        assert toks == base, kind
+    # and with the real drafter
+    _, toks, _ = _serve(model, params, prompts, temperature=0.9,
+                        speculative=3)
+    assert toks == base
+
+
+def test_spec_real_drafter_aligned_weights_all_accept(rwkv4):
+    """The real truncated drafter hits acceptance_rate == 1.0 when the
+    deep layers are no-ops: zeroing att.wo / ffn.wv for layers >= depth
+    makes every deep block's residual contribution zero, so the depth-1
+    drafter's argmax IS the full model's argmax.  (This is also the
+    bench's calibrated-acceptance configuration.)"""
+    model, params = rwkv4
+    k, max_new = 4, 1 + 2 * 4
+
+    def zero_tail(leaf):
+        z = np.asarray(leaf, np.float32).copy()
+        z[1:] = 0.0
+        return jnp.asarray(z, leaf.dtype)
+
+    blocks = dict(params["blocks"])
+    blocks["att"] = {**blocks["att"], "wo": zero_tail(blocks["att"]["wo"])}
+    blocks["ffn"] = {**blocks["ffn"], "wv": zero_tail(blocks["ffn"]["wv"])}
+    aligned = {**params, "blocks": blocks}
+    prompts = _prompts(model, lens=(5, 5, 5))
+    _, base, _ = _serve(model, aligned, prompts, max_new=max_new)
+    _, toks, snap = _serve(model, aligned, prompts, max_new=max_new,
+                           speculative=k, draft_depth=1)
+    assert toks == base
+    assert snap["acceptance_rate"] == 1.0
+
+
+def test_spec_resume_from_prefix_cache_hit(rwkv4):
+    """Speculative decode composes with the recurrent-state prefix cache:
+    a second request resuming a cached ancestor prefix streams the same
+    bits speculative or not, cache on or off — and the hit actually
+    happened."""
+    model, params = rwkv4
+    r = np.random.default_rng(23)
+    prefix = r.integers(0, model.cfg.vocab, size=8).tolist()   # 2 chunks
+    prompts = [prefix + [3], prefix + [5, 9]]
+
+    def run(spec, cache):
+        eng = ServingEngine(model, params=params, max_batch=2,
+                            prefill_chunk=4, fused_prefill=True,
+                            speculative=spec, prefix_cache=cache)
+        out = []
+        for p in prompts:                      # sequential: 2nd resumes 1st
+            h = eng.submit(p, max_new_tokens=6)
+            eng.run()
+            out.append(h.tokens)
+        return out, eng.counters.snapshot()
+
+    base, _ = run(None, False)
+    spec_cold, _ = run(2, False)
+    spec_warm, snap = run(2, True)
+    assert base == spec_cold == spec_warm
+    assert snap["cache_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Mid-speculation eviction + churn invariants
+# ---------------------------------------------------------------------------
+
+
+def _assert_spec_quiescent(eng):
+    sched = eng.scheduler
+    assert sched._spec_snapshot is None
+    assert sched._spec_inflight == {}
+    assert all(m.drafted == [] for m in sched.slots.values())
+
+
+@pytest.mark.parametrize("victim", ["other", "self"])
+def test_evict_mid_speculation_tick(rwkv4, victim):
+    """SATELLITE FIX regression: an `on_token` callback evicting a lane in
+    the MIDDLE of a speculative tick — its own lane or another lane whose
+    window walk hasn't run yet — discards that lane's drafts, never emits
+    them, and leaks neither a snapshot nor an in-flight marker; the
+    surviving lanes' streams keep the baseline's bits."""
+    model, params = rwkv4
+    prompts = _prompts(model, lens=(5, 5, 5))
+    _, base, _ = _serve(model, params, prompts)
+    eng = ServingEngine(model, params=params, max_batch=3, prefill_chunk=4,
+                        fused_prefill=True, speculative=3)
+    handles = [eng.submit(p, max_new_tokens=MAX_NEW, seed=11 + i)
+               for i, p in enumerate(prompts)]
+    orig = eng.scheduler.on_token
+    fired = []
+
+    def on_token(req, tok):
+        orig(req, tok)
+        target = handles[0 if victim == "self" else 1]
+        if (req.rid == 0 and len(handles[0].tokens) == 3 and not fired):
+            fired.append(True)
+            assert eng.cancel(target)
+
+    eng.scheduler.on_token = on_token
+    eng.run()
+    assert fired
+    evicted = handles[0 if victim == "self" else 1]
+    assert evicted.done and len(evicted.tokens) < MAX_NEW
+    # the evicted lane emitted a (possibly shorter) PREFIX of its true
+    # stream — a drafted token never leaked out as engine output
+    assert evicted.tokens == base[evicted.rid][:len(evicted.tokens)]
+    for h in handles:
+        if h is not evicted:
+            assert h.tokens == base[h.rid]
+    _assert_spec_quiescent(eng)
+    assert eng.pool.n_free == 3 and eng.scheduler.slots == {}
+
+
+def test_spec_churn_300_steps_invariants(rwkv4):
+    """The 300-step submit/cancel churn, extended to speculative lanes
+    (satellite 4): every single step the scheduler is speculation-
+    quiescent (no snapshot, no in-flight drafts), slot accounting closes,
+    and the prefix cache's structural invariants hold.  Random prompt
+    reuse drives real cache hits through the speculative path."""
+    model, params = rwkv4
+    eng = ServingEngine(model, params=params, max_batch=3, prefill_chunk=4,
+                        fused_prefill=True, speculative=2, prefix_cache=True)
+    r = np.random.default_rng(0)
+    pool = [r.integers(0, model.cfg.vocab, size=n).tolist()
+            for n in (3, 6, 6, 9, 13)]
+    live = []
+    for step in range(300):
+        if r.random() < 0.5 and len(live) < 6:
+            p = pool[r.integers(len(pool))]
+            live.append(eng.submit(p, max_new_tokens=int(r.integers(2, 9))))
+        if live and r.random() < 0.15:
+            h = live.pop(r.integers(len(live)))
+            if not h.done:
+                eng.cancel(h)
+        eng.step()
+        _assert_spec_quiescent(eng)
+        assert len(eng.scheduler.slots) + eng.pool.n_free == 3
+        eng.prefix_cache.check_state()
+    eng.run()
+    _assert_spec_quiescent(eng)
+    assert eng.pool.n_free == 3
+    snap = eng.counters.snapshot()
+    assert snap["cache_hits"] > 0 and snap["drafted_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Validation + telemetry guards
+# ---------------------------------------------------------------------------
+
+
+def test_build_plan_speculative_validation(rwkv4):
+    model, params = rwkv4
+    with pytest.raises(ValueError, match="K >= 1"):
+        build_plan(model, params, speculative=0)
+    with pytest.raises(ValueError, match="depth"):
+        build_plan(model, params, speculative=2, draft_depth=99)
+    with pytest.raises(ValueError, match="draft_depth"):
+        build_plan(model, params, draft_depth=1)
+
+
+def test_build_plan_rejects_model_without_drafter(rwkv4, monkeypatch):
+    from repro.models import registry
+    model, params = rwkv4
+    monkeypatch.setattr(registry.Model, "draft_paths", lambda self: {})
+    with pytest.raises(ValueError, match="truncated-stack drafter"):
+        build_plan(model, params, speculative=2)
+
+
+def test_scheduler_requires_speculative_programs():
+    dummy = lambda *a: None
+    with pytest.raises(ValueError, match="verify_fn"):
+        Scheduler(None, dummy, dummy, prefill_chunk=4, speculative=2)
+    with pytest.raises(ValueError, match="draft_fn"):
+        Scheduler(None, dummy, dummy, prefill_chunk=4, speculative=2,
+                  verify_fn=dummy, rollback_fn=dummy)
+    # K=1 is the drafterless verify-only window
+    Scheduler(None, dummy, dummy, prefill_chunk=4, speculative=1,
+              verify_fn=dummy, rollback_fn=dummy)
+
+
+def test_nonspec_plan_trace_shape_unchanged(rwkv4):
+    """Guard: plans without speculation keep the exact historical
+    {"decode", "prefill"} trace-counter shape (and the default drafter
+    depth is half the stack when speculation IS on)."""
+    model, params = rwkv4
+    assert set(build_plan(model, params).trace_counts) == \
+        {"decode", "prefill"}
+    plan = build_plan(model, params, speculative=2)
+    assert plan.speculative.draft_depth == max(1, model.cfg.n_layers // 2)
