@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
   bench_prefill         — fused chunked prefill vs the per-op scan
   bench_prefix_cache    — prefix-cache TTFT vs cache-off serving
   bench_speculative     — self-speculative decode vs plain decode ticks
+  bench_serving_slo     — bursty 2x-overload load vs the SLO layer
 """
 from __future__ import annotations
 
@@ -22,13 +23,14 @@ def main() -> None:
     from benchmarks import (bench_energy_proxy, bench_kernels,
                             bench_prefill, bench_prefix_cache,
                             bench_quant_ablation, bench_resources,
-                            bench_serving, bench_speculative,
-                            bench_throughput)
+                            bench_serving, bench_serving_slo,
+                            bench_speculative, bench_throughput)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_resources, bench_energy_proxy, bench_throughput,
                 bench_kernels, bench_quant_ablation, bench_serving,
-                bench_prefill, bench_prefix_cache, bench_speculative):
+                bench_prefill, bench_prefix_cache, bench_speculative,
+                bench_serving_slo):
         try:
             mod.run()
         except Exception:

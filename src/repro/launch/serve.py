@@ -9,7 +9,9 @@ TTFT, latency) from `runtime.monitor.ServingCounters`.
         --tokens 64 --batch 4 [--quantized] [--prefill-chunk 16] \
         [--fused[=block|model]] [--fused-prefill] [--devices N | --mesh] \
         [--prefix-cache [--prefix-cache-slots N]] \
-        [--speculative K [--draft-depth D]]
+        [--speculative K [--draft-depth D]] \
+        [--max-queue N [--overload backpressure|shed]] \
+        [--prefill-budget T] [--deadline S]
 
 Every flag combination resolves to ONE `repro.serving.plan.ExecutionPlan`
 (path selection + one-pass param prep + program cache + mesh placement);
@@ -149,16 +151,22 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           fused_prefill: bool = False, devices: int | None = None,
           prefix_cache: bool = False, cache_slots: int = 64,
           cache_host_slots: int = 256, speculative: int | None = None,
-          draft_depth: int | None = None):
+          draft_depth: int | None = None, max_queue: int = 0,
+          overload: str = "backpressure", prefill_budget: int = 0,
+          deadline_s: float | None = None):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles.
     `devices` (0 = all visible) serves data-parallel over a ("data",)
     serving mesh — pool and batch sharded, weights replicated.
     `prefix_cache` enables the recurrent-state prefix cache; the demo
     workload then gives every request a shared system-prompt prefix so the
-    hit path is actually exercised (docs/serving.md §prefix cache)."""
+    hit path is actually exercised (docs/serving.md §prefix cache).
+    `max_queue`/`overload`/`prefill_budget`/`deadline_s` configure the
+    SLO layer (docs/serving.md §"SLOs and overload"); the defaults keep
+    the historical unbounded/unlimited behavior."""
     from repro.launch.mesh import make_serving_mesh
-    from repro.serving import PrefixCacheConfig, ServingEngine
+    from repro.serving import (AdmissionPolicy, Overloaded,
+                               PrefixCacheConfig, ServingEngine, ServingSLO)
 
     mesh = None
     if devices is not None:
@@ -168,13 +176,17 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     cache_cfg = PrefixCacheConfig(device_slots=cache_slots,
                                   host_slots=cache_host_slots) \
         if prefix_cache else None
+    slo = ServingSLO(prefill_budget=prefill_budget,
+                     default_deadline_s=deadline_s,
+                     admission=AdmissionPolicy(max_queue=max_queue,
+                                               overload=overload))
     engine = ServingEngine(arch, smoke=smoke, max_batch=batch,
                            prefill_chunk=prefill_chunk,
                            quantized=quantized,
                            fused_decode=fused or False,
                            fused_prefill=fused_prefill, seed=seed,
                            speculative=speculative, draft_depth=draft_depth,
-                           mesh=mesh, prefix_cache=cache_cfg)
+                           mesh=mesh, prefix_cache=cache_cfg, slo=slo)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
     # with the cache on, share one "system prompt" across all requests so
@@ -188,13 +200,25 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         engine.submit(shared + [int(rng.integers(0, cfg.vocab))],
                       max_new_tokens=1)
         engine.run()
-    handles = [
-        engine.submit(shared +
-                      rng.integers(0, cfg.vocab, size=prompt_len).tolist(),
-                      max_new_tokens=n_tokens, temperature=temperature,
-                      seed=int(rng.integers(1 << 31)))
-        for _ in range(batch)]
+    # admission is tick-driven, so every submit lands on the queue first;
+    # with --max-queue below the demo's request count the engine answers
+    # with typed backpressure — report it instead of letting it unwind
+    handles, rejected = [], 0
+    for _ in range(batch):
+        prompt = shared + \
+            rng.integers(0, cfg.vocab, size=prompt_len).tolist()
+        try:
+            handles.append(
+                engine.submit(prompt, max_new_tokens=n_tokens,
+                              temperature=temperature,
+                              seed=int(rng.integers(1 << 31))))
+        except Overloaded as exc:
+            rejected += 1
+            print(f"backpressured: {exc}")
     snap = engine.run()
+    if rejected:
+        print(f"{rejected}/{batch} submissions backpressured "
+              f"(--max-queue {max_queue}, --overload {overload})")
     print(f"{arch}: {snap['finished']} requests x {n_tokens} tokens "
           f"({'Δ-PoT W8' if quantized else 'fp'} weights) — "
           f"{snap['decode_tokens_per_s']:,.0f} decode tok/s, "
@@ -254,6 +278,25 @@ def main():
     ap.add_argument("--draft-depth", type=int, default=None,
                     help="layers the speculative drafter keeps (default "
                          "half the stack)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue (SLO layer): queued-"
+                         "request cap, 0 = unbounded; a full queue "
+                         "backpressures (typed Overloaded with retry "
+                         "hints) or sheds per --overload")
+    ap.add_argument("--overload", default="backpressure",
+                    choices=["backpressure", "shed"],
+                    help="full-queue behavior: refuse the arrival "
+                         "(backpressure) or drop the lowest-priority "
+                         "queued request (shed); serving/slo.py")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prefill chunk-tokens per tick while lanes are "
+                         "decoding (0 = unlimited): caps the inter-token-"
+                         "latency jitter a prefill burst can inject")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="default per-request deadline in seconds; "
+                         "deadline-exceeded requests are evicted with "
+                         "outcome 'deadline' (state slot freed, nothing "
+                         "leaked)")
     ap.add_argument("--devices", type=int, default=None,
                     help="serve data-parallel over N local devices (the "
                          "slot pool and per-tick batch shard over a "
@@ -282,7 +325,10 @@ def main():
               devices=devices, prefix_cache=args.prefix_cache,
               cache_slots=args.prefix_cache_slots,
               cache_host_slots=args.prefix_cache_host_slots,
-              speculative=args.speculative, draft_depth=args.draft_depth)
+              speculative=args.speculative, draft_depth=args.draft_depth,
+              max_queue=args.max_queue, overload=args.overload,
+              prefill_budget=args.prefill_budget,
+              deadline_s=args.deadline)
 
 
 if __name__ == "__main__":

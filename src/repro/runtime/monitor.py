@@ -13,7 +13,11 @@ that policy, testable in-process via FailureInjector.
                       (with its prefill decomposition: per-request prefill
                       ticks, admit -> first-token wall time, and the
                       prefix-cache probe/state-copy slices split out so a
-                      cache hit's TTFT is attributed honestly), prefix-
+                      cache hit's TTFT is attributed honestly), per-token
+                      inter-token-latency samples with p50/p90/p99 TTFT
+                      and ITL in `snapshot()`, SLO-layer outcome counters
+                      (shed / deadline-evicted / backpressured / cache
+                      errors / budget-deferred prefill tokens), prefix-
                       cache hit/miss/eviction/spill counts with cached-vs-
                       prefilled token accounting, per-request latency,
                       slot occupancy
@@ -22,15 +26,31 @@ that policy, testable in-process via FailureInjector.
                       `threshold` x the fleet median (mitigation hook: the
                       caller re-balances or excludes the host at the next
                       restart boundary)
-  FailureInjector   — deterministic fault schedule for tests/drills
+  FailureInjector   — deterministic fault schedule for training drills
+  ServingFaultInjector — tick-indexed fault schedule for the serving
+                      scheduler (cache-probe failures, forced evictions —
+                      including from inside a token callback, i.e. mid-
+                      speculation — and forced deadline expiry)
   TrainingSupervisor— retry-with-restore driver around a step function
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
+
+
+def percentile(xs: list, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 1]) — 0.0 on an empty sample.
+
+    Nearest-rank (not interpolated) so a p99 over latency samples is an
+    actually-observed latency, never an average of two."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
 
 
 class ServingCounters:
@@ -83,6 +103,21 @@ class ServingCounters:
         self.accepted_tokens = 0
         self.rejected_tokens = 0
         self.spec_ticks = 0             # per-lane window walks, not ticks
+        # SLO-layer telemetry (repro.serving.slo): per-token inter-token
+        # latency samples (gap between a lane's consecutive emitted
+        # tokens — THE user-visible jitter the prefill budget bounds),
+        # explicit-overload outcome counters, and robustness counters.
+        self.itl_s: list[float] = []
+        self._last_token_t: dict[int, float] = {}
+        self.shed = 0
+        self.deadline_evicted = 0
+        self.backpressured = 0
+        self.cache_errors = 0
+        self.budget_deferred_tokens = 0
+        # occupancy accumulators: mean active lanes / queue depth per tick
+        # give the bench its latency-vs-occupancy axis
+        self._active_sum = 0
+        self._queued_sum = 0
 
     def now(self) -> float:
         """The counters' clock (injectable) — the scheduler times its
@@ -145,33 +180,72 @@ class ServingCounters:
 
     def on_token(self, rid: int, *, first: bool = False):
         self.decode_tokens += 1
+        now = self._clock()
         if first:
             if rid in self._enqueue_t:
-                self.ttft_s.append(self._clock() - self._enqueue_t[rid])
+                self.ttft_s.append(now - self._enqueue_t[rid])
             t_admit = self._admit_t.pop(rid, None)
             if t_admit is not None:
-                self.prefill_s.append(self._clock() - t_admit -
+                self.prefill_s.append(now - t_admit -
                                       self._admit_overhead.pop(rid, 0.0))
             self.prefill_ticks.append(self._prefill_ticks.pop(rid, 0))
+        else:
+            t_prev = self._last_token_t.get(rid)
+            if t_prev is not None:
+                self.itl_s.append(now - t_prev)
+        self._last_token_t[rid] = now
 
     def on_finish(self, rid: int):
         self.finished += 1
         t0 = self._enqueue_t.pop(rid, None)
         if t0 is not None:
             self.latency_s.append(self._clock() - t0)
+        self._last_token_t.pop(rid, None)
 
-    def on_cancel(self, rid: int):
-        """Evicted before completion: not a completion, no latency sample."""
-        self.cancelled += 1
+    def _drop(self, rid: int):
+        """Forget a request that will never complete (cancel/shed/
+        deadline): no latency sample, no stale per-rid state."""
         self._enqueue_t.pop(rid, None)
         self._admit_t.pop(rid, None)
         self._prefill_ticks.pop(rid, None)
         self._admit_overhead.pop(rid, None)
+        self._last_token_t.pop(rid, None)
+
+    def on_cancel(self, rid: int):
+        """Evicted before completion: not a completion, no latency sample."""
+        self.cancelled += 1
+        self._drop(rid)
+
+    def on_shed(self, rid: int):
+        """Dropped from the queue by the shed overload policy."""
+        self.shed += 1
+        self._drop(rid)
+
+    def on_deadline_evict(self, rid: int):
+        """Deadline exceeded (queued or in-flight): evicted, not finished."""
+        self.deadline_evicted += 1
+        self._drop(rid)
+
+    def on_backpressure(self):
+        """An `enqueue` was refused with `Overloaded` (queue full)."""
+        self.backpressured += 1
+
+    def on_cache_error(self):
+        """A prefix-cache probe/insert raised; serving degraded to a miss
+        instead of dying — counted so faults are observable."""
+        self.cache_errors += 1
+
+    def on_budget_defer(self, n_tokens: int):
+        """The prefill budget deferred `n_tokens` of ready prompt chunks
+        to a later tick (lanes left out of this tick's prefill call)."""
+        self.budget_deferred_tokens += n_tokens
 
     def on_tick(self, *, active: int, queued: int):
         self.ticks += 1
         self.peak_active = max(self.peak_active, active)
         self.peak_queued = max(self.peak_queued, queued)
+        self._active_sum += active
+        self._queued_sum += queued
 
     # -- export ------------------------------------------------------------
     def snapshot(self) -> dict:
@@ -189,7 +263,24 @@ class ServingCounters:
             "total_tokens_per_s":
                 (self.prefill_tokens + self.decode_tokens) / dt,
             "mean_ttft_s": mean(self.ttft_s),
+            "ttft_p50_s": percentile(self.ttft_s, 0.50),
+            "ttft_p90_s": percentile(self.ttft_s, 0.90),
+            "ttft_p99_s": percentile(self.ttft_s, 0.99),
+            "mean_itl_s": mean(self.itl_s),
+            "itl_p50_s": percentile(self.itl_s, 0.50),
+            "itl_p90_s": percentile(self.itl_s, 0.90),
+            "itl_p99_s": percentile(self.itl_s, 0.99),
             "mean_latency_s": mean(self.latency_s),
+            "latency_p99_s": percentile(self.latency_s, 0.99),
+            "shed": self.shed,
+            "deadline_evicted": self.deadline_evicted,
+            "backpressured": self.backpressured,
+            "cache_errors": self.cache_errors,
+            "budget_deferred_tokens": self.budget_deferred_tokens,
+            "mean_active_slots": self._active_sum / self.ticks
+                if self.ticks else 0.0,
+            "mean_queue_depth": self._queued_sum / self.ticks
+                if self.ticks else 0.0,
             "mean_prefill_ticks": mean(self.prefill_ticks),
             "mean_prefill_s": mean(self.prefill_s),
             "peak_active_slots": self.peak_active,
@@ -280,6 +371,47 @@ class HostFailure(RuntimeError):
         super().__init__(f"hosts {hosts} failed at step {step}")
         self.step = step
         self.hosts = hosts
+
+
+@dataclasses.dataclass
+class ServingFaultInjector:
+    """Tick-indexed fault schedule for the serving scheduler — the
+    serving-side sibling of `FailureInjector` (which targets training
+    steps).  The scheduler drains `pop(tick)` at the top of each tick
+    and applies the faults, so churn tests can force the nasty cases at
+    exact points in a request's life:
+
+      ("cache_probe_error", None) — the next prefix-cache probe raises;
+          the scheduler must degrade to a miss, never crash or leak a
+          lease.
+      ("evict", rid)              — evict `rid` at the top of the tick
+          (queued or in-flight), exercising mid-prefill cancellation.
+      ("evict_on_token", rid)     — evict `rid` from INSIDE its next
+          token callback, i.e. mid-tick / mid-speculation: drafts must
+          be discarded and the tick must finish cleanly.
+      ("deadline", rid)           — force `rid`'s deadline to expire
+          now, whether or not it had one.
+
+    `fired` records (tick, kind, payload) for every fault actually
+    delivered, so tests can assert the drill ran."""
+
+    schedule: dict[int, list[tuple[str, Any]]] = \
+        dataclasses.field(default_factory=dict)
+    enabled: bool = True
+    fired: list[tuple[int, str, Any]] = \
+        dataclasses.field(default_factory=list)
+
+    KINDS = ("cache_probe_error", "evict", "evict_on_token", "deadline")
+
+    def pop(self, tick: int) -> list[tuple[str, Any]]:
+        if not self.enabled:
+            return []
+        faults = self.schedule.pop(tick, [])
+        for kind, _ in faults:
+            if kind not in self.KINDS:
+                raise ValueError(f"unknown serving fault kind {kind!r}")
+        self.fired.extend((tick, k, p) for k, p in faults)
+        return list(faults)
 
 
 class TrainingSupervisor:

@@ -9,7 +9,11 @@ and places everything on the (optional) mesh (`plan`), and the engine
 front-end turns `submit(prompt)` into a token stream (`engine`).  A
 recurrent-state prefix cache (`prefix_cache`) turns repeated prompt
 prefixes into O(1) state restores — near-zero TTFT, bit-identical
-tokens.  docs/serving.md has the API guide; docs/architecture.md walks a
+tokens.  An SLO layer (`slo`) adds priority/deadline/cache-aware
+admission, a per-tick prefill budget, and explicit overload behavior —
+bounded queue with typed `Overloaded` backpressure or load shedding —
+so bursts degrade gracefully instead of collapsing latency.
+docs/serving.md has the API guide; docs/architecture.md walks a
 request through the lifecycle and the plan diagram.
 """
 from repro.serving.engine import (RequestHandle, SamplingParams,
@@ -18,9 +22,13 @@ from repro.serving.plan import ExecutionPlan, build_plan
 from repro.serving.prefix_cache import (CacheVariant, PrefixCache,
                                         PrefixCacheConfig, StateLease)
 from repro.serving.scheduler import Request, Scheduler, sample_token
+from repro.serving.slo import (AdmissionPolicy, Overloaded,
+                               SchedulerHang, ServingSLO)
 from repro.serving.state_pool import SlotStatePool
 
 __all__ = ["ServingEngine", "SamplingParams", "RequestHandle",
            "Request", "Scheduler", "sample_token", "SlotStatePool",
            "ExecutionPlan", "build_plan", "PrefixCache",
-           "PrefixCacheConfig", "CacheVariant", "StateLease"]
+           "PrefixCacheConfig", "CacheVariant", "StateLease",
+           "ServingSLO", "AdmissionPolicy", "Overloaded",
+           "SchedulerHang"]

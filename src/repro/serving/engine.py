@@ -43,6 +43,7 @@ from repro.runtime.monitor import ServingCounters
 from repro.serving.plan import ExecutionPlan, build_plan
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheConfig
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.slo import ServingSLO
 from repro.serving.state_pool import SlotStatePool
 
 
@@ -55,12 +56,18 @@ class SamplingParams:
 
 
 class RequestHandle:
-    """Live view of one submitted request; tokens stream in as generated."""
+    """Live view of one submitted request; tokens stream in as generated.
+
+    `outcome` is None while in flight and then one of "finished",
+    "cancelled", "shed" (dropped by the overload policy — resubmit;
+    with a prefix cache any completed boundary of the prompt resumes
+    free), or "deadline" (evicted past its deadline)."""
 
     def __init__(self, request: Request):
         self.request = request
         self.tokens: list[int] = []        # everything generated so far
         self.done = False
+        self.outcome: Optional[str] = None
         self._pending: collections.deque[int] = collections.deque()
 
     @property
@@ -123,6 +130,17 @@ class ServingEngine:
                  (tests/test_prefix_cache.py).  Entries are keyed by the
                  plan's `cache_variant()` so packed/fp, rwkv4/rwkv6 and
                  per-op/chunked states never alias.
+    slo        — a `ServingSLO` (repro.serving.slo): priority/deadline/
+                 cache-aware admission, per-tick prefill budget
+                 (translated bucket-aware via the plan's
+                 `prefill_quota`), bounded queue with `Overloaded`
+                 backpressure or load shedding, and the run() hang
+                 watchdog.  The default preserves historical behavior
+                 (docs/serving.md §"SLOs and overload").
+    fault_injector — a `ServingFaultInjector` (repro.runtime.monitor)
+                 for fault drills: forces cache-probe failures,
+                 mid-speculation evictions, and deadline expiry at
+                 chosen ticks (tests/test_faults.py).
     """
 
     def __init__(self, model: Model | str, *, params: Any = None,
@@ -135,7 +153,8 @@ class ServingEngine:
                  draft_depth: Optional[int] = None,
                  mesh=None, plan: Optional[ExecutionPlan] = None,
                  counters: Optional[ServingCounters] = None,
-                 prefix_cache=None):
+                 prefix_cache=None, slo: Optional[ServingSLO] = None,
+                 fault_injector=None):
         if plan is None:
             plan = build_plan(model, params, smoke=smoke, mesh=mesh,
                               quantized=quantized,
@@ -161,6 +180,7 @@ class ServingEngine:
         self.prefix_cache = self._build_cache(prefix_cache)
         sp = plan.speculative
         self.speculative = 0 if sp is None else sp.k
+        self.slo = slo if slo is not None else ServingSLO()
         self.scheduler = Scheduler(
             self.pool, plan.decode_fn(max_batch), plan.prefill_fn(max_batch),
             prefill_chunk=plan.prefill_chunk, counters=self.counters,
@@ -173,7 +193,12 @@ class ServingEngine:
             if sp is not None and sp.k > 1 else None,
             verify_fn=plan.verify_fn(max_batch) if sp is not None else None,
             rollback_fn=plan.rollback_fn(max_batch)
-            if sp is not None else None)
+            if sp is not None else None,
+            slo=self.slo,
+            prefill_quota=plan.prefill_quota(self.slo.prefill_budget,
+                                             max_batch)
+            if self.slo.prefill_budget > 0 else None,
+            fault_injector=fault_injector)
         self._handles: dict[int, RequestHandle] = {}
         self._rids = itertools.count()
 
@@ -209,11 +234,17 @@ class ServingEngine:
     # -- request API ---------------------------------------------------------
 
     def submit(self, prompt: list[int],
-               sampling: Optional[SamplingParams] = None,
+               sampling: Optional[SamplingParams] = None, *,
+               priority: int = 0, deadline_s: Optional[float] = None,
                **kw) -> RequestHandle:
         """Queue a request; returns a handle whose tokens fill in as the
         engine steps.  `kw` shorthand: max_new_tokens/temperature/seed/
-        eos_token override the SamplingParams fields."""
+        eos_token override the SamplingParams fields.  `priority` and
+        `deadline_s` are SLO fields (repro.serving.slo).  With a bounded
+        queue (`AdmissionPolicy.max_queue`) a full queue raises
+        `Overloaded` — the request was NOT accepted and NO handle exists
+        for it — or, under the shed policy, drops a strictly-less-urgent
+        queued request (its handle completes with outcome "shed")."""
         sp = sampling or SamplingParams()
         if kw:
             sp = dataclasses.replace(sp, **kw)
@@ -221,10 +252,18 @@ class ServingEngine:
                       prompt=[int(t) for t in prompt],
                       max_new_tokens=sp.max_new_tokens,
                       temperature=sp.temperature, seed=sp.seed,
-                      eos_token=sp.eos_token)
+                      eos_token=sp.eos_token, priority=priority,
+                      deadline_s=deadline_s)
         handle = RequestHandle(req)
+        # register BEFORE enqueue (a shed victim's on_finish fires inside
+        # enqueue and needs its own handle), but unregister if THIS
+        # request is refused: a raised Overloaded leaves no handle behind
         self._handles[req.rid] = handle
-        self.scheduler.enqueue(req)
+        try:
+            self.scheduler.enqueue(req)
+        except BaseException:
+            self._handles.pop(req.rid, None)
+            raise
         return handle
 
     def cancel(self, handle: RequestHandle) -> bool:
@@ -236,9 +275,9 @@ class ServingEngine:
         return self.scheduler.tick()
 
     def run(self) -> dict:
-        """Drive until drained; returns a counters snapshot."""
-        while self.step():
-            pass
+        """Drive until drained (with the scheduler's hang watchdog —
+        see `ServingSLO.max_idle_ticks`); returns a counters snapshot."""
+        self.scheduler.run()
         return self.counters.snapshot()
 
     def stream(self, handle: RequestHandle) -> Iterator[int]:
@@ -270,6 +309,7 @@ class ServingEngine:
         h.tokens.append(tok)
         h._pending.append(tok)
 
-    def _on_finish(self, req: Request):
+    def _on_finish(self, req: Request, outcome: str = "finished"):
         h = self._handles.pop(req.rid)
+        h.outcome = outcome
         h.done = True

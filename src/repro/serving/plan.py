@@ -224,6 +224,26 @@ class ExecutionPlan:
             prefill=self.prefill_desc.name,
             state_dtype=self.state_dtype.name)
 
+    def prefill_quota(self, budget_tokens: int, batch: int) -> int:
+        """Per-tick prefill LANE quota for a chunk-token budget — the
+        bucket-aware translation the SLO layer uses (repro.serving.slo).
+
+        The prefill program's shape is (batch bucket, prefill_chunk)
+        regardless of load, so a budget can never shrink a call — it can
+        only choose HOW MANY lanes' validity rows are populated this
+        tick.  The budget therefore rounds down to whole chunks
+        (budget // prefill_chunk lanes) with a floor of ONE lane, so
+        prefill always makes forward progress (a budget below one chunk
+        throttles to one lane per tick, never zero — no budget-induced
+        wedge).  Because the compiled-program cache key (path, batch
+        bucket, dtype) never sees the budget, the traced-once guarantee
+        is untouched: budgeted and unbudgeted serving hit the same
+        compiled programs (tests assert `trace_counts` stays 1)."""
+        if budget_tokens <= 0:
+            return int(batch)
+        return max(1, min(int(batch),
+                          int(budget_tokens) // self.prefill_chunk))
+
     def state_shardings(self, batch: int):
         """NamedSharding tree for a `batch`-slot pool on this plan's mesh
         (None without a mesh): slot axis data-parallel, divisibility

@@ -221,6 +221,26 @@ class PrefixCache:
         self.stats["misses"] += 1
         return None
 
+    def hit_length(self, variant: CacheVariant, prompt,
+                   digests: Optional[dict] = None) -> int:
+        """Longest cached proper-ancestor boundary of `prompt` (token
+        count; 0 = no hit) WITHOUT taking a lease, bumping LRU order, or
+        touching hit/miss stats — the scheduler's admission-preference
+        peek (`AdmissionPolicy.prefer_cache_hits`).  Side-effect-free so
+        peeking at every queued request each tick cannot distort cache
+        telemetry or eviction order; like `probe`, a digest match only
+        counts after the full token compare (collision-proof)."""
+        if digests is None:
+            digests = self.digests(prompt)
+        for n in sorted(digests, reverse=True):
+            if n >= len(prompt):
+                continue
+            key = self._key(variant, n, digests[n])
+            entry = self._device.get(key) or self._host.get(key)
+            if entry is not None and entry.tokens == tuple(prompt[:n]):
+                return int(n)
+        return 0
+
     def contains(self, variant: CacheVariant, prompt, n: int,
                  digests: Optional[dict] = None) -> bool:
         """True when boundary `n` of `prompt` is already cached under

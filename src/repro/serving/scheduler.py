@@ -43,29 +43,56 @@ deliberately — fixed shapes beat recompiles) but their state updates are
 discarded via `where(mask, stepped, old)`, so a lane mid-prefill or free
 is never disturbed by decode traffic.  Lane results are bitwise equal to
 a batch-1 decode of the same sequence (verified in tests/test_scheduler).
+
+SLO layer (repro.serving.slo): a `ServingSLO` adds priority/deadline/
+cache-aware admission, a per-tick prefill budget, a bounded queue with
+typed `Overloaded` backpressure or lowest-priority shedding, and a
+`run()` hang watchdog.  The default `ServingSLO()` preserves historical
+behavior: unbounded queue, no deadlines, unlimited budget (admission
+order is unchanged too — with every priority equal and no cache hits the
+selection scan degenerates to FIFO).  A `ServingFaultInjector`
+(repro.runtime.monitor) can force cache-probe failures, evictions —
+including from inside a token callback, i.e. mid-speculation — and
+deadline expiry at chosen ticks; the churn tests drive every fault and
+assert pool/lease/RNG invariants hold.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import time
 from typing import Callable, Optional
 
 import numpy as np
 
+from repro.serving.slo import (SHED, Overloaded, SchedulerHang,
+                               ServingSLO)
+
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (host-side; tokens are python ints)."""
+    """One generation request (host-side; tokens are python ints).
+
+    priority   — admission class, higher = more urgent (ties FIFO);
+                 also the shed-victim order under overload.
+    deadline_s — seconds from enqueue until the request is evicted with
+                 outcome "deadline" (None = ServingSLO.default_deadline_s,
+                 which itself defaults to no deadline)."""
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
     seed: int = 0
     eos_token: Optional[int] = None
+    priority: int = 0
+    deadline_s: Optional[float] = None
 
 
 PREFILL, DECODE = "prefill", "decode"
+
+FINISHED, CANCELLED, SHED_OUT, DEADLINE = \
+    "finished", "cancelled", "shed", "deadline"
 
 
 @dataclasses.dataclass
@@ -79,7 +106,7 @@ class _Slot:
     generated: list[int] = dataclasses.field(default_factory=list)
     rng: Optional[np.random.Generator] = None
     # prefix-cache bookkeeping: tokens restored from a probe hit, the
-    # prompt's rolling boundary digests (hashed once at admission), and
+    # prompt's rolling boundary digests (hashed once at enqueue), and
     # boundary states captured during prefill, published at completion
     cached_tokens: int = 0
     digests: Optional[dict] = None
@@ -89,6 +116,21 @@ class _Slot:
     # eviction — a drafted token is never engine output until the verifier
     # confirms it)
     drafted: list[int] = dataclasses.field(default_factory=list)
+    # SLO bookkeeping: admission sequence number (budget-ordering
+    # tiebreak) and the absolute deadline inherited from the queue entry
+    seq: int = 0
+    deadline_t: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Queued:
+    """Host metadata for one QUEUED request: enqueue order/tick (aging +
+    FIFO tiebreaks), absolute deadline, and the prompt's cache digests
+    (hashed once so per-tick admission peeks never re-hash)."""
+    seq: int
+    enqueue_tick: int
+    deadline_t: Optional[float] = None
+    digests: Optional[dict] = None
 
 
 def sample_token(logits_row: np.ndarray, temperature: float,
@@ -176,6 +218,17 @@ class Scheduler:
                                                        donation: input
                                                        state = snapshot]
     rollback_fn(committed, snapshot, reject (S,))     -> pool_state
+
+    `slo` (a ServingSLO) layers admission control on top: priority +
+    deadline + cache-aware selection, a bounded queue with `Overloaded`
+    backpressure / lowest-priority shedding, a per-tick prefill lane
+    budget (`prefill_quota`, lanes per tick — the engine derives it
+    bucket-aware via `ExecutionPlan.prefill_quota`; left None the
+    scheduler derives it from `slo.prefill_budget` itself), and the
+    `run()` hang watchdog.  `on_finish` is called as
+    `on_finish(req, outcome)` with outcome in {"finished", "cancelled",
+    "shed", "deadline"}.  `fault_injector` (ServingFaultInjector) is
+    drained at the top of every tick for fault drills.
     """
 
     def __init__(self, pool, decode_fn: Callable, prefill_fn: Callable, *,
@@ -186,7 +239,10 @@ class Scheduler:
                  speculative: int = 0,
                  draft_fn: Optional[Callable] = None,
                  verify_fn: Optional[Callable] = None,
-                 rollback_fn: Optional[Callable] = None):
+                 rollback_fn: Optional[Callable] = None,
+                 slo: Optional[ServingSLO] = None,
+                 prefill_quota: Optional[int] = None,
+                 fault_injector=None):
         self.pool = pool
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
@@ -216,7 +272,31 @@ class Scheduler:
         self._spec_snapshot = None
         self._spec_inflight: dict[int, _Slot] = {}
         self.on_token = on_token or (lambda req, tok: None)
-        self.on_finish = on_finish or (lambda req: None)
+        self.on_finish = on_finish or (lambda req, outcome: None)
+        self.slo = slo if slo is not None else ServingSLO()
+        # prefill lane quota per tick (None = unlimited): prefer the
+        # engine's bucket-aware ExecutionPlan.prefill_quota; standalone
+        # construction derives the same whole-chunks / one-lane-floor
+        # rule from the budget directly
+        if prefill_quota is not None:
+            self._prefill_quota: Optional[int] = int(prefill_quota)
+        elif self.slo.prefill_budget > 0:
+            self._prefill_quota = max(
+                1, self.slo.prefill_budget // self.prefill_chunk)
+        else:
+            self._prefill_quota = None
+        self.fault_injector = fault_injector
+        self._tick_no = 0
+        self._seq = itertools.count()
+        self._queued: dict[int, _Queued] = {}
+        self._has_deadlines = False
+        # monotone progress counter (admissions + prefill tokens +
+        # emitted tokens + retirements/sheds): the run() watchdog's
+        # wedge detector
+        self._progress = 0
+        # armed fault state (ServingFaultInjector)
+        self._fail_next_probe = False
+        self._evict_on_token: set[int] = set()
         # prefix cache (repro.serving.prefix_cache.PrefixCache) + the
         # CacheVariant this scheduler's states are filed under; both or
         # neither.  The cache's chunk granularity must equal
@@ -233,17 +313,49 @@ class Scheduler:
     # -- public ------------------------------------------------------------
 
     def enqueue(self, req: Request):
+        """Queue a request for admission.  With a bounded queue
+        (`AdmissionPolicy.max_queue`) a full queue either raises
+        `Overloaded` (backpressure — the request was NOT accepted) or
+        sheds the lowest-effective-priority queued request when it is
+        strictly less urgent than this arrival (otherwise this arrival
+        is backpressured: equal classes stay FIFO-fair)."""
         if not req.prompt:
             raise ValueError("empty prompt")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (the first token "
                              "is sampled from the prompt's last logits)")
+        pol = self.slo.admission
+        if pol.max_queue and len(self.queue) >= pol.max_queue:
+            if pol.overload == SHED:
+                victim = self._shed_victim(req)
+                if victim is None:
+                    self._backpressure()
+                self._shed(victim)
+            else:
+                self._backpressure()
+        deadline_s = (req.deadline_s if req.deadline_s is not None
+                      else self.slo.default_deadline_s)
+        qm = _Queued(
+            seq=next(self._seq), enqueue_tick=self._tick_no,
+            deadline_t=(None if deadline_s is None
+                        else self._now() + deadline_s),
+            digests=(self.prefix_cache.digests(req.prompt)
+                     if self.prefix_cache is not None else None))
+        if qm.deadline_t is not None:
+            self._has_deadlines = True
+        self._queued[req.rid] = qm
         self.queue.append(req)
         if self.counters is not None:
             self.counters.on_enqueue(req.rid)
 
     def tick(self) -> bool:
-        """One scheduling round; returns True while work remains."""
+        """One scheduling round; returns True while work remains.
+        Ticks are numbered from 1 (`ServingFaultInjector` schedules are
+        keyed on this number and drained at the top of the tick)."""
+        self._tick_no += 1
+        if self.fault_injector is not None:
+            self._apply_faults()
+        self._expire_deadlines()
         self._admit()
         self._prefill_tick()
         if self.spec_k:
@@ -255,34 +367,182 @@ class Scheduler:
                                   queued=len(self.queue))
         return bool(self.queue or self.slots)
 
-    def run(self):
+    def run(self, *, max_idle_ticks: Optional[int] = None):
+        """Tick until no work remains.  Watchdog: `max_idle_ticks`
+        (default `ServingSLO.max_idle_ticks`; 0 disables) consecutive
+        ticks with work remaining but zero progress — no admission,
+        prefill token, emitted token, or retirement — raise
+        `SchedulerHang` with a state summary instead of spinning
+        forever (e.g. a leaked pool slot leaving queued work
+        unadmittable)."""
+        limit = (self.slo.max_idle_ticks if max_idle_ticks is None
+                 else max_idle_ticks)
+        idle, last = 0, self._progress
         while self.tick():
-            pass
+            if self._progress != last:
+                idle, last = 0, self._progress
+                continue
+            idle += 1
+            if limit and idle >= limit:
+                phases = collections.Counter(
+                    m.phase for m in self.slots.values())
+                raise SchedulerHang(
+                    idle_ticks=idle, queued=len(self.queue),
+                    active=len(self.slots), n_free=self.pool.n_free,
+                    phases=dict(phases))
 
     def evict(self, rid: int) -> bool:
         """Cancel an in-flight or queued request and free its slot; counted
         as a cancellation, not a completion (no latency sample)."""
         for slot, meta in list(self.slots.items()):
             if meta.req.rid == rid:
-                self._retire(slot, meta, cancelled=True)
+                self._retire(slot, meta, outcome=CANCELLED)
                 return True
         for req in list(self.queue):
             if req.rid == rid:
-                self.queue.remove(req)
+                self._dequeue(req)
                 if self.counters is not None:
                     self.counters.on_cancel(rid)
-                self.on_finish(req)
+                self.on_finish(req, CANCELLED)
                 return True
         return False
 
+    # -- SLO layer ---------------------------------------------------------
+
+    def _backpressure(self):
+        if self.counters is not None:
+            self.counters.on_backpressure()
+        raise Overloaded(queue_depth=len(self.queue),
+                         max_queue=self.slo.admission.max_queue,
+                         retry_after_s=self._retry_after())
+
+    def _retry_after(self) -> float:
+        """Retry hint for `Overloaded`: mean completed-request latency
+        scaled by how many queue-lengths of work stand in front of a
+        new arrival (0.0 before any completion — no estimate beats a
+        made-up one)."""
+        c = self.counters
+        if c is None or not getattr(c, "latency_s", None):
+            return 0.0
+        mean_lat = sum(c.latency_s) / len(c.latency_s)
+        return mean_lat * (len(self.queue) + 1) / max(self.pool.max_slots, 1)
+
+    def _eff_priority(self, req: Request, qm: _Queued) -> int:
+        """Effective priority = class + anti-starvation aging bonus
+        (one level per `aging_ticks` ticks spent queued)."""
+        aging = self.slo.admission.aging_ticks
+        bonus = (self._tick_no - qm.enqueue_tick) // aging if aging else 0
+        return req.priority + bonus
+
+    def _shed_victim(self, incoming: Request) -> Optional[Request]:
+        """Lowest-effective-priority queued request (youngest on ties —
+        it has the least sunk wait), IF strictly less urgent than the
+        incoming request; else None (the incoming is backpressured)."""
+        best, best_key = None, None
+        for r in self.queue:
+            qm = self._queued[r.rid]
+            key = (self._eff_priority(r, qm), -qm.seq)
+            if best is None or key < best_key:
+                best, best_key = r, key
+        if best is not None and best_key[0] < incoming.priority:
+            return best
+        return None
+
+    def _shed(self, req: Request):
+        self._dequeue(req)
+        self._progress += 1
+        if self.counters is not None:
+            self.counters.on_shed(req.rid)
+        self.on_finish(req, SHED_OUT)
+
+    def _dequeue(self, req: Request):
+        self.queue.remove(req)
+        self._queued.pop(req.rid, None)
+
+    def _apply_faults(self):
+        """Drain this tick's `ServingFaultInjector` schedule (see its
+        docstring for the fault kinds)."""
+        for kind, payload in self.fault_injector.pop(self._tick_no):
+            if kind == "cache_probe_error":
+                self._fail_next_probe = True
+            elif kind == "evict":
+                self.evict(int(payload))
+            elif kind == "evict_on_token":
+                self._evict_on_token.add(int(payload))
+            elif kind == "deadline":
+                self._force_deadline(int(payload))
+
+    def _force_deadline(self, rid: int):
+        """Fault drill: expire `rid`'s deadline NOW (whether or not it
+        had one) — it is evicted by this tick's deadline sweep."""
+        for meta in self.slots.values():
+            if meta.req.rid == rid:
+                meta.deadline_t = float("-inf")
+                self._has_deadlines = True
+                return
+        qm = self._queued.get(rid)
+        if qm is not None:
+            qm.deadline_t = float("-inf")
+            self._has_deadlines = True
+
+    def _expire_deadlines(self):
+        """Evict every queued or in-flight request whose deadline has
+        passed (outcome "deadline").  In-flight lanes go through the
+        `_retire` path — slot released, drafts discarded; like
+        cancellation, captured boundary states are NOT published (only
+        completed requests publish, keeping write-once semantics
+        simple)."""
+        if not self._has_deadlines:
+            return
+        now = self._now()
+        for slot, meta in list(self.slots.items()):
+            if meta.deadline_t is not None and now >= meta.deadline_t:
+                self._retire(slot, meta, outcome=DEADLINE)
+        expired = [r for r in self.queue
+                   if (qm := self._queued[r.rid]).deadline_t is not None
+                   and now >= qm.deadline_t]
+        for r in expired:
+            self._dequeue(r)
+            self._progress += 1
+            if self.counters is not None:
+                self.counters.on_deadline_evict(r.rid)
+            self.on_finish(r, DEADLINE)
+
     # -- phases ------------------------------------------------------------
+
+    def _pop_next(self) -> Request:
+        """Admission selection: highest effective priority first
+        (class + aging), ties broken toward the longest cached ancestor
+        prefix (`AdmissionPolicy.prefer_cache_hits`, a side-effect-free
+        `PrefixCache.hit_length` peek over enqueue-time digests), then
+        FIFO.  With every priority equal and no cache hits this is
+        exactly the historical FIFO order."""
+        if len(self.queue) == 1:
+            req = self.queue.popleft()
+            return req
+        peek = (self.prefix_cache is not None
+                and self.slo.admission.prefer_cache_hits)
+        best, best_key = None, None
+        for r in self.queue:
+            qm = self._queued[r.rid]
+            hit = (self.prefix_cache.hit_length(
+                self.cache_variant, r.prompt, qm.digests) if peek else 0)
+            key = (self._eff_priority(r, qm), hit, -qm.seq)
+            if best is None or key > best_key:
+                best, best_key = r, key
+        self.queue.remove(best)
+        return best
 
     def _admit(self):
         while self.queue and self.pool.n_free:
+            req = self._pop_next()
+            qm = self._queued.pop(req.rid)
             slot = self.pool.acquire()
-            req = self.queue.popleft()
-            meta = _Slot(req=req, rng=np.random.default_rng(req.seed))
+            meta = _Slot(req=req, rng=np.random.default_rng(req.seed),
+                         seq=qm.seq, deadline_t=qm.deadline_t,
+                         digests=qm.digests)
             self.slots[slot] = meta
+            self._progress += 1
             if self.counters is not None:
                 self.counters.on_admit(req.rid)
             if self.prefix_cache is not None:
@@ -301,12 +561,29 @@ class Scheduler:
         lane, and only the uncached suffix is ever computed.  Probe and
         state-copy wall time are reported separately from prefill time
         (ServingCounters.on_cache_probe) — a hit's TTFT is cache time
-        plus suffix prefill, and the decomposition should say so."""
+        plus suffix prefill, and the decomposition should say so.
+
+        Robustness: a probe that RAISES (storage fault, injected via
+        ServingFaultInjector's "cache_probe_error") degrades to a miss —
+        counted in `ServingCounters.cache_errors` — and the lane
+        prefills from scratch; the serving loop never dies on cache
+        trouble and no lease is held when the probe fails."""
         req = meta.req
-        meta.digests = self.prefix_cache.digests(req.prompt)
+        if meta.digests is None:        # enqueue-time hashing is the norm
+            meta.digests = self.prefix_cache.digests(req.prompt)
         t0 = self._now()
-        lease = self.prefix_cache.probe(self.cache_variant, req.prompt,
-                                        meta.digests)
+        try:
+            if self._fail_next_probe:
+                self._fail_next_probe = False
+                raise RuntimeError("injected cache-probe failure")
+            lease = self.prefix_cache.probe(self.cache_variant, req.prompt,
+                                            meta.digests)
+        except Exception:
+            if self.counters is not None:
+                self.counters.on_cache_error()
+                self.counters.on_cache_probe(req.rid, hit=False,
+                                             probe_s=self._now() - t0)
+            return
         t_probe = self._now() - t0
         if lease is None:
             if self.counters is not None:
@@ -345,6 +622,28 @@ class Scheduler:
         if not prefilling:
             return
         S, C = self.pool.max_slots, self.prefill_chunk
+        quota = self._prefill_quota
+        if (quota is not None and quota < len(prefilling)
+                and any(m.phase == DECODE for m in self.slots.values())):
+            # prefill budget (ServingSLO.prefill_budget): while lanes are
+            # DECODING, only `quota` prefilling lanes join this tick's
+            # call — highest priority first, then earliest deadline, then
+            # admission order.  The (S, C) program shape never changes
+            # (deferred lanes just keep empty validity rows), so the
+            # compiled-program cache is untouched; with no decode lane
+            # live there is no inter-token latency to protect and
+            # prefill runs unthrottled.
+            prefilling.sort(key=lambda sm: (
+                -sm[1].req.priority,
+                sm[1].deadline_t if sm[1].deadline_t is not None
+                else float("inf"),
+                sm[1].seq))
+            deferred = prefilling[quota:]
+            prefilling = prefilling[:quota]
+            if self.counters is not None and deferred:
+                self.counters.on_budget_defer(sum(
+                    min(len(m.req.prompt) - m.n_prefilled, C)
+                    for _, m in deferred))
         toks = np.zeros((S, C), np.int32)
         valid = np.zeros((S, C), bool)
         fresh = np.zeros((S,), bool)
@@ -362,6 +661,7 @@ class Scheduler:
         for slot, meta in prefilling:
             meta.fresh = False
             meta.n_prefilled += parts[slot]
+            self._progress += parts[slot]
             if self.counters is not None:
                 self.counters.on_prefill(meta.req.rid, parts[slot])
             if self.prefix_cache is not None:
@@ -477,12 +777,14 @@ class Scheduler:
                 consumed[slot] = j + 1
                 meta.generated.append(tok)
                 meta.next_token = tok
+                self._progress += 1
                 if self.counters is not None:
                     self.counters.on_token(
                         req.rid, first=len(meta.generated) == 1)
                 self.on_token(req, tok)
+                self._check_token_fault(req.rid)
                 if slot not in self.slots or self.slots[slot] is not meta:
-                    break   # evicted by its own token callback
+                    break   # evicted by its own token callback / a fault
                 if (len(meta.generated) >= req.max_new_tokens or
                         (req.eos_token is not None and
                          tok == req.eos_token)):
@@ -511,24 +813,46 @@ class Scheduler:
             req, tok = meta.req, int(tok)
             meta.generated.append(tok)
             meta.next_token = tok
+            self._progress += 1
             if self.counters is not None:
                 self.counters.on_token(req.rid,
                                        first=len(meta.generated) == 1)
             self.on_token(req, tok)
+            self._check_token_fault(req.rid)
+            if slot not in self.slots or self.slots[slot] is not meta:
+                continue    # evicted by its token callback / a fault
             done = (len(meta.generated) >= req.max_new_tokens or
                     (req.eos_token is not None and tok == req.eos_token))
             if done:
                 self._retire(slot, meta)
 
-    def _retire(self, slot: int, meta: _Slot, *, cancelled: bool = False):
-        if not cancelled and self.prefix_cache is not None:
+    def _check_token_fault(self, rid: int):
+        """ServingFaultInjector "evict_on_token": evict `rid` from inside
+        its own token emission — the mid-tick / mid-speculation eviction
+        drill.  Callers re-check slot membership right after."""
+        if rid in self._evict_on_token:
+            self._evict_on_token.discard(rid)
+            self.evict(rid)
+
+    def _retire(self, slot: int, meta: _Slot, *, outcome: str = FINISHED):
+        """Release `slot` and report `meta.req` with `outcome` (one of
+        "finished" / "cancelled" / "deadline"; queued-only exits use
+        "shed" / "cancelled" without reaching here).  Only FINISHED
+        requests publish their captured boundary states — a cancelled or
+        deadline-evicted lane's pending inserts are discarded."""
+        if outcome == FINISHED and self.prefix_cache is not None:
             # publish the boundary states captured during prefill —
             # write-once (the cache keeps the first state for a key;
-            # any rival is bit-identical by the resume oracle)
+            # any rival is bit-identical by the resume oracle).  A
+            # failing insert degrades to "not cached", never a crash.
             for n, state in meta.pending_inserts:
-                self.prefix_cache.insert(self.cache_variant,
-                                         meta.req.prompt, n, state,
-                                         meta.digests)
+                try:
+                    self.prefix_cache.insert(self.cache_variant,
+                                             meta.req.prompt, n, state,
+                                             meta.digests)
+                except Exception:
+                    if self.counters is not None:
+                        self.counters.on_cache_error()
         meta.pending_inserts.clear()
         # mid-speculation eviction: the lane's drafted tokens die with it
         # and its in-flight marker clears NOW (not at tick end), so a
@@ -537,9 +861,12 @@ class Scheduler:
         self._spec_inflight.pop(meta.req.rid, None)
         del self.slots[slot]
         self.pool.release(slot)
+        self._progress += 1
         if self.counters is not None:
-            if cancelled:
+            if outcome == CANCELLED:
                 self.counters.on_cancel(meta.req.rid)
+            elif outcome == DEADLINE:
+                self.counters.on_deadline_evict(meta.req.rid)
             else:
                 self.counters.on_finish(meta.req.rid)
-        self.on_finish(meta.req)
+        self.on_finish(meta.req, outcome)

@@ -1,0 +1,161 @@
+"""SLO layer for the serving engine: priorities, deadlines, budgets,
+and graceful overload.
+
+The paper's pipeline (PAPER.md §4) wins throughput by keeping the
+datapath saturated; a production engine dies not from steady load but
+from bursts.  Before this layer the scheduler admitted FIFO with an
+unbounded queue — overload meant latency collapse (per-tick host work
+grows with queue depth, TTFT grows without bound, nothing is ever
+refused).  RWKV's O(1) recurrent state makes graceful degradation
+uniquely cheap: shedding a request frees exactly one state slot, and a
+shed-then-retried prompt can resume from its prefix-cache boundary
+instead of re-prefilling (`repro.serving.prefix_cache`).  This module
+is the configuration surface; the mechanisms live in
+`repro.serving.scheduler`:
+
+  * PRIORITY CLASSES + DEADLINES — `Request.priority` (higher = more
+    urgent) orders admission; `Request.deadline_s` (seconds from
+    enqueue, or `ServingSLO.default_deadline_s`) bounds a request's
+    life: a deadline-exceeded request is evicted through the existing
+    `Scheduler.evict` machinery — slot released, drafts discarded,
+    cache leases never leaked — and reported with outcome "deadline".
+  * ANTI-STARVATION AGING — a queued request's *effective* priority
+    rises by one level every `aging_ticks` scheduler ticks, so a burst
+    of high-priority traffic can delay but never permanently starve
+    the background class.
+  * CACHE-AWARE ADMISSION — with `prefer_cache_hits` and a prefix
+    cache wired in, admission breaks priority ties toward the request
+    with the longest cached ancestor prefix (a side-effect-free
+    `PrefixCache.hit_length` peek): cache-hit requests cost the engine
+    almost nothing to start, so serving them first raises goodput.
+  * PER-TICK PREFILL BUDGET — `prefill_budget` bounds the prefill
+    chunk-tokens launched per tick while any lane is decoding, capping
+    the inter-token-latency jitter a prefill burst can inject.  The
+    budget is BUCKET-AWARE (`ExecutionPlan.prefill_quota`): the
+    (S, C) prefill program shape is load-independent, so the budget
+    only chooses WHICH lanes' validity rows are populated — whole
+    chunks, floor of one lane — and the compiled-program cache keeps
+    its traced-once guarantee untouched.
+  * BOUNDED QUEUE + EXPLICIT OVERLOAD — `max_queue` bounds the
+    admission queue.  When it is full, `overload="backpressure"` makes
+    `submit` raise a typed `Overloaded` (queue depth + retry-after
+    hints: the caller's signal to back off), while `overload="shed"`
+    drops the lowest-effective-priority queued request (outcome
+    "shed", observable on its handle) to make room for a strictly
+    more urgent arrival.  Nothing is ever silently lost: every
+    submitted request ends as finished, cancelled, shed, deadline, or
+    a raised `Overloaded`.
+
+`benchmarks/bench_serving_slo.py` drives bursty/zipfian arrival traces
+against this layer and gates p99 inter-token latency under a 2x
+overload into BENCH_serving.json; docs/serving.md §"SLOs and overload"
+covers semantics and the backpressure contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+BACKPRESSURE, SHED = "backpressure", "shed"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """How the scheduler picks from (and bounds) the admission queue.
+
+    max_queue        — queued-request cap; 0 = unbounded (the historical
+                       behavior).  With a full queue, `overload` decides.
+    overload         — "backpressure": `enqueue` raises `Overloaded`;
+                       "shed": drop the lowest-effective-priority queued
+                       request IF it is strictly less urgent than the
+                       arrival (otherwise the arrival itself is
+                       backpressured — equal classes are FIFO-fair).
+    prefer_cache_hits— break priority ties toward the request with the
+                       longest cached ancestor prefix (needs a prefix
+                       cache; a no-op without one).
+    aging_ticks      — every `aging_ticks` ticks spent queued raise a
+                       request's effective priority by one (0 disables
+                       aging).  Guarantees eventual admission under a
+                       sustained stream of higher-priority arrivals.
+    """
+    max_queue: int = 0
+    overload: str = BACKPRESSURE
+    prefer_cache_hits: bool = True
+    aging_ticks: int = 32
+
+    def __post_init__(self):
+        if self.overload not in (BACKPRESSURE, SHED):
+            raise ValueError(
+                f"overload={self.overload!r}: expected "
+                f"{BACKPRESSURE!r} or {SHED!r}")
+        if self.max_queue < 0 or self.aging_ticks < 0:
+            raise ValueError("max_queue and aging_ticks must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSLO:
+    """The engine/scheduler SLO configuration (see module docstring).
+
+    prefill_budget     — prefill chunk-tokens allowed per tick while any
+                         lane decodes (0 = unlimited).  Bucket-aware
+                         with a floor of one lane per tick, so prefill
+                         always progresses and program shapes never
+                         change.
+    default_deadline_s — deadline (seconds from enqueue) applied to
+                         requests that set none (None = no deadline).
+    admission          — the AdmissionPolicy above.
+    max_idle_ticks     — `Scheduler.run` watchdog: this many consecutive
+                         ticks with work remaining but zero progress
+                         (no admission, prefill token, emitted token or
+                         retirement) raise `SchedulerHang` instead of
+                         spinning forever (0 disables the guard).
+    """
+    prefill_budget: int = 0
+    default_deadline_s: Optional[float] = None
+    admission: AdmissionPolicy = dataclasses.field(
+        default_factory=AdmissionPolicy)
+    max_idle_ticks: int = 10_000
+
+    def __post_init__(self):
+        if self.prefill_budget < 0 or self.max_idle_ticks < 0:
+            raise ValueError(
+                "prefill_budget and max_idle_ticks must be >= 0")
+        if (self.default_deadline_s is not None
+                and self.default_deadline_s <= 0):
+            raise ValueError("default_deadline_s must be positive")
+
+
+class Overloaded(RuntimeError):
+    """Typed backpressure signal: the admission queue is full and the
+    request was NOT accepted.  Carries the caller's retry hints —
+    `queue_depth` / `max_queue` (how full), and `retry_after_s`, a
+    service-time estimate of when a slot-width of queued work will have
+    drained (0.0 before any request has completed)."""
+
+    def __init__(self, *, queue_depth: int, max_queue: int,
+                 retry_after_s: float = 0.0):
+        super().__init__(
+            f"admission queue full ({queue_depth}/{max_queue}); "
+            f"retry after ~{retry_after_s:.3f}s")
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+        self.retry_after_s = retry_after_s
+
+
+class SchedulerHang(RuntimeError):
+    """`Scheduler.run` watchdog: work remains but no tick has made
+    progress for `max_idle_ticks` — a wedged lane or leaked slot would
+    otherwise spin forever.  Carries the scheduler's state summary so
+    the failure is diagnosable from the exception alone."""
+
+    def __init__(self, *, idle_ticks: int, queued: int, active: int,
+                 n_free: int, phases: dict):
+        super().__init__(
+            f"scheduler made no progress for {idle_ticks} ticks: "
+            f"{queued} queued, {active} active slots ({phases}), "
+            f"{n_free} free pool slots — wedged lane or leaked slot?")
+        self.idle_ticks = idle_ticks
+        self.queued = queued
+        self.active = active
+        self.n_free = n_free
+        self.phases = dict(phases)

@@ -1,0 +1,185 @@
+"""Serving fault-injection drills (ServingFaultInjector): cache-probe
+failures degrade to misses, forced evictions — mid-prefill and from
+inside a token callback, i.e. mid-speculation — and forced deadline
+expiry.  Every drill asserts the robustness invariants: pool free list
+restored, no cache lease leaked (`check_state` + refcounts), tick-local
+speculation state empty between ticks, and a seeded surviving request's
+token stream bit-identical to a fault-free run (RNG-stream isolation)."""
+import jax
+import pytest
+
+from repro.models.registry import get_model
+from repro.runtime.monitor import ServingFaultInjector
+from repro.serving import (PrefixCache, PrefixCacheConfig, ServingEngine,
+                           build_plan)
+
+
+@pytest.fixture(scope="module")
+def rwkv4():
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def plan4(rwkv4):
+    model, params = rwkv4
+    return build_plan(model, params, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def spec_plan(rwkv4):
+    model, params = rwkv4
+    return build_plan(model, params, prefill_chunk=4, speculative=2)
+
+
+def _refcounts(cache):
+    return [e.refcount for e in
+            list(cache._device.values()) + list(cache._host.values())]
+
+
+def _fresh_cache():
+    return PrefixCache(4, config=PrefixCacheConfig(device_slots=6,
+                                                   host_slots=6))
+
+
+def test_injector_validates_kinds_and_respects_enabled():
+    inj = ServingFaultInjector(schedule={1: [("explode", None)]})
+    with pytest.raises(ValueError):
+        inj.pop(1)
+    off = ServingFaultInjector(schedule={1: [("evict", 0)]}, enabled=False)
+    assert off.pop(1) == [] and off.fired == []
+
+
+def test_cache_probe_error_degrades_to_miss(rwkv4, plan4):
+    """An injected probe failure must not crash serving, leak a lease, or
+    poison the cache — the request prefills from scratch, still publishes
+    its boundary state, and a resubmit hits."""
+    model, _ = rwkv4
+    inj = ServingFaultInjector(schedule={1: [("cache_probe_error", None)]})
+    cache = _fresh_cache()
+    eng = ServingEngine(model, plan=plan4, max_batch=2, prefix_cache=cache,
+                        fault_injector=inj)
+    h = eng.submit([1, 2, 3, 4, 5, 6], max_new_tokens=3)
+    eng.run()
+    assert h.outcome == "finished" and len(h.tokens) == 3
+    assert eng.counters.cache_errors == 1
+    assert inj.fired == [(1, "cache_probe_error", None)]
+    cache.check_state()
+    assert all(r == 0 for r in _refcounts(cache))
+    h2 = eng.submit([1, 2, 3, 4, 9], max_new_tokens=2)
+    eng.run()
+    assert h2.outcome == "finished" and eng.counters.cache_hits == 1
+
+
+def test_forced_evict_mid_prefill_frees_the_lane(rwkv4, plan4):
+    model, _ = rwkv4
+    inj = ServingFaultInjector()
+    eng = ServingEngine(model, plan=plan4, max_batch=2, fault_injector=inj)
+    victim = eng.submit(list(range(10, 22)), max_new_tokens=5)
+    other = eng.submit([1, 2, 3], max_new_tokens=4)
+    inj.schedule[2] = [("evict", victim.rid)]   # 12-token prompt: tick 2
+    eng.run()                                   # is mid-prefill
+    assert victim.outcome == "cancelled" and victim.tokens == []
+    assert other.outcome == "finished" and len(other.tokens) == 4
+    assert eng.pool.n_free == 2
+    snap = eng.counters.snapshot()
+    assert snap["cancelled"] == 1 and snap["finished"] == 1
+
+
+def test_forced_deadline_evicts_without_a_deadline_set(rwkv4, plan4):
+    model, _ = rwkv4
+    inj = ServingFaultInjector()
+    eng = ServingEngine(model, plan=plan4, max_batch=2, fault_injector=inj)
+    victim = eng.submit([1, 2, 3, 4], max_new_tokens=20)   # no deadline_s
+    inj.schedule[2] = [("deadline", victim.rid)]
+    eng.run()
+    assert victim.outcome == "deadline"
+    assert eng.counters.deadline_evicted == 1
+    assert eng.pool.n_free == 2
+
+
+def test_evict_on_token_mid_speculation(rwkv4, spec_plan):
+    """Eviction from inside a token callback during a speculative tick:
+    the victim's drafts die with it, the tick completes, the snapshot
+    never outlives the tick, and a seeded co-resident request's stream
+    is bit-identical to a fault-free run."""
+    model, _ = rwkv4
+
+    def run(faulted):
+        inj = ServingFaultInjector() if faulted else None
+        eng = ServingEngine(model, plan=spec_plan, max_batch=2,
+                            fault_injector=inj)
+        victim = eng.submit([1, 2, 3, 4], max_new_tokens=10)
+        survivor = eng.submit([5, 6, 7], max_new_tokens=6,
+                              temperature=0.9, seed=7)
+        if faulted:
+            # tick 1 finishes both prefills; tick 2 is the first
+            # speculative tick — evict the victim from inside its own
+            # token emission there
+            inj.schedule[2] = [("evict_on_token", victim.rid)]
+        eng.run()
+        return eng, inj, victim, survivor
+
+    _, _, _, base_survivor = run(faulted=False)
+    eng, inj, victim, survivor = run(faulted=True)
+    assert inj.fired == [(2, "evict_on_token", victim.rid)]
+    assert victim.outcome == "cancelled"
+    assert 1 <= len(victim.tokens) < 10
+    assert survivor.outcome == "finished"
+    assert survivor.tokens == base_survivor.tokens
+    sched = eng.scheduler
+    assert sched._spec_snapshot is None and sched._spec_inflight == {}
+    assert sched._evict_on_token == set()
+    assert eng.pool.n_free == 2
+
+
+def test_churn_every_fault_kind_holds_invariants(rwkv4, plan4):
+    """All four fault kinds in one serving run against a prefix-cached
+    engine: the seeded survivor's stream must be bit-identical to the
+    fault-free run, and pool/cache/scheduler state must come out clean."""
+    model, _ = rwkv4
+    surv_p = [1, 2, 3, 4, 5, 6, 7]
+    v1_p, v2_p, v3_p = (list(range(10, 22)), list(range(30, 38)),
+                        list(range(40, 46)))
+
+    def run(faulted):
+        cache = _fresh_cache()
+        inj = ServingFaultInjector() if faulted else None
+        eng = ServingEngine(model, plan=plan4, max_batch=2,
+                            prefix_cache=cache, fault_injector=inj)
+        surv = eng.submit(surv_p, max_new_tokens=6, temperature=0.8,
+                          seed=11)
+        v1 = eng.submit(v1_p, max_new_tokens=6)
+        v2 = eng.submit(v2_p, max_new_tokens=6)
+        v3 = eng.submit(v3_p, max_new_tokens=6)
+        if faulted:
+            inj.schedule.update({
+                1: [("cache_probe_error", None)],   # hits surv's probe
+                2: [("evict", v1.rid)],             # v1 mid-prefill
+                3: [("evict_on_token", v2.rid)],    # v2's first token
+                4: [("deadline", v3.rid)],          # v3 still queued
+            })
+        eng.run()
+        return eng, cache, inj, surv, (v1, v2, v3)
+
+    _, _, _, base_surv, _ = run(faulted=False)
+    eng, cache, inj, surv, (v1, v2, v3) = run(faulted=True)
+    assert len(inj.fired) == 4 and not inj.schedule
+    assert surv.outcome == "finished"
+    assert surv.tokens == base_surv.tokens      # RNG-stream isolation
+    assert (v1.outcome, v2.outcome, v3.outcome) == \
+        ("cancelled", "cancelled", "deadline")
+    # pool free list fully restored, nothing queued or resident
+    assert eng.pool.n_free == 2
+    assert not eng.scheduler.slots and not eng.scheduler.queue
+    assert not eng.scheduler._queued and not eng._handles
+    # cache invariants + no leaked lease; only the finished request
+    # published its boundary state
+    cache.check_state()
+    assert all(r == 0 for r in _refcounts(cache))
+    assert cache.n_device == 1
+    snap = eng.counters.snapshot()
+    assert snap["finished"] == 1 and snap["cancelled"] == 2
+    assert snap["deadline_evicted"] == 1 and snap["cache_errors"] == 1
+    assert eng.trace_counts == {"decode": 1, "prefill": 1}

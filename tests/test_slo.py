@@ -1,0 +1,531 @@
+"""SLO-layer tests (repro.serving.slo): priority/aging/cache-aware
+admission, deadlines under a fake clock, the per-tick prefill budget
+(bit parity + traced-once), typed Overloaded backpressure, load
+shedding, overload x cancellation interplay, the run() hang watchdog,
+and the percentile telemetry in ServingCounters.
+
+Scheduler-level tests drive a FakePool + stub decode/prefill functions
+(no device work, so admission order and tick counts are exact);
+engine-level tests share one real rwkv4 ExecutionPlan."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.registry import get_model
+from repro.runtime.monitor import ServingCounters, percentile
+from repro.serving import (AdmissionPolicy, Overloaded, PrefixCache,
+                           PrefixCacheConfig, Request, Scheduler,
+                           SchedulerHang, ServingEngine, ServingSLO,
+                           build_plan)
+from repro.serving.prefix_cache import CacheVariant
+from repro.serving.scheduler import DECODE
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class FakePool:
+    """Slot bookkeeping without device state — the scheduler only needs
+    acquire/release/write/read/sync, so SLO tests can skip tracing."""
+
+    state = None
+
+    def __init__(self, n: int):
+        self.max_slots = n
+        self._free = list(range(n - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self):
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int):
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
+        self._free.append(slot)
+
+    def write_slot(self, slot, state):
+        pass
+
+    def read_slot(self, slot):
+        return np.zeros(1)
+
+    def sync(self):
+        pass
+
+
+def _stub_fns(n_slots: int, vocab: int = 5):
+    def prefill_fn(state, toks, valid, fresh):
+        return state, np.zeros((n_slots, 1, vocab), np.float32)
+
+    def decode_fn(state, toks, mask):
+        return np.zeros((n_slots, 1, vocab), np.float32), state
+
+    return decode_fn, prefill_fn
+
+
+def _sched(n_slots=1, *, chunk=4, slo=None, counters=None,
+           prefix_cache=None, cache_variant=None, finishes=None):
+    pool = FakePool(n_slots)
+    decode_fn, prefill_fn = _stub_fns(n_slots)
+    on_finish = None
+    if finishes is not None:
+        on_finish = lambda req, outcome: finishes.append((req.rid, outcome))
+    return Scheduler(pool, decode_fn, prefill_fn, prefill_chunk=chunk,
+                     counters=counters, on_finish=on_finish,
+                     prefix_cache=prefix_cache, cache_variant=cache_variant,
+                     slo=slo)
+
+
+def _req(rid, *, prompt=None, pri=0, mnt=1, deadline=None):
+    return Request(rid=rid, prompt=prompt if prompt is not None else [1],
+                   max_new_tokens=mnt, priority=pri, deadline_s=deadline)
+
+
+@pytest.fixture(scope="module")
+def rwkv4():
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def plan4(rwkv4):
+    model, params = rwkv4
+    return build_plan(model, params, prefill_chunk=4)
+
+
+class TestConfigValidation:
+    def test_admission_policy_rejects_bad_values(self):
+        with pytest.raises(ValueError):
+            AdmissionPolicy(overload="drop")
+        with pytest.raises(ValueError):
+            AdmissionPolicy(max_queue=-1)
+        with pytest.raises(ValueError):
+            AdmissionPolicy(aging_ticks=-1)
+
+    def test_slo_rejects_bad_values(self):
+        with pytest.raises(ValueError):
+            ServingSLO(prefill_budget=-1)
+        with pytest.raises(ValueError):
+            ServingSLO(default_deadline_s=0.0)
+        with pytest.raises(ValueError):
+            ServingSLO(max_idle_ticks=-1)
+
+
+class TestAdmissionOrder:
+    def test_default_slo_is_fifo(self):
+        """Equal priorities, no cache: the historical admission order."""
+        fin = []
+        sched = _sched(1, finishes=fin)
+        for rid in (0, 1, 2):
+            sched.enqueue(_req(rid))
+        sched.run()
+        assert fin == [(0, "finished"), (1, "finished"), (2, "finished")]
+
+    def test_priority_classes_order_admission(self):
+        """One slot, one admission per tick: highest class goes first,
+        ties FIFO."""
+        fin = []
+        sched = _sched(1, finishes=fin)
+        sched.enqueue(_req(0, pri=0))
+        sched.enqueue(_req(1, pri=2))
+        sched.enqueue(_req(2, pri=1))
+        sched.run()
+        assert fin == [(1, "finished"), (2, "finished"), (0, "finished")]
+
+    def test_aging_beats_a_sustained_high_priority_stream(self):
+        """A background request under a constant stream of higher-priority
+        arrivals is admitted once its aging bonus levels the classes."""
+        fin = []
+        slo = ServingSLO(admission=AdmissionPolicy(aging_ticks=3))
+        sched = _sched(1, slo=slo, finishes=fin)
+        sched.enqueue(_req(0, pri=0))
+        for t in range(1, 9):
+            sched.enqueue(_req(100 + t, pri=1))
+            sched.tick()
+            if (0, "finished") in fin:
+                break
+        assert (0, "finished") in fin and t <= 4
+
+    def test_no_aging_means_starvation(self):
+        """The control: aging_ticks=0 disables the bonus and the same
+        stream starves the background request indefinitely."""
+        fin = []
+        slo = ServingSLO(admission=AdmissionPolicy(aging_ticks=0))
+        sched = _sched(1, slo=slo, finishes=fin)
+        sched.enqueue(_req(0, pri=0))
+        for t in range(1, 9):
+            sched.enqueue(_req(100 + t, pri=1))
+            sched.tick()
+        assert (0, "finished") not in fin
+        assert any(r.rid == 0 for r in sched.queue)
+
+    def test_cache_hit_breaks_priority_ties(self):
+        """Same class, one cached prefix: the cache-hit request is
+        admitted first even though it was enqueued second."""
+        C = 4
+        cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=4,
+                                                        host_slots=4))
+        var = CacheVariant(arch="stub", quant="fp", numerics="exact",
+                           prefill="per_op")
+        hitp = [1, 2, 3, 4, 9]
+        cache.insert(var, hitp, 4, np.zeros(2), cache.digests(hitp))
+        fin = []
+        c = ServingCounters()
+        sched = _sched(1, chunk=C, prefix_cache=cache, cache_variant=var,
+                       counters=c, finishes=fin)
+        sched.enqueue(_req(0, prompt=[7, 8, 9]))
+        sched.enqueue(_req(1, prompt=list(hitp)))
+        sched.tick()
+        assert fin[0] == (1, "finished")
+        assert c.cache_hits == 1 and c.cached_tokens == 4
+        assert [r.rid for r in sched.queue] == [0]
+
+    def test_hit_length_peek_is_side_effect_free(self):
+        """Admission peeks must not move LRU order or count as probes."""
+        C = 4
+        cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=4,
+                                                        host_slots=4))
+        var = CacheVariant(arch="stub", quant="fp", numerics="exact",
+                           prefill="per_op")
+        hitp = [1, 2, 3, 4, 9]
+        cache.insert(var, hitp, 4, np.zeros(2), cache.digests(hitp))
+        before = (list(cache._device), cache.snapshot())
+        assert cache.hit_length(var, hitp) == 4
+        assert cache.hit_length(var, [1, 2, 3, 4]) == 0   # proper prefixes
+        assert cache.hit_length(var, [5, 6, 7, 8, 9]) == 0
+        assert (list(cache._device), cache.snapshot()) == before
+
+
+class TestOverload:
+    def test_backpressure_is_typed_with_hints(self):
+        c = ServingCounters()
+        slo = ServingSLO(admission=AdmissionPolicy(max_queue=2))
+        sched = _sched(1, slo=slo, counters=c)
+        sched.enqueue(_req(0))
+        sched.enqueue(_req(1))
+        with pytest.raises(Overloaded) as ei:
+            sched.enqueue(_req(2))
+        e = ei.value
+        assert e.queue_depth == 2 and e.max_queue == 2
+        assert e.retry_after_s == 0.0     # no completion: no estimate
+        assert c.backpressured == 1
+        assert len(sched.queue) == 2      # the refused request left no trace
+
+    def test_retry_after_scales_with_queue_and_service_time(self):
+        clk = FakeClock()
+        c = ServingCounters(clock=clk)
+        slo = ServingSLO(admission=AdmissionPolicy(max_queue=1))
+        sched = _sched(1, slo=slo, counters=c)
+        sched.enqueue(_req(0))
+        clk.t = 2.0
+        sched.tick()                      # rid 0 completes: latency 2.0s
+        sched.enqueue(_req(1, mnt=50))
+        sched.tick()                      # rid 1 in flight, queue empty
+        sched.enqueue(_req(2))            # queue full again
+        with pytest.raises(Overloaded) as ei:
+            sched.enqueue(_req(3))
+        # mean latency (2.0) x (queue_depth+1) / max_slots = 4.0
+        assert ei.value.retry_after_s == pytest.approx(4.0)
+
+    def test_shed_drops_strictly_less_urgent_only(self):
+        fin = []
+        c = ServingCounters()
+        slo = ServingSLO(admission=AdmissionPolicy(max_queue=2,
+                                                   overload="shed"))
+        sched = _sched(1, slo=slo, counters=c, finishes=fin)
+        sched.enqueue(_req(0, pri=0))
+        sched.enqueue(_req(1, pri=1))
+        sched.enqueue(_req(2, pri=1))     # sheds rid 0 (eff 0 < 1)
+        assert fin == [(0, "shed")]
+        assert [r.rid for r in sched.queue] == [1, 2]
+        with pytest.raises(Overloaded):   # equal classes stay FIFO-fair
+            sched.enqueue(_req(3, pri=1))
+        assert c.shed == 1 and c.backpressured == 1
+
+
+class TestDeadlines:
+    def test_queued_deadline_expires(self):
+        clk = FakeClock()
+        c = ServingCounters(clock=clk)
+        fin = []
+        sched = _sched(1, counters=c, finishes=fin)
+        sched.enqueue(_req(0, mnt=50))    # hogs the only slot
+        sched.tick()
+        sched.enqueue(_req(1, deadline=5.0))
+        clk.t += 10.0
+        sched.tick()
+        assert (1, "deadline") in fin
+        assert c.deadline_evicted == 1
+        assert not sched.queue and 1 not in sched._queued
+        sched.evict(0)
+
+    def test_inflight_deadline_frees_the_slot(self):
+        clk = FakeClock()
+        c = ServingCounters(clock=clk)
+        fin = []
+        sched = _sched(1, counters=c, finishes=fin)
+        sched.enqueue(_req(0, prompt=[1] * 8, mnt=50, deadline=5.0))
+        sched.tick()                      # admitted, mid-prefill
+        clk.t += 10.0
+        sched.tick()
+        assert fin == [(0, "deadline")]
+        assert sched.pool.n_free == 1 and not sched.slots
+
+    def test_default_deadline_applies_when_request_sets_none(self):
+        clk = FakeClock()
+        c = ServingCounters(clock=clk)
+        fin = []
+        sched = _sched(1, slo=ServingSLO(default_deadline_s=5.0),
+                       counters=c, finishes=fin)
+        sched.enqueue(_req(0, prompt=[1] * 8, mnt=50))
+        sched.tick()
+        clk.t += 10.0
+        sched.tick()
+        assert fin == [(0, "deadline")] and c.deadline_evicted == 1
+
+
+class TestPrefillBudget:
+    def test_quota_derived_from_budget(self):
+        sched = _sched(4, slo=ServingSLO(prefill_budget=4))
+        assert sched._prefill_quota == 1
+        assert _sched(4, slo=ServingSLO(prefill_budget=11))._prefill_quota \
+            == 2
+        # floor of one lane: a tiny budget can never wedge prefill
+        assert _sched(4, slo=ServingSLO(prefill_budget=1))._prefill_quota \
+            == 1
+        assert _sched(4)._prefill_quota is None
+
+    def test_budget_binds_only_while_decoding(self):
+        c = ServingCounters()
+        sched = _sched(4, slo=ServingSLO(prefill_budget=4), counters=c)
+        for rid in (0, 1, 2):
+            sched.enqueue(_req(rid, prompt=[1] * 8, mnt=1))
+        sched.tick()                      # no decode lane: unthrottled
+        assert c.budget_deferred_tokens == 0
+        assert all(m.n_prefilled == 4 for m in sched.slots.values())
+        sched.run()
+
+    def test_budget_defers_lowest_priority_lanes(self):
+        c = ServingCounters()
+        sched = _sched(4, slo=ServingSLO(prefill_budget=4), counters=c)
+        sched.enqueue(_req(0, mnt=50))    # prompt [1]: decoding from tick 1
+        sched.tick()
+        assert any(m.phase == DECODE for m in sched.slots.values())
+        sched.enqueue(_req(1, prompt=[1] * 8))
+        sched.enqueue(_req(2, prompt=[1] * 8))
+        sched.enqueue(_req(3, prompt=[1] * 8, pri=1))
+        sched.tick()
+        by_rid = {m.req.rid: m for m in sched.slots.values()}
+        # one lane per tick, highest priority first; the rest deferred
+        assert by_rid[3].n_prefilled == 4
+        assert by_rid[1].n_prefilled == by_rid[2].n_prefilled == 0
+        assert c.budget_deferred_tokens == 8
+        sched.tick()
+        assert by_rid[3].n_prefilled == 8   # same lane finishes first
+        sched.evict(0)
+        sched.run()
+        assert sched.pool.n_free == 4
+
+    def test_plan_prefill_quota_is_bucket_aware(self, plan4):
+        # chunk=4: whole chunks per lane, clamped to the batch bucket,
+        # floor of one lane; 0 = unlimited (the whole bucket)
+        assert plan4.prefill_quota(0, 8) == 8
+        assert plan4.prefill_quota(4, 3) == 1
+        assert plan4.prefill_quota(11, 3) == 2
+        assert plan4.prefill_quota(100, 3) == 3
+        assert plan4.prefill_quota(1, 3) == 1
+
+    def test_budget_bit_parity_and_traced_once(self, rwkv4):
+        """The budget changes WHEN lanes prefill, never what they compute:
+        token streams are bit-identical to the unlimited engine and the
+        program cache still holds exactly two traces."""
+        model, params = rwkv4
+        V = model.cfg.vocab
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(0, V, size=n).tolist()
+                   for n in (9, 17, 4, 12, 6)]
+
+        def run(slo):
+            eng = ServingEngine(model, params=params, max_batch=3,
+                                prefill_chunk=4, slo=slo)
+            hs = [eng.submit(p, max_new_tokens=5, temperature=0.7, seed=i)
+                  for i, p in enumerate(prompts)]
+            eng.run()
+            assert eng.trace_counts == {"decode": 1, "prefill": 1}
+            return [h.tokens for h in hs], eng
+
+        base, _ = run(ServingSLO())
+        budgeted, eng = run(ServingSLO(prefill_budget=4))
+        assert budgeted == base
+        assert eng.scheduler._prefill_quota == 1
+        assert eng.counters.budget_deferred_tokens > 0
+
+
+class TestHangGuard:
+    def test_leaked_slot_raises_diagnosable_hang(self):
+        sched = _sched(1)
+        sched.pool.acquire()              # leak the only slot
+        sched.enqueue(_req(0))
+        with pytest.raises(SchedulerHang) as ei:
+            sched.run(max_idle_ticks=5)
+        e = ei.value
+        assert (e.idle_ticks, e.queued, e.active, e.n_free) == (5, 1, 0, 0)
+        assert e.phases == {} and "no progress" in str(e)
+
+    def test_slo_default_limit_is_used(self):
+        sched = _sched(1, slo=ServingSLO(max_idle_ticks=3))
+        sched.pool.acquire()
+        sched.enqueue(_req(0))
+        with pytest.raises(SchedulerHang) as ei:
+            sched.run()
+        assert ei.value.idle_ticks == 3
+
+    def test_any_progress_resets_the_watchdog(self):
+        """A healthy run never trips even the tightest limit — every
+        tick with work makes progress."""
+        fin = []
+        sched = _sched(2, finishes=fin)
+        for rid in range(4):
+            sched.enqueue(_req(rid, prompt=[1] * 8, mnt=2))
+        sched.run(max_idle_ticks=1)
+        assert len(fin) == 4 and sched.pool.n_free == 2
+
+
+class TestEngineOverloadInterplay:
+    def test_backpressured_submit_leaves_no_handle(self, rwkv4, plan4):
+        model, _ = rwkv4
+        slo = ServingSLO(admission=AdmissionPolicy(max_queue=1))
+        eng = ServingEngine(model, plan=plan4, max_batch=2, slo=slo)
+        h1 = eng.submit([1, 2, 3], max_new_tokens=2)
+        with pytest.raises(Overloaded) as ei:
+            eng.submit([4, 5], max_new_tokens=2)
+        assert ei.value.queue_depth == 1 and ei.value.max_queue == 1
+        assert set(eng._handles) == {h1.rid}
+        eng.run()
+        assert h1.outcome == "finished" and len(h1.tokens) == 2
+        assert eng.counters.snapshot()["backpressured"] == 1
+
+    def test_shed_is_observable_and_cancel_after_shed_is_graceful(
+            self, rwkv4, plan4):
+        model, _ = rwkv4
+        slo = ServingSLO(admission=AdmissionPolicy(max_queue=1,
+                                                   overload="shed"))
+        eng = ServingEngine(model, plan=plan4, max_batch=2, slo=slo)
+        h1 = eng.submit([1, 2, 3], max_new_tokens=2)
+        h2 = eng.submit([4, 5, 6], max_new_tokens=2, priority=1)
+        assert h1.done and h1.outcome == "shed" and h1.tokens == []
+        assert eng.cancel(h1) is False    # already gone, no crash
+        eng.run()
+        assert h2.outcome == "finished" and len(h2.tokens) == 2
+        assert eng.counters.snapshot()["shed"] == 1
+
+    def test_cancel_while_queued(self, rwkv4, plan4):
+        model, _ = rwkv4
+        eng = ServingEngine(model, plan=plan4, max_batch=2)
+        h1 = eng.submit([1, 2, 3], max_new_tokens=3)
+        h2 = eng.submit([4, 5], max_new_tokens=3)
+        h3 = eng.submit([6, 7, 8], max_new_tokens=3)
+        eng.step()                        # h1/h2 in flight, h3 queued
+        assert eng.cancel(h3) is True
+        assert h3.done and h3.outcome == "cancelled" and h3.tokens == []
+        eng.run()
+        assert h1.outcome == h2.outcome == "finished"
+        assert eng.pool.n_free == 2
+
+    def test_deadline_evicts_a_cache_resumed_lane(self, rwkv4, plan4):
+        """A lane resumed from a prefix-cache hit that then exceeds its
+        deadline must release slot AND cache cleanly: no leaked lease,
+        cache invariants intact, no pending-insert pollution."""
+        model, _ = rwkv4
+        clk = FakeClock()
+        cache = PrefixCache(4, config=PrefixCacheConfig(device_slots=8,
+                                                        host_slots=8))
+        eng = ServingEngine(model, plan=plan4, max_batch=2,
+                            prefix_cache=cache,
+                            counters=ServingCounters(clock=clk))
+        base = [1, 2, 3, 4, 5, 6, 7, 8]
+        h0 = eng.submit(base, max_new_tokens=3)
+        eng.run()
+        assert h0.outcome == "finished" and cache.n_device > 0
+        n_inserts = eng.counters.cache_inserts
+        h = eng.submit(base + [9, 10], max_new_tokens=30, deadline_s=5.0)
+        eng.step()                        # admitted via cache-hit restore
+        assert eng.counters.cache_hits == 1
+        clk.t += 10.0
+        eng.step()
+        assert h.done and h.outcome == "deadline"
+        eng.run()
+        assert eng.pool.n_free == 2
+        cache.check_state()
+        assert all(e.refcount == 0 for e in
+                   list(cache._device.values()) + list(cache._host.values()))
+        snap = eng.counters.snapshot()
+        assert snap["deadline_evicted"] == 1
+        # an evicted lane publishes nothing
+        assert eng.counters.cache_inserts == n_inserts
+
+
+class TestTelemetry:
+    def test_percentile_nearest_rank(self):
+        xs = list(range(1, 101))
+        assert percentile(xs, 0.50) == 50
+        assert percentile(xs, 0.90) == 90
+        assert percentile(xs, 0.99) == 99
+        assert percentile(xs, 1.00) == 100
+        assert percentile([], 0.99) == 0.0
+        assert percentile([7.0], 0.5) == 7.0
+        assert percentile([3, 1, 2], 0.5) == 2   # sorts, rank 2 of 3
+
+    def test_ttft_itl_percentiles_under_fake_clock(self):
+        clk = FakeClock()
+        c = ServingCounters(clock=clk)
+        c.on_enqueue(0)
+        clk.t = 1.0
+        c.on_token(0, first=True)         # TTFT 1.0s
+        clk.t = 2.0
+        c.on_token(0)                     # ITL 1.0s
+        clk.t = 4.0
+        c.on_token(0)                     # ITL 2.0s
+        c.on_finish(0)
+        snap = c.snapshot()
+        assert snap["ttft_p99_s"] == 1.0
+        assert snap["itl_p50_s"] == 1.0 and snap["itl_p99_s"] == 2.0
+        assert snap["mean_itl_s"] == pytest.approx(1.5)
+        assert snap["latency_p99_s"] == 4.0
+        assert not c._last_token_t        # finish cleans per-rid state
+
+    def test_outcome_counters_surface_in_snapshot(self):
+        c = ServingCounters()
+        c.on_enqueue(3)
+        c.on_shed(3)
+        c.on_deadline_evict(2)
+        c.on_backpressure()
+        c.on_cache_error()
+        c.on_budget_defer(8)
+        snap = c.snapshot()
+        assert snap["shed"] == 1
+        assert snap["deadline_evicted"] == 1
+        assert snap["backpressured"] == 1
+        assert snap["cache_errors"] == 1
+        assert snap["budget_deferred_tokens"] == 8
+        # shed dropped rid 3's tracking: no stale latency state
+        assert 3 not in c._enqueue_t and 3 not in c._last_token_t
+
+    def test_occupancy_means(self):
+        c = ServingCounters()
+        c.on_tick(active=2, queued=4)
+        c.on_tick(active=4, queued=0)
+        snap = c.snapshot()
+        assert snap["mean_active_slots"] == 3.0
+        assert snap["mean_queue_depth"] == 2.0
+        assert snap["peak_active_slots"] == 4
+        assert snap["peak_queue_depth"] == 4
