@@ -19,10 +19,27 @@ on real accelerators.
 mesh (the slot pool and per-tick batch shard, weights replicate) —
 `--smoke` shrinks the sweep to one batch size for CI, which runs this
 under XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+Two crash-safety checks ride along (repro.serving.snapshot):
+
+  * `--json` measures the tick-boundary snapshot overhead at batch 8
+    (engine tokens/s with snapshot-every=8 vs without, gate >= 0.95x)
+    and merges a "snapshot" section into BENCH_serving.json — the SLO
+    bench owns that file, so this is a read-modify-write.
+  * `--crash-smoke` SIGKILLs a child engine mid-run (`--crash-child` is
+    the child entry point), restores from the last committed snapshot
+    and asserts every request's concatenated pre-crash + post-restore
+    stream is bit-identical to a never-crashed oracle.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -31,12 +48,21 @@ import numpy as np
 
 from repro.launch.serve import greedy_decode
 from repro.models.registry import get_model
-from repro.serving import ServingEngine
-from benchmarks.common import emit
+from repro.serving import ServingEngine, SnapshotConfig
+from benchmarks.common import emit, provenance
 
 ARCH = "rwkv4-169m"
 PROMPT_LEN = 8
 N_TOKENS = 16
+JSON_PATH = "BENCH_serving.json"
+
+# --crash-smoke geometry: snapshot every 4 ticks, SIGKILL at tick 10, so
+# the child dies with a committed step_00000008 behind it and every lane
+# mid-stream (24 new tokens per request, mixed greedy/sampled)
+CRASH_TICK = 10
+CRASH_EVERY = 4
+CRASH_BATCH = 4
+CRASH_TOKENS = 24
 
 
 def _prompts(n: int, vocab: int, seed: int = 0):
@@ -68,10 +94,11 @@ def seed_loop_tokens_per_s(model, params, prompts) -> float:
     return len(prompts) * N_TOKENS / dt
 
 
-def engine_tokens_per_s(model, params, prompts,
-                        mesh=None) -> tuple[float, dict]:
+def engine_tokens_per_s(model, params, prompts, mesh=None,
+                        snapshot=None) -> tuple[float, dict]:
     engine = ServingEngine(model, params=params, max_batch=len(prompts),
-                           prefill_chunk=PROMPT_LEN, mesh=mesh)
+                           prefill_chunk=PROMPT_LEN, mesh=mesh,
+                           snapshot=snapshot)
     # compile both device programs outside the timed region
     warm = engine.submit(prompts[0], max_new_tokens=2)
     engine.run()
@@ -85,10 +112,146 @@ def engine_tokens_per_s(model, params, prompts,
         engine.submit(p, max_new_tokens=N_TOKENS)
     snap = engine.run()
     dt = time.perf_counter() - t0
+    if engine.snapshot_manager is not None:
+        # drain the async writer outside the timed region: the gate is
+        # about steady-state capture overhead, not flush latency
+        engine.snapshot_manager.wait()
+        snap = engine.counters.snapshot()
     return snap["decode_tokens"] / dt, snap
 
 
-def run(*, smoke: bool = False, devices: int | None = None):
+def snapshot_overhead(model, params, mesh=None, tag: str = "",
+                      json_out: bool = False, smoke: bool = False) -> bool:
+    """Tick-boundary snapshot cost at batch 8: engine tokens/s with
+    snapshot-every=8 vs without — interleaved best-of-5 pairs, because
+    run-to-run noise on shared CPU runners (±15%) swamps the ~1ms/interval
+    snapshot cost at a 1.6ms smoke tick.  The synchronous capture cost is
+    the recorded snapshot_wall_s; the rest of any measured gap is the
+    background writer competing for host cores, which a real accelerator
+    deployment doesn't see.  Merges a "snapshot" section into
+    BENCH_serving.json — bench_serving_slo owns the file's top-level
+    records/gates, which this must not clobber."""
+    prompts = _prompts(8, model.cfg.vocab)
+    base_tps, snap_tps, counters = 0.0, 0.0, {}
+    for _ in range(5):
+        base_tps = max(base_tps,
+                       engine_tokens_per_s(model, params, prompts, mesh)[0])
+        with tempfile.TemporaryDirectory() as d:
+            tps, c = engine_tokens_per_s(
+                model, params, prompts, mesh,
+                snapshot=SnapshotConfig(directory=d, every=8))
+        if tps > snap_tps:
+            snap_tps, counters = tps, c
+    ratio = snap_tps / max(base_tps, 1e-9)
+    gate = {"value": ratio, "threshold": 0.95, "pass": ratio >= 0.95}
+    emit(f"serving/{ARCH}{tag}/snapshot_overhead", 1e6 / max(snap_tps, 1e-9),
+         f"base_tok_s={base_tps:.1f};snap_tok_s={snap_tps:.1f};"
+         f"ratio={ratio:.3f};"
+         f"snapshots_written={counters['snapshots_written']};"
+         f"snapshot_wall_ms={counters['snapshot_wall_s']*1e3:.2f};"
+         f"gate={'PASS' if gate['pass'] else 'FAIL'}")
+    if json_out:
+        payload = {}
+        if os.path.exists(JSON_PATH):
+            with open(JSON_PATH) as f:
+                payload = json.load(f)
+        payload["snapshot"] = {
+            "arch": ARCH,
+            "batch": 8,
+            "n_tokens": N_TOKENS,
+            "every": 8,
+            "provenance": provenance(),
+            "records": [{
+                "base_tok_s": base_tps, "snap_tok_s": snap_tps,
+                "overhead_ratio": ratio,
+                "snapshots_written": counters["snapshots_written"],
+                "snapshot_wall_s": counters["snapshot_wall_s"],
+            }],
+            "gates": {"snapshot_overhead_vs_plain": gate},
+        }
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"merged snapshot section into {JSON_PATH}", flush=True)
+    # CI smoke pins the script + JSON schema, not shared-runner timing
+    return gate["pass"] or smoke
+
+
+def _crash_submit(engine, prompts):
+    """Same submission schedule in the child, the restored engine's past
+    and the oracle: even lanes greedy, odd lanes seeded-sampled, so the
+    parity check covers both token-selection paths."""
+    return [engine.submit(p, max_new_tokens=CRASH_TOKENS,
+                          temperature=(0.8 if i % 2 else 0.0), seed=7 + i)
+            for i, p in enumerate(prompts)]
+
+
+def crash_child(directory: str):
+    """`--crash-child` entry: serve with snapshots every 4 ticks and a
+    fault injector that SIGKILLs the process at tick 10.  Never returns."""
+    from repro.runtime.monitor import ServingFaultInjector
+    model = get_model(ARCH, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    inj = ServingFaultInjector(
+        schedule={CRASH_TICK: [("crash_at_tick", "sigkill")]})
+    engine = ServingEngine(
+        model, params=params, max_batch=CRASH_BATCH,
+        prefill_chunk=PROMPT_LEN, fault_injector=inj,
+        snapshot=SnapshotConfig(directory=directory, every=CRASH_EVERY))
+    _crash_submit(engine, _prompts(CRASH_BATCH, model.cfg.vocab))
+    engine.run()
+    raise SystemExit("crash child survived its own SIGKILL fault")
+
+
+def crash_smoke() -> bool:
+    """`--crash-smoke`: SIGKILL a child engine mid-run, restore from its
+    last committed snapshot, drain, and assert every request's
+    `resumed + tokens` stream is bit-identical to a never-crashed
+    in-process oracle."""
+    model = get_model(ARCH, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts = _prompts(CRASH_BATCH, model.cfg.vocab)
+    oracle_engine = ServingEngine(model, params=params,
+                                  max_batch=CRASH_BATCH,
+                                  prefill_chunk=PROMPT_LEN)
+    oracle_handles = _crash_submit(oracle_engine, prompts)
+    oracle_engine.run()
+    oracle = {h.rid: list(h.tokens) for h in oracle_handles}
+
+    with tempfile.TemporaryDirectory() as d:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_serving",
+             "--crash-child", d])
+        if proc.returncode != -signal.SIGKILL:
+            print(f"crash child exited rc={proc.returncode}, "
+                  f"expected {-signal.SIGKILL}", flush=True)
+            return False
+        t0 = time.perf_counter()
+        engine = ServingEngine.restore(d, params=params)
+        handles = engine.handles          # run() pops them as lanes finish
+        snap = engine.run()
+        if engine.snapshot_manager is not None:
+            engine.snapshot_manager.wait()
+        dt = time.perf_counter() - t0
+    streams = {rid: h.resumed + h.tokens for rid, h in handles.items()}
+    parity = streams == oracle
+    emit(f"serving/{ARCH}/crash_recovery", dt * 1e6,
+         f"rc={-signal.SIGKILL};restores={snap['restores']};"
+         f"resumed_lanes={snap['resumed_lanes']};"
+         f"quarantined_lanes={snap['quarantined_lanes']};"
+         f"checksum_failures={snap['checksum_failures']};"
+         f"path_fallbacks={snap['path_fallbacks']};"
+         f"parity={'PASS' if parity else 'FAIL'}")
+    if not parity:
+        for rid in oracle:
+            if streams.get(rid) != oracle[rid]:
+                print(f"rid {rid}: resumed+restored {streams.get(rid)} "
+                      f"!= oracle {oracle[rid]}", flush=True)
+    return parity
+
+
+def run(*, smoke: bool = False, devices: int | None = None,
+        json_out: bool = False) -> bool:
     model = get_model(ARCH, smoke=True)
     params = model.init_params(jax.random.PRNGKey(0))
     mesh = None
@@ -107,6 +270,11 @@ def run(*, smoke: bool = False, devices: int | None = None):
              f"mean_ttft_ms={snap['mean_ttft_s']*1e3:.1f};"
              f"mean_prefill_ms={snap['mean_prefill_s']*1e3:.1f};"
              f"mean_prefill_ticks={snap['mean_prefill_ticks']:.1f}")
+    ok = True
+    if json_out:
+        ok = snapshot_overhead(model, params, mesh, tag,
+                               json_out=True, smoke=smoke)
+    return ok
 
 
 if __name__ == "__main__":
@@ -116,5 +284,18 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=None,
                     help="drive the engine on a data-parallel serving "
                          "mesh over N local devices (0 = all visible)")
+    ap.add_argument("--json", action="store_true",
+                    help="measure snapshot overhead and merge a "
+                         f"'snapshot' section into {JSON_PATH}")
+    ap.add_argument("--crash-smoke", action="store_true",
+                    help="SIGKILL a child engine mid-run, restore, and "
+                         "check stream parity vs a never-crashed oracle")
+    ap.add_argument("--crash-child", metavar="DIR", default=None,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
-    run(smoke=args.smoke, devices=args.devices)
+    if args.crash_child:
+        crash_child(args.crash_child)
+    if args.crash_smoke:
+        raise SystemExit(0 if crash_smoke() else 1)
+    raise SystemExit(0 if run(smoke=args.smoke, devices=args.devices,
+                              json_out=args.json) else 1)

@@ -20,6 +20,16 @@ Fault-tolerance contract:
   * async: `AsyncCheckpointer` snapshots device arrays to host memory
     synchronously (cheap) and does the file I/O on a background thread, so
     training never blocks on disk.
+
+Serving-shaped trees (repro.serving.snapshot) stressed two corners the
+training path never hit, both fixed here: leaves roundtrip with their
+EXACT dtype (np.load forgets extension dtypes like bfloat16 — the
+manifest dtype string is authoritative and mismatches are view-cast
+back; uint8 Δ-PoT code planes pass through untouched), and python
+scalar leaves (ints/floats/bools in host bookkeeping trees) come back
+as the same python type, not 0-d arrays.  A checkpoint may also carry a
+JSON `meta` blob (stored in MANIFEST.json) for host state that is not
+an array — `load_manifest` reads it back without needing a `like` tree.
 """
 from __future__ import annotations
 
@@ -46,8 +56,22 @@ def _flatten_with_keys(tree):
     return out, treedef
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> str:
-    """Blocking sharded save. Returns the final checkpoint path."""
+def _resolve_dtype(name: str) -> np.dtype:
+    """Manifest dtype string -> numpy dtype, including the ml_dtypes
+    extension types (bfloat16, float8_*) numpy cannot parse by name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *,
+                    meta: Any = None) -> str:
+    """Blocking sharded save. Returns the final checkpoint path.
+    `meta` (JSON-serializable) is stored inside MANIFEST.json — host-side
+    bookkeeping that rides along with the array tree (the serving
+    snapshot layer keeps scheduler/RNG/counter state there)."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = os.path.join(directory, f".tmp-step_{step:08d}")
@@ -55,12 +79,17 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat, _ = _flatten_with_keys(tree)
-    manifest = {"step": step, "leaves": []}
+    manifest = {"step": step, "leaves": [], "meta": meta}
     for key, leaf in flat:
         arr = np.asarray(jax.device_get(leaf))
+        # python scalars arrive as 0-d arrays; remember the python type so
+        # restore can hand back an int, not a numpy 0-d (exact roundtrip)
+        scalar = (type(leaf).__name__
+                  if isinstance(leaf, (bool, int, float)) else None)
         np.save(os.path.join(tmp, f"{key}.npy"), arr)
         manifest["leaves"].append(
-            {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            {"key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+             "scalar": scalar})
     with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, "COMMIT"), "w") as f:
@@ -69,6 +98,20 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
         shutil.rmtree(final)
     os.rename(tmp, final)
     return final
+
+
+def load_manifest(directory: str, step: int) -> dict:
+    """The committed checkpoint's MANIFEST.json (step, per-leaf records,
+    and the `meta` blob).  Refuses uncommitted/torn directories — a
+    `.tmp-step_X` left by a crash mid-write, or a step dir without its
+    COMMIT marker, is never readable state."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMIT")):
+        raise FileNotFoundError(
+            f"no committed checkpoint at {path} (missing COMMIT marker — "
+            "uncommitted or torn write)")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -88,8 +131,8 @@ def restore_checkpoint(directory: str, step: int, like: Any, *,
     ShapeDtypeStructs).  With mesh+axes, device-put each leaf with the
     sharding derived for the NEW mesh — the elastic-resharding path."""
     path = os.path.join(directory, f"step_{step:08d}")
-    if not os.path.exists(os.path.join(path, "COMMIT")):
-        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    manifest = load_manifest(directory, step)
+    records = {r["key"]: r for r in manifest["leaves"]}
     flat_like, treedef = _flatten_with_keys(like)
     leaves = []
     shardings = None
@@ -98,11 +141,39 @@ def restore_checkpoint(directory: str, step: int, like: Any, *,
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), like), mesh)
         shardings = [s for _, s in _flatten_with_keys(sh_tree)[0]]
     for i, (key, ref) in enumerate(flat_like):
-        arr = np.load(os.path.join(path, f"{key}.npy"))
+        rec = records.get(key)
+        if rec is None:
+            raise KeyError(
+                f"checkpoint leaf {key!r} missing from the manifest at "
+                f"{path} — the saved tree had a different structure")
+        try:
+            arr = np.load(os.path.join(path, f"{key}.npy"))
+        except FileNotFoundError as e:
+            raise FileNotFoundError(
+                f"checkpoint leaf {key!r}: file missing at {path} "
+                f"(manifest lists it — torn/corrupt checkpoint)") from e
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint leaf {key!r}: unreadable/corrupt .npy at "
+                f"{path}: {e}") from e
+        # np.load forgets extension dtypes (bfloat16 comes back as a raw
+        # |V2 void view) — the manifest dtype is authoritative
+        want = _resolve_dtype(rec["dtype"])
+        if arr.dtype != want:
+            arr = arr.view(want) if arr.dtype.itemsize == want.itemsize \
+                else arr.astype(want)
+        if rec.get("scalar") or not hasattr(ref, "shape"):
+            # python scalar leaf: same value, same python type (prefer the
+            # type recorded at save; fall back to the like-tree's)
+            py = {"bool": bool, "int": int, "float": float}.get(
+                rec.get("scalar") or type(ref).__name__, float)
+            leaves.append(py(arr.item()))
+            continue
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"{key}: checkpoint shape {arr.shape} != model {ref.shape}")
-        arr = arr.astype(ref.dtype)
+        if arr.dtype != ref.dtype:
+            arr = arr.astype(ref.dtype)
         if shardings is not None:
             leaves.append(jax.device_put(arr, shardings[i]))
         else:
@@ -127,14 +198,15 @@ class AsyncCheckpointer:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def save(self, step: int, tree: Any):
+    def save(self, step: int, tree: Any, *, meta: Any = None):
         self.wait()
         host_tree = jax.tree_util.tree_map(
-            lambda x: np.asarray(jax.device_get(x)), tree)
+            lambda x: np.asarray(jax.device_get(x))
+            if not isinstance(x, (bool, int, float)) else x, tree)
 
         def work():
             try:
-                save_checkpoint(self.directory, step, host_tree)
+                save_checkpoint(self.directory, step, host_tree, meta=meta)
                 self._prune()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e

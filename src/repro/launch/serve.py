@@ -11,7 +11,9 @@ TTFT, latency) from `runtime.monitor.ServingCounters`.
         [--prefix-cache [--prefix-cache-slots N]] \
         [--speculative K [--draft-depth D]] \
         [--max-queue N [--overload backpressure|shed]] \
-        [--prefill-budget T] [--deadline S]
+        [--prefill-budget T] [--deadline S] \
+        [--snapshot-dir DIR [--snapshot-every N] [--resume] \
+         [--supervise [--max-restarts K]]] [--sentinel-every N]
 
 Every flag combination resolves to ONE `repro.serving.plan.ExecutionPlan`
 (path selection + one-pass param prep + program cache + mesh placement);
@@ -153,7 +155,9 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           cache_host_slots: int = 256, speculative: int | None = None,
           draft_depth: int | None = None, max_queue: int = 0,
           overload: str = "backpressure", prefill_budget: int = 0,
-          deadline_s: float | None = None):
+          deadline_s: float | None = None, snapshot_dir: str | None = None,
+          snapshot_every: int = 8, sentinel_every: int = 0,
+          resume: bool = False):
     """Continuous-batching serving: `batch` concurrent requests through the
     slotted engine; prints the telemetry snapshot and returns the handles.
     `devices` (0 = all visible) serves data-parallel over a ("data",)
@@ -163,10 +167,42 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     hit path is actually exercised (docs/serving.md §prefix cache).
     `max_queue`/`overload`/`prefill_budget`/`deadline_s` configure the
     SLO layer (docs/serving.md §"SLOs and overload"); the defaults keep
-    the historical unbounded/unlimited behavior."""
+    the historical unbounded/unlimited behavior.
+
+    Crash safety (docs/operations.md): `snapshot_dir` makes the engine
+    write a tick-boundary snapshot every `snapshot_every` ticks;
+    `resume=True` restores the newest committed snapshot from that
+    directory (falling back to a fresh start when none exists — e.g. a
+    crash before the first snapshot boundary) and drives the restored
+    work to completion, streams continuing bit-identically.
+    `sentinel_every` turns on the NaN/Inf lane sentinels."""
     from repro.launch.mesh import make_serving_mesh
     from repro.serving import (AdmissionPolicy, Overloaded,
-                               PrefixCacheConfig, ServingEngine, ServingSLO)
+                               PrefixCacheConfig, ServingEngine,
+                               ServingSLO, SnapshotConfig)
+
+    if resume and snapshot_dir:
+        try:
+            engine = ServingEngine.restore(snapshot_dir)
+        except FileNotFoundError:
+            print(f"no committed snapshot under {snapshot_dir!r} — "
+                  "starting fresh")
+        else:
+            handles = list(engine._handles.values())
+            print(f"resumed {len(handles)} request(s) from "
+                  f"{snapshot_dir!r} at tick "
+                  f"{engine.scheduler._tick_no}")
+            snap = engine.run()
+            if engine.snapshot_manager is not None:
+                engine.snapshot_manager.wait()
+            done = sum(len(h.resumed) + len(h.tokens) for h in handles)
+            print(f"{arch}: resumed run drained — {done} total tokens "
+                  f"across {len(handles)} stream(s) "
+                  f"(resumed + continued, bit-identical)")
+            for k, v in snap.items():
+                print(f"  {k}: {v:.3f}" if isinstance(v, float)
+                      else f"  {k}: {v}")
+            return handles
 
     mesh = None
     if devices is not None:
@@ -186,7 +222,11 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
                            fused_decode=fused or False,
                            fused_prefill=fused_prefill, seed=seed,
                            speculative=speculative, draft_depth=draft_depth,
-                           mesh=mesh, prefix_cache=cache_cfg, slo=slo)
+                           mesh=mesh, prefix_cache=cache_cfg, slo=slo,
+                           snapshot=None if snapshot_dir is None else
+                           SnapshotConfig(directory=snapshot_dir,
+                                          every=snapshot_every),
+                           sentinel_every=sentinel_every)
     cfg = engine.model.cfg
     rng = np.random.default_rng(seed)
     # with the cache on, share one "system prompt" across all requests so
@@ -216,6 +256,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
             rejected += 1
             print(f"backpressured: {exc}")
     snap = engine.run()
+    if engine.snapshot_manager is not None:
+        engine.snapshot_manager.wait()
     if rejected:
         print(f"{rejected}/{batch} submissions backpressured "
               f"(--max-queue {max_queue}, --overload {overload})")
@@ -232,6 +274,33 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
             print(f"  {k}: {v:.3f}" if isinstance(v, float)
                   else f"  {k}: {v}")
     return handles
+
+
+def supervise(argv: list[str], *, max_restarts: int = 3) -> int:
+    """Restart-and-resume supervisor (docs/operations.md §supervisor):
+    run the serve CLI in a child process; on ANY abnormal exit — an
+    injected crash, a SIGKILL, an OOM kill — relaunch it with `--resume`
+    so it restores the newest committed snapshot and continues every
+    stream bit-identically.  A crash before the first snapshot boundary
+    resumes as a fresh start (serve's `--resume` falls back).  Gives up
+    after `max_restarts` abnormal exits and returns the child's code."""
+    import subprocess
+    import sys
+    args = [a for a in argv if a != "--supervise"]
+    for attempt in range(max_restarts + 1):
+        rc = subprocess.call([sys.executable, "-m", "repro.launch.serve",
+                              *args])
+        if rc == 0:
+            return 0
+        if attempt == max_restarts:
+            print(f"supervisor: giving up after {max_restarts} restarts "
+                  f"(last rc={rc})")
+            return rc
+        print(f"supervisor: serve exited rc={rc}; restarting with "
+              f"--resume ({attempt + 1}/{max_restarts})")
+        if "--resume" not in args:
+            args.append("--resume")
+    return rc
 
 
 def main():
@@ -297,6 +366,27 @@ def main():
                          "deadline-exceeded requests are evicted with "
                          "outcome 'deadline' (state slot freed, nothing "
                          "leaked)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="crash safety: write a tick-boundary engine "
+                         "snapshot into DIR every --snapshot-every ticks "
+                         "(atomic commits, async writes; serving/"
+                         "snapshot.py, docs/operations.md)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="snapshot cadence in scheduler ticks")
+    ap.add_argument("--sentinel-every", type=int, default=0,
+                    help="NaN/Inf lane sentinel sweep every N ticks "
+                         "(0 = off): poisoned lanes are quarantined and "
+                         "their requests requeued for a clean replay")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest committed snapshot from "
+                         "--snapshot-dir and continue every stream "
+                         "bit-identically (fresh start when none exists)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="restart-and-resume supervisor: run serve in a "
+                         "child process and relaunch it with --resume on "
+                         "any abnormal exit (needs --snapshot-dir)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervisor restart budget")
     ap.add_argument("--devices", type=int, default=None,
                     help="serve data-parallel over N local devices (the "
                          "slot pool and per-tick batch shard over a "
@@ -311,6 +401,13 @@ def main():
     ap.add_argument("--hw-numerics", action="store_true",
                     help="paper LUT/PWL numerics (rwkv4; implies --legacy)")
     args = ap.parse_args()
+    if args.supervise:
+        import sys
+        if not args.snapshot_dir:
+            ap.error("--supervise needs --snapshot-dir (nothing to "
+                     "resume from otherwise)")
+        raise SystemExit(supervise(sys.argv[1:],
+                                   max_restarts=args.max_restarts))
     if args.legacy or args.hw_numerics:
         serve_legacy(args.arch, smoke=args.smoke, batch=args.batch,
                      n_tokens=args.tokens, quantized=args.quantized,
@@ -328,7 +425,9 @@ def main():
               speculative=args.speculative, draft_depth=args.draft_depth,
               max_queue=args.max_queue, overload=args.overload,
               prefill_budget=args.prefill_budget,
-              deadline_s=args.deadline)
+              deadline_s=args.deadline, snapshot_dir=args.snapshot_dir,
+              snapshot_every=args.snapshot_every,
+              sentinel_every=args.sentinel_every, resume=args.resume)
 
 
 if __name__ == "__main__":

@@ -30,8 +30,20 @@ that policy, testable in-process via FailureInjector.
   ServingFaultInjector — tick-indexed fault schedule for the serving
                       scheduler (cache-probe failures, forced evictions —
                       including from inside a token callback, i.e. mid-
-                      speculation — and forced deadline expiry)
+                      speculation — forced deadline expiry, and the
+                      crash-safety drills: in-process/SIGKILL crashes,
+                      torn snapshot writes, poisoned state lanes)
+  DegradedMode      — typed telemetry event for an automatic path
+                      fallback (a repeatedly-faulting fused decode or
+                      prefill path demoted to its per-op twin)
+  EngineCrash       — the injected in-process crash (crash_at_tick)
   TrainingSupervisor— retry-with-restore driver around a step function
+
+`ServingCounters` also exposes `state_dict()`/`load_state()` so the
+serving snapshot layer (repro.serving.snapshot) can carry telemetry
+across a crash: a restored engine's counters continue from the
+snapshot, with per-request wall-clock anchors rebased onto the new
+process's clock.
 """
 from __future__ import annotations
 
@@ -114,6 +126,18 @@ class ServingCounters:
         self.backpressured = 0
         self.cache_errors = 0
         self.budget_deferred_tokens = 0
+        # crash-safety telemetry (repro.serving.snapshot): snapshot writes
+        # and their synchronous capture wall time, restores and the lanes
+        # they resumed, sentinel quarantines, integrity-checksum failures,
+        # and fused-path demotions (with their typed DegradedMode events)
+        self.snapshots_written = 0
+        self.snapshot_wall_s: list[float] = []
+        self.restores = 0
+        self.resumed_lanes = 0
+        self.quarantined_lanes = 0
+        self.checksum_failures = 0
+        self.path_fallbacks = 0
+        self.degraded_events: list[dict] = []
         # occupancy accumulators: mean active lanes / queue depth per tick
         # give the bench its latency-vs-occupancy axis
         self._active_sum = 0
@@ -240,6 +264,38 @@ class ServingCounters:
         to a later tick (lanes left out of this tick's prefill call)."""
         self.budget_deferred_tokens += n_tokens
 
+    def on_snapshot(self, wall_s: float):
+        """One engine snapshot committed to the store; `wall_s` is the
+        SYNCHRONOUS capture time (host copies + checksum verify — the part
+        decode actually waits on; the file write is async)."""
+        self.snapshots_written += 1
+        self.snapshot_wall_s.append(wall_s)
+
+    def on_restore(self, *, resumed_lanes: int):
+        """The engine was rebuilt from a snapshot, resuming
+        `resumed_lanes` in-flight/queued requests."""
+        self.restores += 1
+        self.resumed_lanes += resumed_lanes
+
+    def on_quarantine(self, rid: int):
+        """A NaN/Inf state sentinel quarantined `rid`'s lane; the request
+        is re-enqueued for a deterministic replay (its per-rid latency
+        anchors reset with it — the requeue re-arms them)."""
+        self.quarantined_lanes += 1
+        self._drop(rid)
+
+    def on_checksum_failure(self, n: int = 1):
+        """Integrity sentinels found `n` corrupt weight planes."""
+        self.checksum_failures += n
+
+    def on_path_fallback(self, event):
+        """A repeatedly-faulting fused path was demoted to its per-op
+        twin; `event` is the typed `DegradedMode` record."""
+        self.path_fallbacks += 1
+        self.degraded_events.append(dataclasses.asdict(event)
+                                    if dataclasses.is_dataclass(event)
+                                    else dict(event))
+
     def on_tick(self, *, active: int, queued: int):
         self.ticks += 1
         self.peak_active = max(self.peak_active, active)
@@ -302,7 +358,69 @@ class ServingCounters:
             "rejected_tokens": self.rejected_tokens,
             "acceptance_rate": self.accepted_tokens / self.drafted_tokens
                 if self.drafted_tokens else 0.0,
+            "snapshots_written": self.snapshots_written,
+            "snapshot_wall_s": mean(self.snapshot_wall_s),
+            "restores": self.restores,
+            "resumed_lanes": self.resumed_lanes,
+            "quarantined_lanes": self.quarantined_lanes,
+            "checksum_failures": self.checksum_failures,
+            "path_fallbacks": self.path_fallbacks,
         }
+
+    # -- snapshot/restore (repro.serving.snapshot) -------------------------
+
+    _COUNTER_FIELDS = (
+        "prefill_tokens", "decode_tokens", "ticks", "admitted", "finished",
+        "cancelled", "peak_active", "peak_queued", "cache_hits",
+        "cache_misses", "cache_inserts", "cache_evictions", "cache_spills",
+        "cached_tokens", "drafted_tokens", "accepted_tokens",
+        "rejected_tokens", "spec_ticks", "shed", "deadline_evicted",
+        "backpressured", "cache_errors", "budget_deferred_tokens",
+        "snapshots_written", "restores", "resumed_lanes",
+        "quarantined_lanes", "checksum_failures", "path_fallbacks",
+        "_active_sum", "_queued_sum")
+    _LIST_FIELDS = (
+        "ttft_s", "latency_s", "prefill_ticks", "prefill_s",
+        "cache_probe_s", "state_copy_s", "itl_s", "snapshot_wall_s",
+        "degraded_events")
+    _TIME_DICT_FIELDS = (    # rid -> absolute clock time, rebased on load
+        "_enqueue_t", "_admit_t", "_last_token_t")
+
+    def state_dict(self) -> dict:
+        """Everything `load_state` needs to continue this telemetry in a
+        NEW process: plain JSON.  Absolute clock anchors (the per-rid
+        enqueue/admit/last-token times and the run start) are stored as
+        seconds-before-capture, so a restore on a different monotonic
+        clock keeps elapsed/latency math consistent."""
+        now = self._clock()
+        out = {f: getattr(self, f) for f in self._COUNTER_FIELDS}
+        out.update({f: list(getattr(self, f)) for f in self._LIST_FIELDS})
+        out["elapsed_s"] = now - self.t_start
+        for f in self._TIME_DICT_FIELDS:
+            out[f] = {str(rid): now - t
+                      for rid, t in getattr(self, f).items()}
+        out["_prefill_ticks"] = {str(r): n
+                                 for r, n in self._prefill_ticks.items()}
+        out["_admit_overhead"] = {str(r): v
+                                  for r, v in self._admit_overhead.items()}
+        return out
+
+    def load_state(self, state: dict):
+        """Install a `state_dict` capture, rebasing clock anchors onto
+        this counters object's own clock."""
+        now = self._clock()
+        for f in self._COUNTER_FIELDS:
+            setattr(self, f, state[f])
+        for f in self._LIST_FIELDS:
+            setattr(self, f, list(state[f]))
+        self.t_start = now - state["elapsed_s"]
+        for f in self._TIME_DICT_FIELDS:
+            setattr(self, f, {int(r): now - ago
+                              for r, ago in state[f].items()})
+        self._prefill_ticks = {int(r): n
+                               for r, n in state["_prefill_ticks"].items()}
+        self._admit_overhead = {int(r): v
+                                for r, v in state["_admit_overhead"].items()}
 
 
 class HeartbeatMonitor:
@@ -373,6 +491,32 @@ class HostFailure(RuntimeError):
         self.hosts = hosts
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradedMode:
+    """Typed telemetry event for an automatic path fallback: the serving
+    scheduler demoted a repeatedly-faulting fused `kind` ("decode" or
+    "prefill") path to its per-op `PathDescriptor` twin.  Streams are
+    unchanged — per-op and fused paths are bit-identical by construction
+    — so a demotion costs throughput, never correctness; the event makes
+    the degradation observable (`ServingCounters.degraded_events`)."""
+    kind: str           # "decode" | "prefill"
+    tick: int           # scheduler tick the demotion happened on
+    failures: int       # consecutive failures that triggered it
+    from_path: str      # the demoted PathDescriptor name
+    to_path: str        # the twin now serving ("per_op")
+    error: str          # repr of the last exception
+
+
+class EngineCrash(RuntimeError):
+    """The injected in-process serving crash (`crash_at_tick`): raised at
+    the top of the scheduled tick, BEFORE any of that tick's work — the
+    crash point every committed snapshot must be consistent against."""
+
+    def __init__(self, tick: int):
+        super().__init__(f"injected engine crash at tick {tick}")
+        self.tick = tick
+
+
 @dataclasses.dataclass
 class ServingFaultInjector:
     """Tick-indexed fault schedule for the serving scheduler — the
@@ -391,6 +535,17 @@ class ServingFaultInjector:
           be discarded and the tick must finish cleanly.
       ("deadline", rid)           — force `rid`'s deadline to expire
           now, whether or not it had one.
+      ("crash_at_tick", None|"raise"|"sigkill") — kill the engine at the
+          top of the tick: raise `EngineCrash` (default), or SIGKILL the
+          process ("sigkill" — the CI crash-recovery smoke, nothing gets
+          to flush).  Restore-from-snapshot must resume bit-identically.
+      ("torn_snapshot_write", None) — the NEXT snapshot write is torn:
+          a partial `.tmp-step_X` with no COMMIT, exactly what a crash
+          mid-write leaves behind.  Restore must refuse it and fall back
+          to the previous committed step.
+      ("corrupt_state_leaf", rid) — poison `rid`'s live lane state with
+          NaNs; the sentinel sweep must quarantine-and-requeue it
+          without leaking the slot or any cache lease.
 
     `fired` records (tick, kind, payload) for every fault actually
     delivered, so tests can assert the drill ran."""
@@ -401,7 +556,8 @@ class ServingFaultInjector:
     fired: list[tuple[int, str, Any]] = \
         dataclasses.field(default_factory=list)
 
-    KINDS = ("cache_probe_error", "evict", "evict_on_token", "deadline")
+    KINDS = ("cache_probe_error", "evict", "evict_on_token", "deadline",
+             "crash_at_tick", "torn_snapshot_write", "corrupt_state_leaf")
 
     def pop(self, tick: int) -> list[tuple[str, Any]]:
         if not self.enabled:

@@ -12,9 +12,13 @@ prefixes into O(1) state restores — near-zero TTFT, bit-identical
 tokens.  An SLO layer (`slo`) adds priority/deadline/cache-aware
 admission, a per-tick prefill budget, and explicit overload behavior —
 bounded queue with typed `Overloaded` backpressure or load shedding —
-so bursts degrade gracefully instead of collapsing latency.
+so bursts degrade gracefully instead of collapsing latency.  Crash
+safety (`snapshot`): tick-boundary engine snapshots with bit-identical
+resume, prepared-param integrity checksums, NaN/Inf lane sentinels
+with quarantine-and-requeue, and automatic fused→per-op path fallback.
 docs/serving.md has the API guide; docs/architecture.md walks a
-request through the lifecycle and the plan diagram.
+request through the lifecycle and the plan diagram;
+docs/operations.md is the crash-recovery runbook.
 """
 from repro.serving.engine import (RequestHandle, SamplingParams,
                                   ServingEngine)
@@ -24,6 +28,9 @@ from repro.serving.prefix_cache import (CacheVariant, PrefixCache,
 from repro.serving.scheduler import Request, Scheduler, sample_token
 from repro.serving.slo import (AdmissionPolicy, Overloaded,
                                SchedulerHang, ServingSLO)
+from repro.serving.snapshot import (EngineSnapshot, IntegrityError,
+                                    SnapshotConfig, SnapshotManager,
+                                    load_snapshot, restore_engine)
 from repro.serving.state_pool import SlotStatePool
 
 __all__ = ["ServingEngine", "SamplingParams", "RequestHandle",
@@ -31,4 +38,6 @@ __all__ = ["ServingEngine", "SamplingParams", "RequestHandle",
            "ExecutionPlan", "build_plan", "PrefixCache",
            "PrefixCacheConfig", "CacheVariant", "StateLease",
            "ServingSLO", "AdmissionPolicy", "Overloaded",
-           "SchedulerHang"]
+           "SchedulerHang", "SnapshotConfig", "SnapshotManager",
+           "EngineSnapshot", "IntegrityError", "load_snapshot",
+           "restore_engine"]

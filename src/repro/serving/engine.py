@@ -33,7 +33,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 from typing import Any, Iterator, Optional
 
 import jax.numpy as jnp
@@ -66,6 +65,12 @@ class RequestHandle:
     def __init__(self, request: Request):
         self.request = request
         self.tokens: list[int] = []        # everything generated so far
+        # tokens generated BEFORE a snapshot restore (the pre-crash
+        # output): a handle re-registered by `ServingEngine.restore`
+        # carries them here, so the request's full stream is
+        # `resumed + tokens` — bitwise equal to a never-crashed run
+        # (repro.serving.snapshot).  Always [] on a fresh submit.
+        self.resumed: list[int] = []
         self.done = False
         self.outcome: Optional[str] = None
         self._pending: collections.deque[int] = collections.deque()
@@ -139,8 +144,22 @@ class ServingEngine:
                  (docs/serving.md §"SLOs and overload").
     fault_injector — a `ServingFaultInjector` (repro.runtime.monitor)
                  for fault drills: forces cache-probe failures,
-                 mid-speculation evictions, and deadline expiry at
-                 chosen ticks (tests/test_faults.py).
+                 mid-speculation evictions, deadline expiry, in-process
+                 crashes/SIGKILL, torn snapshot writes and state-leaf
+                 corruption at chosen ticks (tests/test_faults.py).
+    snapshot   — crash safety (repro.serving.snapshot, docs/operations
+                 .md): a `SnapshotConfig` (or a directory string with
+                 default cadence) makes the engine write tick-boundary
+                 snapshots; `ServingEngine.restore(dir)` resumes every
+                 stream bit-identically.
+    sentinel_every — every N ticks (0 = off) one jitted reduction flags
+                 NaN/Inf lanes; poisoned lanes are quarantined and
+                 their requests requeued for a clean replay.
+    path_fallback / path_fault_limit — automatic degraded mode: after
+                 `path_fault_limit` consecutive fused decode/prefill
+                 failures the scheduler demotes to the plan's per-op
+                 twin (bit-identical stream, `DegradedMode` event in
+                 `counters.degraded_events`).
     """
 
     def __init__(self, model: Model | str, *, params: Any = None,
@@ -154,7 +173,9 @@ class ServingEngine:
                  mesh=None, plan: Optional[ExecutionPlan] = None,
                  counters: Optional[ServingCounters] = None,
                  prefix_cache=None, slo: Optional[ServingSLO] = None,
-                 fault_injector=None):
+                 fault_injector=None, snapshot=None,
+                 sentinel_every: int = 0, path_fallback: bool = True,
+                 path_fault_limit: int = 2):
         if plan is None:
             plan = build_plan(model, params, smoke=smoke, mesh=mesh,
                               quantized=quantized,
@@ -198,9 +219,31 @@ class ServingEngine:
             prefill_quota=plan.prefill_quota(self.slo.prefill_budget,
                                              max_batch)
             if self.slo.prefill_budget > 0 else None,
-            fault_injector=fault_injector)
+            fault_injector=fault_injector,
+            sentinel_every=sentinel_every, on_requeue=self._on_requeue,
+            fallback_decode=(lambda: plan.fallback_decode_fn(max_batch))
+            if path_fallback else None,
+            fallback_prefill=(lambda: plan.fallback_prefill_fn(max_batch))
+            if path_fallback else None,
+            path_fault_limit=path_fault_limit,
+            path_names={"decode": plan.decode_desc.name,
+                        "prefill": plan.prefill_desc.name})
         self._handles: dict[int, RequestHandle] = {}
-        self._rids = itertools.count()
+        self._next_rid = 0          # plain int: snapshots serialize it
+        # crash safety (repro.serving.snapshot): a SnapshotConfig (or a
+        # directory string) wires tick-boundary snapshots through the
+        # scheduler's after_tick hook — and the torn-write fault drill
+        # through on_torn_snapshot
+        self.snapshot_manager = None
+        if snapshot is not None and snapshot is not False:
+            from repro.serving.snapshot import (SnapshotConfig,
+                                                SnapshotManager)
+            cfg = snapshot if isinstance(snapshot, SnapshotConfig) \
+                else SnapshotConfig(directory=str(snapshot))
+            self.snapshot_manager = SnapshotManager(self, cfg)
+            self.scheduler.after_tick = self.snapshot_manager.maybe_save
+            self.scheduler.on_torn_snapshot = self.snapshot_manager.\
+                write_torn
 
     def _build_cache(self, prefix_cache) -> Optional[PrefixCache]:
         """Resolve the `prefix_cache=` ctor arg (None/False | True |
@@ -248,7 +291,8 @@ class ServingEngine:
         sp = sampling or SamplingParams()
         if kw:
             sp = dataclasses.replace(sp, **kw)
-        req = Request(rid=next(self._rids),
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        req = Request(rid=rid,
                       prompt=[int(t) for t in prompt],
                       max_new_tokens=sp.max_new_tokens,
                       temperature=sp.temperature, seed=sp.seed,
@@ -269,6 +313,14 @@ class ServingEngine:
     def cancel(self, handle: RequestHandle) -> bool:
         ok = self.scheduler.evict(handle.rid)
         return ok
+
+    @property
+    def handles(self) -> dict:
+        """Live rid -> RequestHandle map (a copy).  Handles are popped as
+        requests retire, so grab this BEFORE `run()` when you need every
+        stream afterwards — in particular right after `restore`, where
+        the resumed requests' handles are pre-registered here."""
+        return dict(self._handles)
 
     def step(self) -> bool:
         """One scheduler tick; True while any request is in flight."""
@@ -313,3 +365,25 @@ class ServingEngine:
         h = self._handles.pop(req.rid)
         h.outcome = outcome
         h.done = True
+
+    def _on_requeue(self, req: Request):
+        """Quarantine callback: the request replays from scratch, so its
+        handle forgets everything emitted from the poisoned lane — the
+        deterministic replay re-delivers an identical (clean) stream."""
+        h = self._handles.get(req.rid)
+        if h is not None:
+            h.tokens.clear()
+            h.resumed = []
+            h._pending.clear()
+
+    # -- crash recovery ------------------------------------------------------
+
+    @classmethod
+    def restore(cls, directory: str, **kw) -> "ServingEngine":
+        """Rebuild an engine from its newest committed snapshot and
+        continue every stream bit-identically — pre-crash output is on
+        each handle's `.resumed`, so `resumed + tokens` equals the
+        never-crashed stream.  See `repro.serving.snapshot.restore_engine`
+        for the keyword arguments (params/step/mesh/snapshot/...)."""
+        from repro.serving.snapshot import restore_engine
+        return restore_engine(directory, **kw)

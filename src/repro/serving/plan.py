@@ -176,6 +176,15 @@ class ExecutionPlan:
         self._programs: dict = {}
         self._batch_shardings: dict = {}
         self._fresh_lane_cache = None
+        # per-op twin params for path-fallback demotion, prepared lazily
+        # the first time a fallback program is requested
+        self._fallback_decode_params = None
+        self._fallback_prefill_params = None
+        # build_plan records its keyword inputs here so a snapshot can
+        # rebuild an identical plan from config alone (repro.serving
+        # .snapshot); None on hand-constructed plans, which are then not
+        # snapshot-restorable
+        self.build_config: Optional[dict] = None
         if mesh is not None:
             self._place_params()
 
@@ -344,11 +353,13 @@ class ExecutionPlan:
 
     # -- program builders (the former ServingEngine._build_steps) ----------
 
-    def _decode_step(self):
-        """The selected decode path as a uniform
+    def _decode_step(self, name: Optional[str] = None):
+        """The selected decode path (or an explicit `name` override — the
+        fallback twins use "per_op") as a uniform
         (params, state, tokens) -> (logits, new_state) step."""
         model, quantized = self.model, self.prepared.quantized
-        name = self.decode_desc.name
+        if name is None:
+            name = self.decode_desc.name
         if name == "model":
             # whole-model megakernel: ONE launch for the layer stack;
             # packed Δ-PoT leaves pass through whole and decode inside
@@ -361,12 +372,13 @@ class ExecutionPlan:
         return lambda p, s, t: model.decode_step(
             maybe_unpack(p, quantized), s, t, jnp.int32(0))
 
-    def _build_decode(self):
+    def _build_decode(self, *, path: Optional[str] = None,
+                      path_params=None, count_key: str = "decode"):
         axes = self.state_axes
-        step = self._decode_step()
+        step = self._decode_step(path)
 
         def decode(params, state, tokens, mask):
-            self.trace_counts["decode"] += 1   # increments only on trace
+            self.trace_counts[count_key] += 1  # increments only on trace
             logits, new_state = step(params, state, tokens)
             return logits, masked_state_commit(new_state, state, mask, axes)
 
@@ -375,15 +387,19 @@ class ExecutionPlan:
         # with this step STRUCTURAL, not an accident of fusion choices
         # (bits unchanged vs. the former plain jit — PR 2/3 pins hold)
         j_decode = exact_jit(decode, donate_argnums=(1,))
-        params = self.prepared.decode
+        params = (self.prepared.decode if path_params is None
+                  else path_params)
         return lambda state, toks, mask: j_decode(
             params, state, self._place_batch(toks), self._place_batch(mask))
 
-    def _build_prefill(self, batch: int):
+    def _build_prefill(self, batch: int, *,
+                       chunked: Optional[bool] = None,
+                       path_params=None, count_key: str = "prefill"):
         model, axes = self.model, self.state_axes
         quantized = self.prepared.quantized
         fresh_lane = self._fresh_lane()
-        chunked = self.prefill_desc.name == "chunked"
+        if chunked is None:
+            chunked = self.prefill_desc.name == "chunked"
         # logits shape/dtype for the scan carry, without running anything
         ab_logits = jax.eval_shape(
             lambda p, s, t: model.decode_step(p, s, t, jnp.int32(0))[0],
@@ -395,7 +411,7 @@ class ExecutionPlan:
             jax.ShapeDtypeStruct((batch, 1), jnp.int32))
 
         def prefill(params, state, tokens, valid, fresh):
-            self.trace_counts["prefill"] += 1  # increments only on trace
+            self.trace_counts[count_key] += 1  # increments only on trace
             # reset newly admitted lanes to the fresh state in-call (the
             # batch-1 fresh template broadcasts into the masked-off lanes)
             state = masked_state_commit(state, fresh_lane, ~fresh, axes)
@@ -424,10 +440,58 @@ class ExecutionPlan:
         # (exact_jit: no excess-precision folding) — the property that
         # makes the fused chunked path bit-identical to the per-op scan.
         j_prefill = exact_jit(prefill, donate_argnums=(1,))
-        params = self.prepared.prefill
+        params = (self.prepared.prefill if path_params is None
+                  else path_params)
         return lambda state, toks, valid, fresh: j_prefill(
             params, state, self._place_batch(toks),
             self._place_batch(valid), self._place_batch(fresh))
+
+    # -- path-fallback twins (degraded mode) -------------------------------
+
+    def fallback_decode_fn(self, batch: int):
+        """The per-op twin of the selected decode path — built lazily the
+        first time the scheduler demotes a repeatedly-faulting fused
+        decode path (DegradedMode, docs/operations.md).  Returns None
+        when the selected path already IS per_op (nothing to demote to).
+        Per-op and fused paths are bit-identical by the repo's parity
+        pins, so a demotion never changes the token stream.  The twin's
+        params and programs cache like every other plan program; the
+        "decode_fallback" trace key is added lazily so undemoted plans
+        keep the historical trace_counts shape."""
+        if self.decode_desc.name == "per_op":
+            return None
+        key = ("decode_fallback", "per_op", int(batch),
+               self.state_dtype.name)
+        if key not in self._programs:
+            self.trace_counts.setdefault("decode_fallback", 0)
+            if self._fallback_decode_params is None:
+                desc = self.model.decode_paths()["per_op"]
+                self._fallback_decode_params = \
+                    self.model.prepare_path_params(desc, self.prepared.raw)
+            self._programs[key] = self._build_decode(
+                path="per_op", path_params=self._fallback_decode_params,
+                count_key="decode_fallback")
+        return self._programs[key]
+
+    def fallback_prefill_fn(self, batch: int):
+        """The per-op-scan twin of the chunked prefill path, for prefill
+        demotion.  Returns None when prefill is already per_op.  Same
+        caching and bit-parity story as `fallback_decode_fn`."""
+        if self.prefill_desc.name == "per_op":
+            return None
+        key = ("prefill_fallback", "per_op", int(batch),
+               self.state_dtype.name)
+        if key not in self._programs:
+            self.trace_counts.setdefault("prefill_fallback", 0)
+            if self._fallback_prefill_params is None:
+                desc = self.model.prefill_paths()["per_op"]
+                self._fallback_prefill_params = \
+                    self.model.prepare_path_params(desc, self.prepared.raw)
+            self._programs[key] = self._build_prefill(
+                batch, chunked=False,
+                path_params=self._fallback_prefill_params,
+                count_key="prefill_fallback")
+        return self._programs[key]
 
     def _build_draft(self):
         sp = self.speculative
@@ -510,6 +574,25 @@ class ExecutionPlan:
             committed, snapshot, self._place_batch(reject))
 
 
+def _registry_arch_id(cfg_name: str, smoke: bool) -> str:
+    """The registry arch id whose (smoke) config produced `cfg_name`.
+    Smoke configs don't always embed the full id (rwkv6-7b's smoke cfg is
+    named "rwkv6-smoke"), so stripping the suffix isn't enough — scan the
+    registry for the id whose config name matches, so a snapshot's
+    `build_config["arch"]` always round-trips through `get_model`."""
+    from repro.configs.base import get_config, list_configs, smoke_config
+    base = cfg_name[:-len("-smoke")] if smoke else cfg_name
+    known = list_configs()
+    for arch in ([base] if base in known else []) + known:
+        try:
+            cfg = smoke_config(arch) if smoke else get_config(arch)
+        except Exception:
+            continue
+        if cfg.name == cfg_name:
+            return arch
+    return base     # unregistered/ad-hoc config: best effort
+
+
 def build_plan(model: Model | str, params: Any = None, *,
                mesh=None, smoke: bool = True, quantized: bool = False,
                fused_decode: bool | str | None = False,
@@ -590,6 +673,7 @@ def build_plan(model: Model | str, params: Any = None, *,
         raise ValueError("draft_depth without speculative=K does nothing")
 
     # -- param preparation: ONE pass over one weight set -------------------
+    from_seed = params is None
     if params is None:
         params = model.init_params(jax.random.PRNGKey(seed))
     if quantized:
@@ -606,7 +690,30 @@ def build_plan(model: Model | str, params: Any = None, *,
         # step unpacks in-trace exactly like the per-op decode path
         draft=None if spec_path is None or spec_path.k == 1 else
         model.truncate_params(params, spec_path.draft_depth))
-    return ExecutionPlan(model, prepared, decode_desc, prefill_desc,
+    plan = ExecutionPlan(model, prepared, decode_desc, prefill_desc,
                          prefill_chunk=prefill_chunk, max_len=max_len,
                          state_dtype=state_dtype, mesh=mesh,
                          speculative=spec_path)
+    # record the build inputs so a serving snapshot can reconstruct this
+    # exact plan from config alone (repro.serving.snapshot).  `from_seed`
+    # says whether `seed` alone reproduces the weights; restore verifies
+    # param checksums either way, so externally-supplied weights still
+    # restore — the caller just has to pass them back in.
+    name = model.cfg.name
+    smoke_flag = name.endswith("-smoke")
+    plan.build_config = {
+        "arch": _registry_arch_id(name, smoke_flag),
+        "smoke": smoke_flag,
+        "quantized": bool(quantized),
+        "fused_decode": decode_name,
+        "fused_prefill": prefill_name == "chunked",
+        "prefill_chunk": int(prefill_chunk),
+        "max_len": int(max_len),
+        "state_dtype": jnp.dtype(state_dtype).name,
+        "seed": int(seed),
+        "from_seed": from_seed,
+        "speculative": None if spec_path is None else spec_path.k,
+        "draft_depth": None if spec_path is None else spec_path.draft_depth,
+        "mesh_devices": None if mesh is None else int(mesh.devices.size),
+    }
+    return plan

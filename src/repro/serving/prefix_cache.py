@@ -333,6 +333,49 @@ class PrefixCache:
         entry.tier = DEVICE
         self._device[key] = entry
 
+    # -- snapshot/restore (repro.serving.snapshot) -------------------------
+
+    def export_entries(self) -> list[tuple[dict, Any]]:
+        """Every entry as (manifest record, state tree), oldest-first per
+        tier (device tier first) — re-adopting the records in this order
+        reproduces the LRU order exactly.  Leases are tick-scoped and the
+        snapshot layer captures at a tick boundary, so refcounts are not
+        exported (they are structurally zero there)."""
+        out = []
+        for store in (self._device, self._host):
+            for e in store.values():
+                out.append(({"tier": e.tier, "n_tokens": e.n_tokens,
+                             "tokens": list(e.tokens),
+                             "variant": dataclasses.asdict(e.key[0])},
+                            e.state))
+        return out
+
+    def adopt_entries(self, entries):
+        """Install exported entries into an EMPTY cache (the restore
+        path), preserving tier placement and LRU order.  `entries` is a
+        list of (record, state) pairs as `export_entries` produced —
+        device-tier states as device trees, host-tier states as numpy.
+        Keys are recomputed from the tokens, so a snapshot written by a
+        different process (different hash seed would break this — the
+        chunk hash is content-stable by construction) adopts cleanly."""
+        if self._device or self._host:
+            raise ValueError("adopt_entries needs an empty cache")
+        for rec, state in entries:
+            variant = CacheVariant(**rec["variant"])
+            tokens = [int(t) for t in rec["tokens"]]
+            n = int(rec["n_tokens"])
+            digest = self.digests(tokens)[n]
+            key = self._key(variant, n, digest)
+            tier = rec["tier"]
+            entry = _Entry(key=key, tokens=tuple(tokens), n_tokens=n,
+                           state=state, tier=tier)
+            if tier == DEVICE:
+                entry.state = jax.tree_util.tree_map(jnp.asarray, state)
+                self._device[key] = entry
+            else:
+                self._host[key] = entry
+        self.check_state()
+
     # -- introspection -----------------------------------------------------
 
     @property

@@ -60,12 +60,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
+import os
+import signal
 import time
 from typing import Callable, Optional
 
 import numpy as np
 
+from repro.runtime.monitor import DegradedMode, EngineCrash
 from repro.serving.slo import (SHED, Overloaded, SchedulerHang,
                                ServingSLO)
 
@@ -242,7 +244,12 @@ class Scheduler:
                  rollback_fn: Optional[Callable] = None,
                  slo: Optional[ServingSLO] = None,
                  prefill_quota: Optional[int] = None,
-                 fault_injector=None):
+                 fault_injector=None, sentinel_every: int = 0,
+                 on_requeue: Optional[Callable] = None,
+                 fallback_decode: Optional[Callable] = None,
+                 fallback_prefill: Optional[Callable] = None,
+                 path_fault_limit: int = 2,
+                 path_names: Optional[dict] = None):
         self.pool = pool
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
@@ -286,8 +293,42 @@ class Scheduler:
         else:
             self._prefill_quota = None
         self.fault_injector = fault_injector
+        # NaN/Inf sentinels: every `sentinel_every` ticks (0 = off) one
+        # jitted reduction over the whole pool flags non-finite lanes;
+        # a flagged lane is QUARANTINED — slot released, drafts and
+        # staged cache inserts discarded — and its request requeued for
+        # a from-scratch deterministic replay (`on_requeue` lets the
+        # engine reset the request's handle first).  The re-enqueue
+        # bypasses admission bounds: the request was already accepted
+        # once and must not be lost to its own quarantine.
+        self.sentinel_every = int(sentinel_every)
+        self.on_requeue = on_requeue or (lambda req: None)
+        # automatic path fallback (degraded mode): `fallback_decode` /
+        # `fallback_prefill` are ZERO-ARG PROVIDERS (the engine passes
+        # the plan's lazily-built per-op twins) invoked only at demotion
+        # time.  After `path_fault_limit` CONSECUTIVE primary-program
+        # failures the path is demoted for the life of the scheduler and
+        # a DegradedMode event is recorded; below the limit the primary
+        # is retried.  Retry/demote-and-rerun are only sound when the
+        # failure was raised before the program consumed its donated
+        # pool state (host wrapper errors, dispatch failures) — a
+        # mid-execution device fault invalidates the donated buffers and
+        # the rerun will surface that instead of corrupting state.
+        self.fallback_decode = fallback_decode
+        self.fallback_prefill = fallback_prefill
+        self.path_fault_limit = int(path_fault_limit)
+        self.path_names = path_names or {}
+        self._path_failures: dict[str, int] = {}
+        self._fallback_progs: dict[str, Optional[Callable]] = {}
+        self._demoted: set[str] = set()
+        # tick-boundary hooks, assigned post-construction by the engine:
+        # `after_tick(tick_no)` fires after counters.on_tick — the
+        # snapshot cadence lives there (repro.serving.snapshot);
+        # `on_torn_snapshot(tick_no)` is the torn-write fault drill.
+        self.after_tick: Optional[Callable] = None
+        self.on_torn_snapshot: Optional[Callable] = None
         self._tick_no = 0
-        self._seq = itertools.count()
+        self._seq = 0               # plain int: snapshots serialize it
         self._queued: dict[int, _Queued] = {}
         self._has_deadlines = False
         # monotone progress counter (admissions + prefill tokens +
@@ -336,7 +377,7 @@ class Scheduler:
         deadline_s = (req.deadline_s if req.deadline_s is not None
                       else self.slo.default_deadline_s)
         qm = _Queued(
-            seq=next(self._seq), enqueue_tick=self._tick_no,
+            seq=self._next_seq(), enqueue_tick=self._tick_no,
             deadline_t=(None if deadline_s is None
                         else self._now() + deadline_s),
             digests=(self.prefix_cache.digests(req.prompt)
@@ -355,6 +396,7 @@ class Scheduler:
         self._tick_no += 1
         if self.fault_injector is not None:
             self._apply_faults()
+        self._sentinel_sweep()
         self._expire_deadlines()
         self._admit()
         self._prefill_tick()
@@ -365,6 +407,11 @@ class Scheduler:
         if self.counters is not None:
             self.counters.on_tick(active=len(self.slots),
                                   queued=len(self.queue))
+        if self.after_tick is not None:
+            # tick-boundary hook (snapshots): fires with every boundary
+            # invariant holding — no speculation in flight, no lease
+            # held, all lane states committed
+            self.after_tick(self._tick_no)
         return bool(self.queue or self.slots)
 
     def run(self, *, max_idle_ticks: Optional[int] = None):
@@ -471,6 +518,21 @@ class Scheduler:
                 self._evict_on_token.add(int(payload))
             elif kind == "deadline":
                 self._force_deadline(int(payload))
+            elif kind == "crash_at_tick":
+                # the crash-recovery drill: die at the TOP of this tick,
+                # BEFORE any of its work — every committed snapshot is
+                # consistent with respect to this crash point
+                if payload == "sigkill":
+                    os.kill(os.getpid(), signal.SIGKILL)
+                raise EngineCrash(self._tick_no)
+            elif kind == "torn_snapshot_write":
+                if self.on_torn_snapshot is not None:
+                    self.on_torn_snapshot(self._tick_no)
+            elif kind == "corrupt_state_leaf":
+                for slot, m in self.slots.items():
+                    if m.req.rid == int(payload):
+                        self.pool.poison_slot(slot)
+                        break
 
     def _force_deadline(self, rid: int):
         """Fault drill: expire `rid`'s deadline NOW (whether or not it
@@ -484,6 +546,111 @@ class Scheduler:
         if qm is not None:
             qm.deadline_t = float("-inf")
             self._has_deadlines = True
+
+    def _next_seq(self) -> int:
+        s = self._seq
+        self._seq += 1
+        return s
+
+    # -- integrity sentinels + quarantine ----------------------------------
+
+    def _sentinel_sweep(self):
+        """Every `sentinel_every` ticks: ONE jitted all-lane finiteness
+        reduction over the pool; every occupied lane holding a NaN/Inf
+        state is quarantined (see `_quarantine`).  Free lanes may hold
+        stale garbage legitimately — only occupied ones are judged."""
+        if (not self.sentinel_every or not self.slots
+                or self._tick_no % self.sentinel_every):
+            return
+        ok = self.pool.lane_finite()
+        if ok is None:              # no floating state leaves: nothing
+            return                  # can go non-finite
+        for slot in [s for s in self.slots if not ok[s]]:
+            self._quarantine(slot, self.slots[slot])
+
+    def _quarantine(self, slot: int, meta: _Slot):
+        """Evict a poisoned lane and REQUEUE its request for a clean
+        replay: staged cache inserts and drafts are discarded (never
+        publish from a poisoned lane), the slot is released (its state is
+        fresh-reset in-call at the next admission, like any reacquired
+        lane), the engine resets the request's handle via `on_requeue`,
+        and the request re-enqueues BYPASSING admission bounds with a
+        fresh RNG/deadline at admission.  Decode is deterministic, so the
+        replayed stream is bit-identical to an unpoisoned run — the
+        quarantine costs latency, never correctness."""
+        req = meta.req
+        meta.pending_inserts.clear()
+        meta.drafted.clear()
+        self._spec_inflight.pop(req.rid, None)
+        del self.slots[slot]
+        self.pool.release(slot)
+        self._progress += 1
+        if self.counters is not None:
+            self.counters.on_quarantine(req.rid)
+        self.on_requeue(req)
+        deadline_s = (req.deadline_s if req.deadline_s is not None
+                      else self.slo.default_deadline_s)
+        qm = _Queued(
+            seq=self._next_seq(), enqueue_tick=self._tick_no,
+            deadline_t=(None if deadline_s is None
+                        else self._now() + deadline_s),
+            digests=(self.prefix_cache.digests(req.prompt)
+                     if self.prefix_cache is not None else None))
+        if qm.deadline_t is not None:
+            self._has_deadlines = True
+        self._queued[req.rid] = qm
+        self.queue.append(req)
+        if self.counters is not None:
+            self.counters.on_enqueue(req.rid)
+
+    # -- path fallback (degraded mode) -------------------------------------
+
+    @property
+    def demoted(self) -> frozenset:
+        """The paths currently demoted to their per-op twins."""
+        return frozenset(self._demoted)
+
+    def _fallback(self, kind: str) -> Optional[Callable]:
+        if kind not in self._fallback_progs:
+            prov = (self.fallback_decode if kind == "decode"
+                    else self.fallback_prefill)
+            self._fallback_progs[kind] = None if prov is None else prov()
+        return self._fallback_progs[kind]
+
+    def _run_program(self, kind: str, fn: Callable, *args):
+        """Run a primary decode/prefill program with consecutive-failure
+        tracking: below `path_fault_limit` the primary is retried; at the
+        limit the path is demoted to its per-op twin (bit-identical
+        stream, DegradedMode event) for the life of the scheduler.  With
+        no twin available the error propagates.  See the ctor comment
+        for the donation caveat on retries."""
+        if kind in self._demoted:
+            return self._fallback(kind)(*args)
+        while True:
+            try:
+                out = fn(*args)
+            except (EngineCrash, KeyboardInterrupt):
+                raise               # injected crashes are not path faults
+            except Exception as e:
+                n = self._path_failures[kind] = \
+                    self._path_failures.get(kind, 0) + 1
+                if n < self.path_fault_limit:
+                    continue
+                fb = self._fallback(kind)
+                if fb is None:
+                    raise
+                self._demote(kind, n, e)
+                return fb(*args)
+            self._path_failures[kind] = 0
+            return out
+
+    def _demote(self, kind: str, failures: int, err: Exception):
+        self._demoted.add(kind)
+        if self.counters is not None:
+            self.counters.on_path_fallback(DegradedMode(
+                kind=kind, tick=self._tick_no, failures=failures,
+                from_path=self.path_names.get(kind, kind),
+                to_path="per_op", error=repr(err)))
 
     def _expire_deadlines(self):
         """Evict every queued or in-flight request whose deadline has
@@ -655,8 +822,8 @@ class Scheduler:
             valid[slot, :len(part)] = True
             fresh[slot] = meta.fresh
             parts[slot] = len(part)
-        self.pool.state, last_logits = self.prefill_fn(
-            self.pool.state, toks, valid, fresh)
+        self.pool.state, last_logits = self._run_program(
+            "prefill", self.prefill_fn, self.pool.state, toks, valid, fresh)
         finishing = []
         for slot, meta in prefilling:
             meta.fresh = False
@@ -687,7 +854,8 @@ class Scheduler:
         for slot, meta in active:
             toks[slot, 0] = meta.next_token
             mask[slot] = True
-        logits, self.pool.state = self.decode_fn(self.pool.state, toks, mask)
+        logits, self.pool.state = self._run_program(
+            "decode", self.decode_fn, self.pool.state, toks, mask)
         rows = np.asarray(logits[:, -1], np.float32)
         self._emit([(s, m, rows[s]) for s, m in active])
 

@@ -1,0 +1,504 @@
+"""Crash-safe serving: tick-boundary engine snapshots, bit-identical resume.
+
+The HFRWKV serving translation keeps everything that matters on one
+device buffer (the slot pool) plus cheap host bookkeeping — which makes
+the whole engine SNAPSHOTTABLE at a scheduler tick boundary, where the
+invariants are strongest:
+
+  * no speculation is in flight (`Scheduler._spec_snapshot is None`,
+    every `_Slot.drafted` is empty — cleared in a `finally` each tick),
+  * no prefix-cache lease is held (probes release within `_cache_probe`),
+  * every lane's state is committed (decode/prefill calls are complete).
+
+So a snapshot is: the pool state tree, the prefix cache's entry states,
+each slot's staged boundary states, and a JSON `meta` blob holding the
+scheduler/engine host bookkeeping — per-slot request + RNG stream
+(`numpy.random.Generator.bit_generator.state` is a JSON dict and restores
+bit-exactly), queue order, SLO config, monotone counters (clock fields
+rebased as seconds-before-capture), demoted paths, and the plan's
+`build_config` so restore can rebuild the exact same compiled programs
+from config alone.  Arrays ride the training checkpoint layer
+(`repro.checkpoint.store`): atomic-by-rename commits, async writes so
+decode never blocks on disk, exact-dtype roundtrips (bf16 pool leaves,
+uint8 Δ-PoT planes), and torn-write refusal (`load_manifest` rejects
+directories without their COMMIT marker).
+
+Restore (`restore_engine` / `ServingEngine.restore`) rebuilds the plan
+from `build_config` — `build_plan(params=None, seed=s)` re-derives
+identical weights when the snapshot was seeded (`from_seed`), verified
+either way by CRC32 checksums over every prepared-param plane
+(`IntegrityError` on drift) — re-installs the pool, re-adopts the cache,
+re-registers a `RequestHandle` per live request (pre-crash output in
+`handle.resumed`), and continues every stream such that
+`resumed + tokens` is BITWISE equal to a never-crashed run: greedy and
+seeded-Gumbel sampling both replay deterministically from the restored
+RNG states (tests/test_snapshot.py drives the oracle across arch ×
+quant × path × speculation × prefix-cache).
+
+See docs/operations.md for the runbook (supervisor loop, torn-write
+behavior, sentinels, degraded mode) and docs/architecture.md for the
+lifecycle edges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import (AsyncCheckpointer, _flatten_with_keys,
+                                    latest_step, load_manifest,
+                                    restore_checkpoint)
+
+SNAPSHOT_VERSION = 1
+
+
+class IntegrityError(RuntimeError):
+    """Checksum verification failed: a prepared-param plane (or the
+    whole reference set) does not match what was recorded — bit rot,
+    a wrong `params=` handed to restore, or in-memory corruption."""
+
+
+# ---------------------------------------------------------------------------
+# Integrity sentinels: CRC32 over every prepared-param plane
+# ---------------------------------------------------------------------------
+
+
+def tree_checksums(tree: Any) -> dict:
+    """{leaf key: crc32} over a pytree — the integrity sentinel for
+    prepared params.  Keys are the checkpoint store's path keys, so a
+    mismatch names the exact plane.  Aliased leaves (the plan's placement
+    cache shares buffers between prepared forms) hash once (id-dedup);
+    python scalars hash their repr.  FusedLayerStack is a registered
+    pytree node, so megakernel slabs are covered leaf-by-leaf."""
+    flat, _ = _flatten_with_keys(tree)
+    seen: dict = {}
+    out = {}
+    for key, leaf in flat:
+        if isinstance(leaf, (bool, int, float)):
+            out[key] = zlib.crc32(repr(leaf).encode())
+            continue
+        cid = id(leaf)
+        if cid not in seen:
+            arr = np.asarray(jax.device_get(leaf))
+            seen[cid] = zlib.crc32(arr.tobytes())
+        out[key] = seen[cid]
+    return out
+
+
+def param_checksums(prepared) -> dict:
+    """Checksums over every form of a `PreparedParams` — raw, decode and
+    prefill planes all verify, so a fused path's packed slabs are covered
+    even when the raw tree is intact."""
+    return tree_checksums({"raw": prepared.raw, "decode": prepared.decode,
+                           "prefill": prepared.prefill})
+
+
+def verify_param_checksums(prepared, reference: dict, *, counters=None,
+                           where: str = "startup"):
+    """Recompute and compare against `reference`; raises IntegrityError
+    naming every mismatched plane (counted in
+    `ServingCounters.checksum_failures`)."""
+    current = param_checksums(prepared)
+    bad = sorted(k for k in reference
+                 if current.get(k) != reference[k])
+    bad += sorted(k for k in current if k not in reference)
+    if bad:
+        if counters is not None:
+            counters.on_checksum_failure(len(bad))
+        raise IntegrityError(
+            f"param checksum mismatch at {where}: "
+            f"{len(bad)} plane(s) differ from the reference — "
+            f"first offenders: {bad[:4]}")
+
+
+# ---------------------------------------------------------------------------
+# RNG stream serialization (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+def rng_state(gen: Optional[np.random.Generator]):
+    """A Generator's bit-generator state as a JSON-serializable dict
+    (PCG64 state ints are python ints — arbitrary precision, exact)."""
+    return None if gen is None else gen.bit_generator.state
+
+
+def make_rng(state) -> Optional[np.random.Generator]:
+    """Rebuild a Generator mid-stream: same bit generator class, same
+    state — the next draw is the draw the saved stream would make."""
+    if state is None:
+        return None
+    bg = getattr(np.random, state["bit_generator"])()
+    bg.state = state
+    return np.random.Generator(bg)
+
+
+# ---------------------------------------------------------------------------
+# Capture
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotConfig:
+    """How the engine snapshots itself.
+
+    directory     — snapshot root (checkpoint-store step layout)
+    every         — snapshot every N scheduler ticks (0 disables the
+                    automatic cadence; `SnapshotManager.save` still works)
+    keep          — committed snapshots retained (older pruned post-commit)
+    verify_params — re-checksum prepared params before saves, so a
+                    snapshot of corrupted weights is refused rather than
+                    written (IntegrityError)
+    verify_interval_s — amortize that re-checksum: a save re-verifies only
+                    if this many seconds passed since the last check
+                    (0.0 = every save).  Full-plane crc32 per save would
+                    dominate a fast tick; a time cadence bounds staleness
+                    instead — startup and restore always verify."""
+    directory: str
+    every: int = 8
+    keep: int = 3
+    verify_params: bool = True
+    verify_interval_s: float = 30.0
+
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """One consistent engine image: `meta` (JSON host bookkeeping) +
+    `arrays` (the device/host state trees, checkpoint-store keyed)."""
+    meta: dict
+    arrays: dict
+
+    @classmethod
+    def capture(cls, engine, tick: int, *, extra: Optional[dict] = None
+                ) -> "EngineSnapshot":
+        """Capture `engine` at the boundary of scheduler tick `tick`.
+        Must be called between ticks (the `after_tick` hook): raises if
+        speculation is in flight — a mid-tick image would need draft
+        windows and rollback snapshots that the boundary invariants
+        guarantee away."""
+        sch, pool = engine.scheduler, engine.pool
+        if sch._spec_snapshot is not None or sch._spec_inflight:
+            raise RuntimeError(
+                "EngineSnapshot.capture outside a tick boundary: "
+                "speculation in flight")
+        if engine.plan.build_config is None:
+            raise RuntimeError(
+                "plan has no build_config (hand-constructed ExecutionPlan) "
+                "— snapshots need build_plan(...) provenance to restore")
+        now = sch._now()
+        arrays: dict = {"pool": pool.state, "cache": {}, "pending": {}}
+        cache_meta = None
+        if engine.prefix_cache is not None:
+            ents = engine.prefix_cache.export_entries()
+            cache_meta = {
+                "config": dataclasses.asdict(engine.prefix_cache.config),
+                "entries": [rec for rec, _ in ents]}
+            arrays["cache"] = {f"e{i:04d}": st
+                               for i, (_, st) in enumerate(ents)}
+        slot_recs = []
+        for slot, m in sorted(sch.slots.items()):
+            if m.drafted:
+                raise RuntimeError(
+                    f"slot {slot} holds unverified drafts — not a tick "
+                    "boundary")
+            slot_recs.append({
+                "slot": slot, "req": dataclasses.asdict(m.req),
+                "phase": m.phase, "fresh": bool(m.fresh),
+                "n_prefilled": int(m.n_prefilled),
+                "next_token": int(m.next_token),
+                "generated": [int(t) for t in m.generated],
+                "rng_state": rng_state(m.rng),
+                "cached_tokens": int(m.cached_tokens),
+                "seq": int(m.seq),
+                "deadline_remaining": (None if m.deadline_t is None
+                                       else m.deadline_t - now),
+                "pending": [int(n) for n, _ in m.pending_inserts]})
+            for j, (_, st) in enumerate(m.pending_inserts):
+                arrays["pending"][f"s{slot}_p{j}"] = st
+        queue_recs = []
+        for r in sch.queue:
+            qm = sch._queued[r.rid]
+            queue_recs.append({
+                "req": dataclasses.asdict(r), "seq": int(qm.seq),
+                "enqueue_tick": int(qm.enqueue_tick),
+                "deadline_remaining": (None if qm.deadline_t is None
+                                       else qm.deadline_t - now)})
+        meta = {
+            "version": SNAPSHOT_VERSION,
+            "tick": int(tick),
+            "next_rid": int(engine._next_rid),
+            "next_seq": int(sch._seq),
+            "progress": int(sch._progress),
+            "plan": engine.plan.build_config,
+            "max_batch": int(pool.max_slots),
+            "slo": dataclasses.asdict(engine.slo),
+            "sentinel_every": int(getattr(sch, "sentinel_every", 0)),
+            "path_fault_limit": int(getattr(sch, "path_fault_limit", 2)),
+            "demoted": sorted(getattr(sch, "_demoted", ())),
+            "param_checksums": None,        # SnapshotManager fills this
+            "snapshot": None,               # ... and this
+            "slots": slot_recs,
+            "queue": queue_recs,
+            "cache": cache_meta,
+            "counters": engine.counters.state_dict(),
+        }
+        if extra:
+            meta.update(extra)
+        return cls(meta=meta, arrays=arrays)
+
+
+class SnapshotManager:
+    """Owns the engine's snapshot cadence and integrity reference.
+
+    Construction checksums every prepared-param plane ONCE (the startup
+    reference).  `maybe_save(tick)` — wired as the scheduler's
+    `after_tick` hook — captures and writes every `config.every` ticks:
+    the capture plus the device→host copy are synchronous (that wall time
+    is `ServingCounters.snapshot_wall_s`); the file I/O runs on the
+    `AsyncCheckpointer`'s background thread, so decode never blocks on
+    disk (at worst a save joins the PREVIOUS write first)."""
+
+    def __init__(self, engine, config: SnapshotConfig):
+        self.engine = engine
+        self.config = config
+        self.writer = AsyncCheckpointer(config.directory, keep=config.keep)
+        self.reference_checksums = param_checksums(engine.plan.prepared)
+        self._last_verify = time.monotonic()
+
+    def verify(self, *, where: str = "snapshot"):
+        """Re-checksum prepared params against the startup reference."""
+        verify_param_checksums(self.engine.plan.prepared,
+                               self.reference_checksums,
+                               counters=self.engine.counters, where=where)
+        self._last_verify = time.monotonic()
+
+    def maybe_save(self, tick: int):
+        if self.config.every and tick % self.config.every == 0:
+            self.save(tick)
+
+    def save(self, tick: int):
+        t0 = time.perf_counter()
+        if self.config.verify_params and (
+                self.config.verify_interval_s == 0.0
+                or time.monotonic() - self._last_verify
+                >= self.config.verify_interval_s):
+            self.verify()
+        snap = EngineSnapshot.capture(self.engine, tick, extra={
+            "param_checksums": self.reference_checksums,
+            "snapshot": dataclasses.asdict(self.config)})
+        self.writer.save(tick, snap.arrays, meta=snap.meta)
+        self.engine.counters.on_snapshot(time.perf_counter() - t0)
+
+    def write_torn(self, tick: int):
+        """The `torn_snapshot_write` fault drill: leave exactly what a
+        host crash mid-save leaves — a partial `.tmp-step_X` staging dir
+        with some leaves and NO COMMIT marker.  `latest_step` skips it
+        and restore falls back to the newest committed snapshot."""
+        tmp = os.path.join(self.config.directory, f".tmp-step_{tick:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        np.save(os.path.join(tmp, "['pool']_partial.npy"), np.zeros(3))
+
+    def wait(self):
+        """Join the in-flight background write (surfaces its errors)."""
+        self.writer.wait()
+
+
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+
+def load_snapshot(directory: str, step: Optional[int] = None
+                  ) -> tuple[int, dict]:
+    """(step, meta) of the newest committed snapshot (or exactly `step`).
+    Torn/uncommitted dirs are never candidates; an empty directory
+    raises FileNotFoundError."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed snapshot under {directory!r}")
+    manifest = load_manifest(directory, step)
+    meta = manifest["meta"]
+    if meta is None or meta.get("version") != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"step {step} at {directory!r} is not a serving snapshot "
+            f"(version {None if meta is None else meta.get('version')!r}; "
+            f"expected {SNAPSHOT_VERSION})")
+    return step, meta
+
+
+def _slo_from_dict(d: dict):
+    from repro.serving.slo import AdmissionPolicy, ServingSLO
+    return ServingSLO(prefill_budget=d["prefill_budget"],
+                      default_deadline_s=d["default_deadline_s"],
+                      admission=AdmissionPolicy(**d["admission"]),
+                      max_idle_ticks=d["max_idle_ticks"])
+
+
+def _resolve_mesh(mesh, plan_meta: dict):
+    """`mesh="auto"`: rebuild the recorded serving mesh when enough
+    devices are visible, else run unsharded — the sharded and unsharded
+    engines are bit-identical (tests/test_plan.py), so a restore onto a
+    smaller host changes placement, never tokens."""
+    if mesh != "auto":
+        return mesh
+    n = plan_meta.get("mesh_devices")
+    if not n or len(jax.devices()) < n:
+        return None
+    from repro.launch.mesh import make_serving_mesh
+    return make_serving_mesh(n)
+
+
+def restore_engine(directory: str, *, params: Any = None,
+                   step: Optional[int] = None, mesh="auto",
+                   snapshot="same", fault_injector=None,
+                   verify_params: bool = True):
+    """Rebuild a ServingEngine from its newest committed snapshot such
+    that every restored stream continues bit-identically (see module
+    docstring; `ServingEngine.restore` is the public alias).
+
+    params        — required iff the snapshot was built from
+                    externally-supplied weights (`from_seed` False);
+                    checksum-verified either way
+    mesh          — "auto" (recorded topology when devices suffice, else
+                    unsharded), an explicit Mesh, or None
+    snapshot      — "same": keep snapshotting into `directory` with the
+                    recorded cadence; None disables; or a SnapshotConfig
+    """
+    from repro.serving.engine import RequestHandle, ServingEngine
+    from repro.serving.scheduler import Request, _Queued, _Slot
+
+    step, meta = load_snapshot(directory, step)
+    pc = meta["plan"]
+    if params is None and not pc["from_seed"]:
+        raise ValueError(
+            "snapshot was built from externally-supplied weights "
+            "(build_config.from_seed=False) — pass the same params= tree "
+            "to restore; checksums will verify it")
+    from repro.serving.plan import build_plan
+    plan = build_plan(pc["arch"], params, smoke=pc["smoke"],
+                      mesh=_resolve_mesh(mesh, pc),
+                      quantized=pc["quantized"],
+                      # build_config records the normalized path name;
+                      # build_plan spells the unfused path False
+                      fused_decode=(False if pc["fused_decode"] == "per_op"
+                                    else pc["fused_decode"]),
+                      fused_prefill=pc["fused_prefill"],
+                      prefill_chunk=pc["prefill_chunk"],
+                      max_len=pc["max_len"],
+                      state_dtype=pc["state_dtype"], seed=pc["seed"],
+                      speculative=pc["speculative"],
+                      draft_depth=pc["draft_depth"])
+
+    counters_state = meta["counters"]
+    from repro.runtime.monitor import ServingCounters
+    counters = ServingCounters()
+    counters.load_state(counters_state)
+
+    if verify_params and meta.get("param_checksums"):
+        verify_param_checksums(plan.prepared, meta["param_checksums"],
+                               counters=counters, where="restore")
+
+    # -- array restore (exact dtypes; host numpy until installed) ----------
+    model, max_batch = plan.model, meta["max_batch"]
+    pool_like = jax.eval_shape(lambda: model.init_slot_state(
+        max_batch, plan.max_len, plan.state_dtype))
+    lane_like = jax.eval_shape(lambda: model.init_slot_state(
+        1, plan.max_len, plan.state_dtype))
+    n_entries = 0 if meta["cache"] is None else len(
+        meta["cache"]["entries"])
+    like = {"pool": pool_like,
+            "cache": {f"e{i:04d}": lane_like for i in range(n_entries)},
+            "pending": {f"s{rec['slot']}_p{j}": lane_like
+                        for rec in meta["slots"]
+                        for j in range(len(rec["pending"]))}}
+    restored = restore_checkpoint(directory, step, like)
+
+    # -- prefix cache ------------------------------------------------------
+    cache = None
+    if meta["cache"] is not None:
+        from repro.serving.prefix_cache import (PrefixCache,
+                                                PrefixCacheConfig)
+        cache = PrefixCache(plan.prefill_chunk, config=PrefixCacheConfig(
+            **meta["cache"]["config"]))
+        cache.adopt_entries(list(zip(
+            meta["cache"]["entries"],
+            (restored["cache"][f"e{i:04d}"] for i in range(n_entries)))))
+
+    # -- engine shell (fresh pool, compiled programs, manager) -------------
+    if snapshot == "same":
+        snap_cfg = (None if meta["snapshot"] is None
+                    else SnapshotConfig(**dict(meta["snapshot"],
+                                               directory=directory)))
+    else:
+        snap_cfg = snapshot
+    engine = ServingEngine(
+        model, plan=plan, max_batch=max_batch, counters=counters,
+        prefix_cache=cache, slo=_slo_from_dict(meta["slo"]),
+        fault_injector=fault_injector, snapshot=snap_cfg,
+        sentinel_every=meta["sentinel_every"],
+        path_fault_limit=meta["path_fault_limit"])
+
+    # -- pool state + free list --------------------------------------------
+    state = jax.tree_util.tree_map(jnp.asarray, restored["pool"])
+    shardings = plan.state_shardings(max_batch)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    engine.pool.state = state
+    occupied = {rec["slot"] for rec in meta["slots"]}
+    engine.pool._free = sorted(set(range(max_batch)) - occupied,
+                               reverse=True)
+
+    # -- scheduler bookkeeping ---------------------------------------------
+    sch = engine.scheduler
+    now = sch._now()
+    sch._tick_no = meta["tick"]
+    sch._seq = meta["next_seq"]
+    sch._progress = meta["progress"]
+    sch._demoted = set(meta["demoted"])
+    for rec in meta["slots"]:
+        req = Request(**rec["req"])
+        m = _Slot(
+            req=req, phase=rec["phase"], fresh=rec["fresh"],
+            n_prefilled=rec["n_prefilled"], next_token=rec["next_token"],
+            generated=list(rec["generated"]), rng=make_rng(rec["rng_state"]),
+            cached_tokens=rec["cached_tokens"],
+            digests=None if cache is None else cache.digests(req.prompt),
+            seq=rec["seq"],
+            deadline_t=(None if rec["deadline_remaining"] is None
+                        else now + rec["deadline_remaining"]))
+        m.pending_inserts = [
+            (n, jax.tree_util.tree_map(
+                jnp.asarray, restored["pending"][f"s{rec['slot']}_p{j}"]))
+            for j, n in enumerate(rec["pending"])]
+        if m.deadline_t is not None:
+            sch._has_deadlines = True
+        sch.slots[rec["slot"]] = m
+    for rec in meta["queue"]:
+        req = Request(**rec["req"])
+        sch.queue.append(req)
+        qm = _Queued(
+            seq=rec["seq"], enqueue_tick=rec["enqueue_tick"],
+            deadline_t=(None if rec["deadline_remaining"] is None
+                        else now + rec["deadline_remaining"]),
+            digests=None if cache is None else cache.digests(req.prompt))
+        if qm.deadline_t is not None:
+            sch._has_deadlines = True
+        sch._queued[req.rid] = qm
+
+    # -- engine bookkeeping: rid counter + handles with resumed output -----
+    engine._next_rid = meta["next_rid"]
+    for rec in meta["slots"]:
+        h = RequestHandle(sch.slots[rec["slot"]].req)
+        h.resumed = list(rec["generated"])
+        engine._handles[h.rid] = h
+    for req in sch.queue:
+        engine._handles[req.rid] = RequestHandle(req)
+    counters.on_restore(resumed_lanes=len(meta["slots"]))
+    return engine

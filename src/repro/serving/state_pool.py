@@ -37,6 +37,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SlotStatePool:
@@ -62,7 +63,7 @@ class SlotStatePool:
         # fresh batch-1 template used by reset_slot
         self._fresh = model.init_slot_state(1, max_len, dtype)
         self._free = list(range(self.max_slots - 1, -1, -1))  # pop -> slot 0
-        self._read, self._write = self._build_ops()
+        self._read, self._write, self._finite = self._build_ops()
 
     # -- device ops (jitted once; slot index is a traced scalar) -----------
 
@@ -86,7 +87,23 @@ class SlotStatePool:
                     leaf, ln.astype(leaf.dtype), start))
             return jax.tree_util.tree_unflatten(tdef, out)
 
-        return jax.jit(read), jax.jit(write, donate_argnums=(0,))
+        def finite(state):
+            # one (max_slots,) bool: lane i is True iff EVERY floating
+            # element of every leaf's lane-i slice is finite.  Non-float
+            # leaves can't go NaN and are skipped.  Each leaf reduces over
+            # all axes except its slot axis, then the leaves AND together.
+            ok = None
+            for leaf, ax in zip(jax.tree_util.tree_leaves(state), axes):
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    continue
+                red = tuple(i for i in range(leaf.ndim) if i != ax)
+                lane_ok = jnp.all(jnp.isfinite(
+                    leaf.astype(jnp.float32)), axis=red)
+                ok = lane_ok if ok is None else ok & lane_ok
+            return ok
+
+        return (jax.jit(read), jax.jit(write, donate_argnums=(0,)),
+                jax.jit(finite))
 
     # -- slot lifecycle ----------------------------------------------------
 
@@ -121,6 +138,25 @@ class SlotStatePool:
     def reset_slot(self, slot: int):
         """Restore slot `slot` to the fresh (just-initialized) state."""
         self.write_slot(slot, self._fresh)
+
+    def lane_finite(self):
+        """Per-lane NaN/Inf sentinel: a (max_slots,) bool numpy array,
+        True where every floating state element of that lane is finite.
+        ONE jitted reduction over the whole pool (traced once), so a
+        sentinel sweep costs a single device call regardless of slot
+        count.  The scheduler's quarantine path consumes this
+        (docs/operations.md §sentinels)."""
+        return np.asarray(self._finite(self.state))
+
+    def poison_slot(self, slot: int, value: float = float("nan")):
+        """Overwrite every floating leaf of lane `slot` with `value` —
+        the `corrupt_state_leaf` fault drill's hammer (and a debugging
+        aid for the sentinel sweep).  Integer leaves are left alone."""
+        lane = self.read_slot(slot)
+        poisoned = jax.tree_util.tree_map(
+            lambda x: jnp.full_like(x, value)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, lane)
+        self.write_slot(slot, poisoned)
 
     def sync(self):
         """Block until every in-flight update to the pool buffers has

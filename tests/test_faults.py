@@ -1,10 +1,13 @@
 """Serving fault-injection drills (ServingFaultInjector): cache-probe
 failures degrade to misses, forced evictions — mid-prefill and from
-inside a token callback, i.e. mid-speculation — and forced deadline
-expiry.  Every drill asserts the robustness invariants: pool free list
-restored, no cache lease leaked (`check_state` + refcounts), tick-local
-speculation state empty between ticks, and a seeded surviving request's
-token stream bit-identical to a fault-free run (RNG-stream isolation)."""
+inside a token callback, i.e. mid-speculation — forced deadline expiry,
+and the crash-safety kinds: typed in-process crashes (`crash_at_tick`),
+torn snapshot writes that restore must refuse, and state-leaf corruption
+that the NaN/Inf sentinels quarantine and requeue losslessly.  Every
+drill asserts the robustness invariants: pool free list restored, no
+cache lease leaked (`check_state` + refcounts), tick-local speculation
+state empty between ticks, and a seeded surviving request's token
+stream bit-identical to a fault-free run (RNG-stream isolation)."""
 import jax
 import pytest
 
@@ -183,3 +186,78 @@ def test_churn_every_fault_kind_holds_invariants(rwkv4, plan4):
     assert snap["finished"] == 1 and snap["cancelled"] == 2
     assert snap["deadline_evicted"] == 1 and snap["cache_errors"] == 1
     assert eng.trace_counts == {"decode": 1, "prefill": 1}
+
+
+def test_crash_fault_raises_typed_engine_crash(rwkv4):
+    """`crash_at_tick` fires at the TOP of the tick, before any work:
+    the raised EngineCrash carries the tick, and every snapshot already
+    committed is consistent with respect to the crash point."""
+    from repro.runtime.monitor import EngineCrash
+    model, params = rwkv4
+    inj = ServingFaultInjector(schedule={3: [("crash_at_tick", "raise")]})
+    eng = ServingEngine(model, params=params, prefill_chunk=4,
+                        max_batch=2, fault_injector=inj)
+    eng.submit([1, 2, 3, 4], max_new_tokens=8)
+    with pytest.raises(EngineCrash) as ei:
+        eng.run()
+    assert ei.value.tick == 3
+    assert inj.fired == [(3, "crash_at_tick", "raise")]
+
+
+def test_restore_refuses_torn_only_directory(rwkv4, tmp_path):
+    """`torn_snapshot_write` with the automatic cadence off leaves a
+    directory holding ONLY a torn staging dir — exactly what a host
+    crash during the very first save leaves.  Restore must refuse it
+    (nothing committed), not half-restore the partial write."""
+    from repro.serving import SnapshotConfig
+    model, params = rwkv4
+    inj = ServingFaultInjector(
+        schedule={2: [("torn_snapshot_write", None)]})
+    eng = ServingEngine(model, params=params, prefill_chunk=4,
+                        max_batch=2, fault_injector=inj,
+                        snapshot=SnapshotConfig(directory=str(tmp_path),
+                                                every=0))
+    h = eng.submit([1, 2, 3, 4], max_new_tokens=4)
+    eng.run()
+    assert h.outcome == "finished"
+    names = sorted(n for n in tmp_path.iterdir())
+    assert [n.name.startswith(".tmp-step_") for n in names] == [True]
+    with pytest.raises(FileNotFoundError):
+        ServingEngine.restore(str(tmp_path), params=params)
+
+
+def test_corrupt_state_leaf_quarantine_leaks_nothing(rwkv4, plan4):
+    """`corrupt_state_leaf` + sentinels: the poisoned lane is
+    quarantined and requeued, the replayed stream and a seeded
+    co-resident survivor are bit-identical to a fault-free run, and
+    nothing leaks — pool free list restored, no cache lease held, no
+    stale queue/handle entries."""
+    model, _ = rwkv4
+
+    def run(faulted):
+        cache = _fresh_cache()
+        inj = ServingFaultInjector() if faulted else None
+        eng = ServingEngine(model, plan=plan4, max_batch=2,
+                            prefix_cache=cache, fault_injector=inj,
+                            sentinel_every=1)
+        victim = eng.submit([1, 2, 3, 4, 5, 6], max_new_tokens=6)
+        surv = eng.submit([7, 8, 9], max_new_tokens=6,
+                          temperature=0.8, seed=11)
+        if faulted:
+            inj.schedule[3] = [("corrupt_state_leaf", victim.rid)]
+        eng.run()
+        return eng, cache, victim, surv
+
+    _, _, base_victim, base_surv = run(faulted=False)
+    eng, cache, victim, surv = run(faulted=True)
+    assert eng.counters.quarantined_lanes == 1
+    assert victim.outcome == "finished"
+    assert victim.tokens == base_victim.tokens   # lossless replay
+    assert victim.resumed == []
+    assert surv.outcome == "finished"
+    assert surv.tokens == base_surv.tokens       # RNG-stream isolation
+    assert eng.pool.n_free == 2
+    assert not eng.scheduler.slots and not eng.scheduler.queue
+    assert not eng.scheduler._queued and not eng._handles
+    cache.check_state()
+    assert all(r == 0 for r in _refcounts(cache))
