@@ -133,38 +133,53 @@ def build_per_op_step(model):
 
 
 # ---------------------------------------------------------------------------
-# HBM bytes/token (analytic; see docs/kernels.md §bandwidth)
+# HBM bytes/token (weight stream measured from the ACTUAL arrays;
+# activation/state round-trips analytic — see docs/kernels.md §bandwidth)
 # ---------------------------------------------------------------------------
 
 
-def hbm_bytes_per_token(cfg, batch: int, packed: bool) -> dict:
-    """Analytic bytes/token per decode path.
+def hbm_bytes_per_token(cfg, batch: int, params, prep) -> dict:
+    """Bytes/token per decode path.
 
     Weight stream: every path reads each weight once per step (XLA/Pallas
-    keep them HBM-resident), at 2 B (bf16) or 1 B + per-channel scales
-    (Δ-PoT W8).  Per-op additionally round-trips every intermediate
-    (written by one launch, read by the next): ~18 (B, D)-sized
-    activations + r/k/v/gates per layer, plus the state twice per
-    launch touching it.  Monolithic (decode_step under ONE jit) lets XLA
-    fuse the elementwise chains, but every matmul output (r/k/v, wo, the
-    FFN pair's two D-wide and one F-wide products — 6 D-wide + 1 F-wide
-    per layer) still materializes between its kernels, written once and
-    read once, plus the state both ways.  Fused-block writes only the new
-    state and the block output — but the residual still crosses HBM
-    between the L launches.  Fused-model eliminates those L round-trips
-    too: the residual enters and leaves HBM exactly once per step."""
+    keep them HBM-resident) EXCEPT the embedding table, which is a
+    batch-row gather — `batch` rows at the stored dtype, not a full-table
+    scan.  The per-path weight bytes come straight from
+    `common.tree_hbm_bytes` over the tree that path actually consumes:
+    the raw (fp or packed) tree for per-op / mono / fused-block, the
+    prepared megakernel tree (per-dtype contiguous slabs + aux const
+    maps) for fused-model — so bf16 (2 B), Δ-PoT W8 codes (1 B), W4
+    nibble pairs (0.5 B) and VQ indices (1 B + codebook) are priced at
+    their true stored sizes, and a new weight plane changes the number
+    without anyone editing a formula here.
+
+    Activation/state traffic stays analytic per path: per-op round-trips
+    every intermediate (written by one launch, read by the next) — ~18
+    (B, D)-sized activations + the F-wide FFN pair per layer, plus the
+    state twice per launch touching it.  Monolithic fuses the elementwise
+    chains but still materializes every matmul output (6 D-wide + 1
+    F-wide per layer) between its kernels, plus the state both ways.
+    Fused-block writes only the new state and the block output — but the
+    residual still crosses HBM between the L launches.  Fused-model
+    eliminates those L round-trips too: the residual enters and leaves
+    HBM exactly once per step."""
+    from benchmarks.common import tree_hbm_bytes
     D, F, Lc, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
-    wb = 1 if packed else 2
-    per_layer_w = (5 * D * D + 2 * D * F) * wb + (7 * D * 4 if packed else 0)
-    weights = Lc * per_layer_w + (V * D + D * V) * wb
+
+    def weight_stream(tree):
+        emb = tree["embed"]
+        isz = jnp.dtype(emb.dtype).itemsize
+        return tree_hbm_bytes(tree) - int(emb.size) * isz + batch * D * isz
+
+    w_tree, w_mega = weight_stream(params), weight_stream(prep)
     state = Lc * 5 * batch * D * 2          # bf16 state leaves
     act = batch * D * 2
     per_layer_int = 18 * act + 2 * batch * F * 2
-    per_op = weights + Lc * (per_layer_int * 2 + state // Lc * 2)
+    per_op = w_tree + Lc * (per_layer_int * 2 + state // Lc * 2)
     per_layer_mm = (6 * act + batch * F * 2) * 2    # matmul outs, w+r
-    mono = weights + state * 2 + Lc * per_layer_mm + 2 * act + batch * V * 4
-    fused_block = weights + state * 2 + Lc * act * 2 + batch * V * 4
-    fused_model = weights + state * 2 + 2 * act + batch * V * 4
+    mono = w_tree + state * 2 + Lc * per_layer_mm + 2 * act + batch * V * 4
+    fused_block = w_tree + state * 2 + Lc * act * 2 + batch * V * 4
+    fused_model = w_mega + state * 2 + 2 * act + batch * V * 4
     return {"per_op": per_op / batch,
             "mono": mono / batch,
             "fused_block": fused_block / batch,
@@ -235,7 +250,7 @@ def bench_depth(cfg, batch: int, iters: int, records: list,
                           np.asarray(l_fm, np.float32))
 
     # --- fp variants (state carried across steps, like the engine) ---------
-    hbm = hbm_bytes_per_token(cfg, batch, packed=False)
+    hbm = hbm_bytes_per_token(cfg, batch, params, prep)
     variants = {
         "per_op": _carried(lambda s: per_op_step(cast, layer_params, s,
                                                  toks)),
@@ -293,7 +308,7 @@ def bench_quantized(cfg, batch: int, iters: int, records: list,
     assert np.array_equal(np.asarray(l_mq, np.float32),
                           np.asarray(l_mq2, np.float32))
 
-    hbm = hbm_bytes_per_token(cfg, batch, packed=True)
+    hbm = hbm_bytes_per_token(cfg, batch, packed, prep_q)
     variants = {
         "mono": _carried(lambda s: mono_q(packed, s, toks)),
         "fused_block": _carried(lambda s: fused_bq(packed, s, toks)),

@@ -31,6 +31,22 @@ def tokens_per_s(step_fn, batch: int, *, warmup: int = 1,
                              1e-9)
 
 
+def tree_hbm_bytes(tree) -> int:
+    """ACTUAL bytes of every array in a pytree — the HBM residency of a
+    weight set as stored, not an analytic guess.  Works on raw fp trees,
+    packed trees (W8 uint8 codes, W4 nibble pairs at half the bytes, VQ
+    uint8 indices + bf16 codebooks) and prepared megakernel trees
+    (`FusedLayerStack` is a registered pytree, so its per-dtype slabs and
+    aux const maps are counted at their true dtypes).  This is what the
+    decode benchmarks' bytes/token accounting is derived from, so a new
+    weight plane changes the number without anyone editing a formula."""
+    total = 0
+    for a in jax.tree_util.tree_leaves(tree):
+        if hasattr(a, "dtype") and hasattr(a, "size"):
+            total += int(a.size) * jax.numpy.dtype(a.dtype).itemsize
+    return total
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 

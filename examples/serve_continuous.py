@@ -29,12 +29,25 @@ def main():
                     help="pool slots (< requests exercises queueing)")
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--plane-policy", default=None,
+                    choices=["w8", "w4", "vq", "proxy"],
+                    help="per-tensor weight-plane preset (implies "
+                         "--quantized); default keeps all-W8 packing")
     args = ap.parse_args()
+
+    plane_policy = None
+    if args.plane_policy is not None:
+        from repro.core.quant import (PLANE_PROXY, PLANE_VQ, PLANE_W4,
+                                      PLANE_W8)
+        plane_policy = {"w8": PLANE_W8, "w4": PLANE_W4, "vq": PLANE_VQ,
+                        "proxy": PLANE_PROXY}[args.plane_policy]
+        args.quantized = True
 
     model = get_model(args.arch, smoke=args.smoke)
     params = model.init_params(jax.random.PRNGKey(0))
     engine = ServingEngine(model, params=params, max_batch=args.max_batch,
-                           prefill_chunk=8, quantized=args.quantized)
+                           prefill_chunk=8, quantized=args.quantized,
+                           plane_policy=plane_policy)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, model.cfg.vocab,
@@ -42,8 +55,9 @@ def main():
                for _ in range(args.requests)]
     handles = [engine.submit(p, max_new_tokens=args.tokens)
                for p in prompts]
+    quant_label = engine.plan.cache_variant().quant
     print(f"{args.requests} requests -> {args.max_batch}-slot pool "
-          f"({'Δ-PoT W8' if args.quantized else 'fp'} weights)\n")
+          f"({quant_label} weights)\n")
 
     # stream: drive the engine and print tokens as each request emits them
     streamed: dict[int, list[int]] = {h.rid: [] for h in handles}

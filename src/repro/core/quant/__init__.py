@@ -4,7 +4,9 @@ Exports:
   delta_pot   — the paper's Δ-PoT additive-powers-of-two format (§3.1)
   uniform     — 9-bit uniform symmetric quantization (§3.2)
   schemes     — baselines reproduced for the Table-1 ablation (RTN/PoT/LogQ)
-  policy      — mixed-precision policy over a parameter tree (§3.2)
+  policy      — mixed-precision policy over a parameter tree (§3.2), plus
+                the per-tensor plane selection (W8/W4/VQ, RWKVQuant-style)
+  vq          — per-tensor k-means codebook plane (uint8 indices)
 """
 from repro.core.quant.delta_pot import (
     DPotFormat,
@@ -15,6 +17,13 @@ from repro.core.quant.delta_pot import (
     dpot_fake_quant,
     dpot_pack_int8,
     dpot_unpack_int8,
+    dpot_pack_nibbles,
+    dpot_unpack_nibbles,
+)
+from repro.core.quant.vq import (
+    kmeans_1d,
+    vq_quantize,
+    vq_dequantize,
 )
 from repro.core.quant.uniform import (
     uniform_quantize,
@@ -29,7 +38,13 @@ from repro.core.quant.schemes import (
 )
 from repro.core.quant.policy import (
     QuantPolicy,
+    PlanePolicy,
+    PLANE_W8,
+    PLANE_W4,
+    PLANE_VQ,
+    PLANE_PROXY,
     classify_param,
+    weight_outlier_proxy,
     quantize_tree,
     fake_quantize_tree,
 )
@@ -37,8 +52,11 @@ from repro.core.quant.policy import (
 __all__ = [
     "DPotFormat", "DPotQuantized", "dpot_levels", "dpot_quantize",
     "dpot_dequantize", "dpot_fake_quant", "dpot_pack_int8",
-    "dpot_unpack_int8", "uniform_quantize", "uniform_dequantize",
+    "dpot_unpack_int8", "dpot_pack_nibbles", "dpot_unpack_nibbles",
+    "kmeans_1d", "vq_quantize", "vq_dequantize",
+    "uniform_quantize", "uniform_dequantize",
     "uniform_fake_quant", "rtn_fake_quant", "pot_fake_quant",
-    "logq_fake_quant", "SCHEMES", "QuantPolicy", "classify_param",
-    "quantize_tree", "fake_quantize_tree",
+    "logq_fake_quant", "SCHEMES", "QuantPolicy", "PlanePolicy",
+    "PLANE_W8", "PLANE_W4", "PLANE_VQ", "PLANE_PROXY", "classify_param",
+    "weight_outlier_proxy", "quantize_tree", "fake_quantize_tree",
 ]

@@ -71,8 +71,12 @@ class DPotFormat:
 # The paper's formats --------------------------------------------------------
 #   W9 "proposed": sign + ks=(4,4)  -> Table-1 accuracy row
 #   W8 kernel fmt: sign + ks=(3,4)  -> packs into a single int8 for Pallas
+#   W4 sub-byte  : sign + ks=(3,)   -> TWO weights per uint8 (nibble pair);
+#                  the RWKVQuant-direction bandwidth plane — single-term PoT
+#                  levels {0, 2^-1 .. 2^-7}, half the slab traffic of W8
 FORMAT_W9 = DPotFormat(ks=(4, 4))
 FORMAT_W8 = DPotFormat(ks=(3, 4))
+FORMAT_W4 = DPotFormat(ks=(3,))
 FORMAT_POT4 = DPotFormat(ks=(4,))  # degenerate single-term = classic PoT
 
 
@@ -301,4 +305,47 @@ def dpot_unpack_int8(packed: jnp.ndarray, scale: jnp.ndarray,
     ks = tuple(ks)
     codes = (packed & 0x7F).astype(jnp.uint8)
     signs = jnp.where((packed >> 7) & 1, -1, 1).astype(jnp.int8)
+    return DPotQuantized(codes=codes, signs=signs, scale=scale, ks=ks)
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packing: TWO sign+code nibbles per uint8 (requires code_bits <= 3).
+# Nibble layout mirrors the int8 word at quarter width:
+#   bit 3   : sign (1 = negative)
+#   bits 2:0: code (term 0 in low bits)
+# Elements pair along axis -2 — the CONTRACTION axis of a (K, N) weight — so
+# row 2k lands in the low nibble and row 2k+1 in the high nibble of packed
+# row k, and the output-channel axis (per-channel scales, slab column
+# layout) is untouched.  A (K, N) weight becomes a (K/2, N) uint8 plane:
+# half the HBM bytes of the int8 packing above.
+# ---------------------------------------------------------------------------
+
+
+def dpot_pack_nibbles(q: DPotQuantized) -> jnp.ndarray:
+    fmt = q.fmt
+    if fmt.code_bits > 3:
+        raise ValueError(
+            f"format {fmt.ks} needs {fmt.code_bits} code bits; only <=3 pack "
+            "into a nibble with the sign — use FORMAT_W4 (ks=(3,))")
+    if q.codes.ndim < 2 or q.codes.shape[-2] % 2 != 0:
+        raise ValueError(
+            f"nibble packing pairs along axis -2; shape {q.codes.shape} "
+            "needs >= 2 dims and an even axis -2")
+    word = (q.codes | ((q.signs < 0).astype(jnp.uint8) << 3)).astype(
+        jnp.uint8)
+    lo = word[..., 0::2, :]
+    hi = word[..., 1::2, :]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def dpot_unpack_nibbles(packed: jnp.ndarray, scale: jnp.ndarray,
+                        ks: Sequence[int]) -> DPotQuantized:
+    ks = tuple(ks)
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    words = jnp.stack([lo, hi], axis=-2)           # (..., K/2, 2, N)
+    full = packed.shape[:-2] + (2 * packed.shape[-2], packed.shape[-1])
+    words = words.reshape(full)                    # rows re-interleave
+    codes = (words & 0x7).astype(jnp.uint8)
+    signs = jnp.where((words >> 3) & 1, -1, 1).astype(jnp.int8)
     return DPotQuantized(codes=codes, signs=signs, scale=scale, ks=ks)

@@ -8,6 +8,15 @@ XLA reads int8 from HBM and fuses the decode into the consumer matmuls —
 weight traffic halves vs bf16 (the paper's bandwidth win), at the Table-1
 accuracy cost.
 
+Two sub-8-bit planes extend the stack (RWKVQuant direction, PAPERS.md):
+a W4 plane packing TWO sign+3-bit Δ-PoT codes per uint8 along the
+contraction axis ({"packed4", "scale"} — half the W8 slab bytes), and a
+per-tensor VQ plane of uint8 codebook indices ({"vq_idx", "codebook"} —
+the bf16 codebook rides the resident const maps like the shared scales).
+`core.quant.policy.PlanePolicy` picks the plane per tensor; every decode
+goes through the same `unpack_leaf`, so mixed-plane trees stay
+bit-identical across the per-op and fused paths.
+
 API:
   pack_params(params)          -> packed tree (+ additive leaves cast bf16)
   unpack_params(packed)        -> compute tree (call inside jit)
@@ -40,30 +49,67 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant.delta_pot import (
-    FORMAT_W8, dpot_decode_codes, dpot_pack_int8, dpot_quantize)
-from repro.core.quant.policy import classify_param
+    FORMAT_W4, FORMAT_W8, dpot_decode_codes, dpot_pack_int8,
+    dpot_pack_nibbles, dpot_quantize)
+from repro.core.quant.policy import PlanePolicy, classify_param
+from repro.core.quant.vq import vq_dequantize, vq_quantize
+
+# The three quantized weight-plane leaf forms (one dict shape per plane):
+#   w8 — {"packed":  uint8 (..., K, N),   "scale": f32 (1,...,N)}  sign+7b
+#   w4 — {"packed4": uint8 (..., K/2, N), "scale": f32 (1,...,N)}  2/byte
+#   vq — {"vq_idx":  uint8 (..., K, N),   "codebook": bf16 (1, C)} gather
+_PLANE_KEYS = {
+    frozenset({"packed", "scale"}): "w8",
+    frozenset({"packed4", "scale"}): "w4",
+    frozenset({"vq_idx", "codebook"}): "vq",
+}
+
+
+def leaf_plane(leaf) -> str | None:
+    """"w8" | "w4" | "vq" for a quantized plane leaf, None otherwise."""
+    if not isinstance(leaf, dict):
+        return None
+    return _PLANE_KEYS.get(frozenset(leaf))
 
 
 def is_packed_leaf(leaf) -> bool:
-    """True for a `{"packed", "scale"}` Δ-PoT leaf — THE predicate for the
-    packed format (the fused decode kernel and models import it from here
-    so the format has a single source of truth)."""
-    return isinstance(leaf, dict) and set(leaf) == {"packed", "scale"}
+    """True for ANY quantized weight-plane leaf (scalar Δ-PoT W8, nibble-
+    packed W4, or VQ codebook) — THE predicate for the packed formats (the
+    fused kernels and models import it from here so the formats have a
+    single source of truth)."""
+    return leaf_plane(leaf) is not None
 
 
 _is_packed = is_packed_leaf
 
 
-def pack_params(params):
-    """Quantize every matmul weight to packed Δ-PoT W8; cast the rest bf16."""
+def pack_params(params, policy: PlanePolicy | None = None):
+    """Quantize every matmul weight to a packed plane; cast the rest bf16.
+
+    Without a `policy` every matmul weight gets scalar Δ-PoT W8 (the
+    historical behavior).  With a `PlanePolicy`, each tensor's plane is
+    selected per tensor (proxy-guided or forced) — "w4" halves the stored
+    code bytes via nibble pairing (falling back to W8 when the contraction
+    axis is odd, so any tree packs), "vq" stores uint8 codebook indices."""
     flat, tdef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
         if classify_param(key, leaf) == "matmul":
-            q = dpot_quantize(leaf, FORMAT_W8, axis=-1)
-            out.append({"packed": dpot_pack_int8(q),
-                        "scale": q.scale.astype(jnp.float32)})
+            plane = "w8" if policy is None else policy.plane_for(key, leaf)
+            if plane == "w4" and (leaf.ndim < 2 or leaf.shape[-2] % 2):
+                plane = "w8"        # nibble pairing needs an even axis -2
+            if plane == "vq":
+                idx, codebook = vq_quantize(leaf, policy.vq_codes)
+                out.append({"vq_idx": idx, "codebook": codebook})
+            elif plane == "w4":
+                q = dpot_quantize(leaf, FORMAT_W4, axis=-1)
+                out.append({"packed4": dpot_pack_nibbles(q),
+                            "scale": q.scale.astype(jnp.float32)})
+            else:
+                q = dpot_quantize(leaf, FORMAT_W8, axis=-1)
+                out.append({"packed": dpot_pack_int8(q),
+                            "scale": q.scale.astype(jnp.float32)})
         else:
             out.append(leaf.astype(jnp.bfloat16)
                        if hasattr(leaf, "astype") else leaf)
@@ -71,13 +117,30 @@ def pack_params(params):
 
 
 def unpack_leaf(leaf):
-    """Decode one `{"packed", "scale"}` leaf -> bf16 weights (identity on
+    """Decode one quantized plane leaf -> bf16 weights (identity on
     anything else).  The single source of truth for the decode numerics:
     both `unpack_params` (per-op path, whole tree before the matmuls) and
-    the fused decode kernel (per leaf, inside the launch) call this, which
-    is what makes the two paths bit-identical."""
-    if not _is_packed(leaf):
+    the fused kernels (per leaf, inside the launch) call this, which is
+    what makes the paths bit-identical.  W4 re-interleaves the nibble
+    pairs along the contraction axis before the same exp2 decode; VQ is a
+    flat codebook gather (shape-agnostic: resident (1, C), in-kernel (C,)
+    and scan-broadcast forms all index identically)."""
+    plane = leaf_plane(leaf)
+    if plane is None:
         return leaf
+    if plane == "vq":
+        return vq_dequantize(leaf["vq_idx"],
+                             leaf["codebook"]).astype(jnp.bfloat16)
+    if plane == "w4":
+        p = leaf["packed4"]
+        lo = p & 0xF
+        hi = (p >> 4) & 0xF
+        words = jnp.stack([lo, hi], axis=-2).reshape(
+            p.shape[:-2] + (2 * p.shape[-2], p.shape[-1]))
+        codes = (words & 0x7).astype(jnp.uint8)
+        sign = jnp.where((words >> 3) & 1, -1.0, 1.0)
+        lvl = dpot_decode_codes(codes, FORMAT_W4.ks)
+        return (sign * lvl * leaf["scale"]).astype(jnp.bfloat16)
     p = leaf["packed"]
     codes = (p & 0x7F).astype(jnp.uint8)
     sign = jnp.where((p >> 7) & 1, -1.0, 1.0)
@@ -89,24 +152,49 @@ def broadcast_packed_scales(blocks, n_layers: int):
     """Make a packed stacked-blocks tree sliceable along the layer axis.
 
     `pack_params` gives a stacked weight (L, ...) one shared scale with a
-    broadcast leading 1 (e.g. (1, 1, D)); consumers that *slice* the tree
-    per layer — `lax.scan` over blocks, or the per-block fused kernel's
-    scanned operands — need every leaf to carry the L axis, so the scale is
-    broadcast to (L, ...) here.  The per-layer slice then multiplies
-    element-for-element exactly as the whole-tree broadcast would, keeping
-    the decode bit-identical.  The whole-model megakernel does NOT need
-    this: `kernels.fused_decode.fused_model_decode` recognizes leading-1
-    leaves and streams them with a constant index map instead (the shared
-    scale stays resident while the uint8 codes are layer-sliced in-kernel).
-    """
+    broadcast leading 1 (e.g. (1, 1, D)) — and a VQ leaf one shared (1, C)
+    codebook; consumers that *slice* the tree per layer — `lax.scan` over
+    blocks, or the per-block fused kernel's scanned operands — need every
+    leaf to carry the L axis, so the shared leaf is broadcast to (L, ...)
+    here.  The per-layer slice then decodes element-for-element exactly as
+    the whole-tree broadcast would, keeping the decode bit-identical.  The
+    whole-model megakernel does NOT need this:
+    `kernels.fused_decode.fused_model_decode` recognizes leading-1 leaves
+    and streams them with a constant index map instead (the shared scale /
+    codebook stays resident while the uint8 codes are layer-sliced
+    in-kernel)."""
     def fix(leaf):
         if not is_packed_leaf(leaf):
             return leaf
-        scale = leaf["scale"]
-        return {"packed": leaf["packed"],
-                "scale": jnp.broadcast_to(
-                    scale, (n_layers,) + tuple(scale.shape[1:]))}
+        out = {}
+        for k, v in leaf.items():
+            if k in ("scale", "codebook") and v.shape[0] == 1:
+                v = jnp.broadcast_to(v, (n_layers,) + tuple(v.shape[1:]))
+            out[k] = v
+        return out
     return jax.tree_util.tree_map(fix, blocks, is_leaf=is_packed_leaf)
+
+
+def plane_fingerprint(params) -> str:
+    """The quant-form fingerprint of a (possibly packed) tree, for the
+    prefix-cache variant key and snapshot `build_config`.
+
+    "fp" when nothing is packed and exactly "dpot_w8" when every quant
+    leaf is scalar W8 (the historical CacheVariant strings, so existing
+    cache entries / snapshots stay valid); any other mix hashes the
+    ordered (path, plane) selection — two different per-tensor policies
+    can NEVER alias to the same variant."""
+    import hashlib
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_packed_leaf)
+    kinds = [(jax.tree_util.keystr(path), leaf_plane(leaf))
+             for path, leaf in flat if is_packed_leaf(leaf)]
+    if not kinds:
+        return "fp"
+    if all(k == "w8" for _, k in kinds):
+        return "dpot_w8"
+    h = hashlib.blake2b(repr(kinds).encode(), digest_size=4).hexdigest()
+    return f"dpot_mix_{h}"
 
 
 def unpack_params(packed):

@@ -1,0 +1,84 @@
+"""Per-tensor codebook (vector-quantized) weight plane — the RWKVQuant
+direction (arXiv 2505.03803): where scalar quantization degrades (outlier-
+heavy tensors whose per-channel scale is set by a few extreme weights), a
+small learned codebook keeps accuracy at the same stored width.
+
+Storage form: uint8 indices shaped like the weight + a <=256-entry bf16
+codebook.  In the serving stack the indices ride the uint8 slab exactly
+like Δ-PoT code planes, while the codebook — a leading-1 leaf, like the
+shared packed scales — stays VMEM-resident via `fuse_layer_stack`'s aux
+path; the gather decode runs INSIDE the consumer kernels
+(`core.quant.serving.unpack_leaf` is the single source of decode truth).
+
+Fitting is deterministic scalar k-means (Lloyd): quantile-spaced init over
+a deterministic subsample, exact nearest-centroid assignment via
+`searchsorted` on sorted-centroid midpoints, empty clusters keep their
+previous centroid.  Assignment happens against the bf16-ROUNDED centroids
+— the values the serving decode will actually gather — so the stored
+codebook is the one the assignment optimized.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bf16_round(x: np.ndarray) -> np.ndarray:
+    """Round f32 values to their nearest bf16 representation (as f32)."""
+    return np.asarray(jnp.asarray(x, jnp.float32).astype(jnp.bfloat16),
+                      np.float32)
+
+
+def _assign(values: np.ndarray, centroids: np.ndarray) -> np.ndarray:
+    """Exact nearest-centroid index per value (centroids sorted ascending)."""
+    mids = 0.5 * (centroids[1:] + centroids[:-1])
+    return np.searchsorted(mids, values).astype(np.int64)
+
+
+def kmeans_1d(values: np.ndarray, n_codes: int, iters: int = 16
+              ) -> np.ndarray:
+    """Deterministic 1-D Lloyd k-means; returns `n_codes` sorted centroids
+    (f32, already bf16-rounded — see module docstring)."""
+    v = np.asarray(values, np.float32).reshape(-1)
+    # quantile-spaced init covers the empirical distribution (incl. the
+    # outlier tails that motivate VQ) without any RNG
+    qs = (np.arange(n_codes, dtype=np.float64) + 0.5) / n_codes
+    cent = np.quantile(v, qs).astype(np.float32)
+    cent = np.sort(_bf16_round(cent))
+    for _ in range(iters):
+        idx = _assign(v, cent)
+        sums = np.bincount(idx, weights=v, minlength=n_codes)
+        cnts = np.bincount(idx, minlength=n_codes)
+        new = np.where(cnts > 0, sums / np.maximum(cnts, 1), cent)
+        new = np.sort(_bf16_round(new.astype(np.float32)))
+        if np.array_equal(new, cent):
+            break
+        cent = new
+    return cent
+
+
+def vq_quantize(w, n_codes: int = 256, iters: int = 16,
+                sample: int = 1 << 16) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fit a per-tensor codebook and assign every weight.
+
+    Returns (idx, codebook): uint8 indices shaped like `w`, and a bf16
+    codebook of shape (1, n_codes) — the leading 1 marks it as a shared
+    broadcast leaf for `fuse_layer_stack` (resident operand, like the
+    Δ-PoT scales)."""
+    if not 2 <= n_codes <= 256:
+        raise ValueError(f"n_codes={n_codes}: uint8 indices need 2..256")
+    v = np.asarray(w, np.float32).reshape(-1)
+    fit = v if v.size <= sample else v[:: (v.size + sample - 1) // sample]
+    cent = kmeans_1d(fit, n_codes, iters)
+    idx = _assign(v, cent).astype(np.uint8).reshape(np.shape(w))
+    codebook = jnp.asarray(cent, jnp.float32).astype(
+        jnp.bfloat16).reshape(1, n_codes)
+    return jnp.asarray(idx), codebook
+
+
+def vq_dequantize(idx: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Gather decode: bf16 weights shaped like `idx`.  Shape-agnostic in
+    the codebook (flattened before the gather) so slab/aux re-layouts —
+    (1, C) resident, (C,) squeezed in-kernel, (L, C) broadcast for scanned
+    paths — all decode identically."""
+    return codebook.reshape(-1)[idx.astype(jnp.int32)]

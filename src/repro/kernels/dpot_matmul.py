@@ -88,3 +88,60 @@ def dpot_matmul(x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray, *,
         interpret=interpret_default(interpret),
     )(x, wq, scale)
     return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# W4 nibble variant: two sign+3-bit codes per uint8, paired along K (the
+# FORMAT_W4 packing of core.quant.delta_pot.dpot_pack_nibbles).  Same
+# K-blocked f32-accumulator structure as `dpot_matmul`, but each streamed
+# uint8 tile is (bk/2, bn) — HALF the code bytes per contraction block.
+# Nibble layout: bit 3 = sign, bits 2:0 = Δq (single term, level 2^-Δq).
+# ---------------------------------------------------------------------------
+
+
+def _decode_w4(packed_u8: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """(bk/2, bn) uint8 nibble pairs -> (bk, bn) f32, VPU-only."""
+    p = packed_u8.astype(jnp.int32)
+    words = jnp.stack([p & 0xF, (p >> 4) & 0xF], axis=-2)
+    words = words.reshape(2 * packed_u8.shape[-2], packed_u8.shape[-1])
+    sign = jnp.where((words >> 3) & 1, -1.0, 1.0)
+    dq = words & 0x7
+    lvl = jnp.where(dq > 0, jnp.exp2(-dq.astype(jnp.float32)), 0.0)
+    return sign * lvl * scale
+
+
+def _kernel_w4(x_ref, wq_ref, scale_ref, o_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _decode_w4(wq_ref[...], scale_ref[...][None, :])
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dpot_matmul_w4(x: jnp.ndarray, wq4: jnp.ndarray, scale: jnp.ndarray, *,
+                   bm: int = 128, bn: int = 128, bk: int = 512,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """x: (M, K) f32/bf16; wq4: (K/2, N) uint8 nibble pairs; scale: (N,)."""
+    M, K = x.shape
+    Kh, N = wq4.shape
+    assert K == 2 * Kh and scale.shape == (N,)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert bk % 2 == 0, f"K block {bk} must cover whole nibble pairs"
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel_w4, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret_default(interpret),
+    )(x, wq4, scale)
+    return out.astype(x.dtype)

@@ -29,10 +29,12 @@ traces the caller-supplied per-block function *inside* the kernel body, so
 `models/rwkv4.py` and `models/rwkv6.py` pass the exact same block math
 their per-op `decode_step` uses — which is what makes the fused path
 bit-exact against the per-op oracle (tests/test_fused_decode.py) instead
-of merely close.  Quantized weights arrive as `{"packed", "scale"}` leaves
-in `lp` and are decoded by `block_fn` itself (via
-`core.quant.serving.unpack_leaf`), i.e. inside the launch: int8 codes are
-all that crosses HBM, exactly like `dpot_matmul`.
+of merely close.  Quantized weights arrive as plane leaves in `lp` —
+scalar `{"packed", "scale"}` W8, nibble-packed `{"packed4", "scale"}` W4
+(two codes per uint8), or `{"vq_idx", "codebook"}` VQ — and are decoded
+by `block_fn` itself (via `core.quant.serving.unpack_leaf`), i.e. inside
+the launch: uint8 codes/indices are all that crosses HBM, exactly like
+`dpot_matmul`.
 
 Grid: one program per `bb`-slot tile of the batch (default: the whole
 batch in one program — serving pools are small and the weights are shared
@@ -220,12 +222,14 @@ def fused_model_decode(block_fn, x, blocks, state, *, bb: int | None = None,
 
     In BOTH structures the weight stream is chunked
     (`core.quant.serving.fuse_layer_stack`): layer l's weights arrive as
-    one contiguous (1, N) slab row per dtype — uint8 Δ-PoT code plane,
-    bf16 plane — and the per-layer tree is rebuilt in-kernel with STATIC
-    slices (`unfuse_layer`), so each layer costs one memory stream per
-    dtype instead of one gather per leaf.  Broadcast leading-1 leaves
-    (shared packed scales, LUT tables) ride constant index maps and stay
-    resident across the whole launch.
+    one contiguous (1, N) slab row per dtype — the uint8 slab carries
+    every code plane kind (W8 bytes, W4 nibble pairs at HALF the bytes,
+    VQ indices) and the bf16 plane its floating leaves — and the
+    per-layer tree is rebuilt in-kernel with STATIC slices
+    (`unfuse_layer`), so each layer costs one memory stream per dtype
+    instead of one gather per leaf.  Broadcast leading-1 leaves (shared
+    packed scales, VQ codebooks, LUT tables) ride constant index maps and
+    stay resident across the whole launch.
 
     block_fn — per-layer decode step `(lp, st, x) -> (x2, new_st)`, traced
                inside the kernel; `lp`/`st` arrive with the layer axis

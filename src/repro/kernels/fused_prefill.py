@@ -19,9 +19,11 @@ prompt chunk per device program, with
     per-channel state in VMEM across the chunk's timesteps, with a `valid`
     commit mask so partial chunks match the per-op scan bit-for-bit.
 
-Packed Δ-PoT weights flow to prefill WITHOUT `unpack_params`: the uint8
-code planes stream HBM->VMEM tile-by-tile and decode inside the matmul
-kernel (`_mm_kernel`), so int8 codes are all that crosses HBM during the
+Packed weights flow to prefill WITHOUT `unpack_params`: the uint8 code
+planes — scalar Δ-PoT W8, nibble-packed W4 (two codes per byte, half the
+stream), VQ codebook indices — stream HBM->VMEM tile-by-tile and decode
+inside the matching matmul kernel (`_mm_kernel` / `_mm_kernel_w4` /
+`_mm_kernel_vq`), so uint8 codes are all that crosses HBM during the
 whole prompt phase — the paper's bandwidth win, extended from decode to
 prefill.  Bit-parity contract: `chunk_matmul(x, leaf, dt)` on a packed
 leaf equals `x @ unpack_leaf(leaf).astype(dt)` exactly, because the kernel
@@ -41,7 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.serving import is_packed_leaf, unpack_leaf
+from repro.core.quant.serving import is_packed_leaf, leaf_plane, unpack_leaf
 from repro.kernels.common import interpret_default
 
 
@@ -50,6 +52,24 @@ def _mm_kernel(x_ref, wq_ref, scale_ref, o_ref, *, dt):
     # compute dtype) so the fused prefill is bit-identical, not merely close
     w = unpack_leaf({"packed": wq_ref[...],
                      "scale": scale_ref[...]}).astype(dt)
+    o_ref[...] = x_ref[...] @ w
+
+
+def _mm_kernel_w4(x_ref, wq_ref, scale_ref, o_ref, *, dt):
+    # W4 nibble plane: the (K/2, bn) uint8 tile re-interleaves to (K, bn)
+    # inside VMEM via the SAME unpack_leaf as the per-op oracle — half the
+    # HBM code bytes of the W8 kernel above, identical bits out
+    w = unpack_leaf({"packed4": wq_ref[...],
+                     "scale": scale_ref[...]}).astype(dt)
+    o_ref[...] = x_ref[...] @ w
+
+
+def _mm_kernel_vq(x_ref, idx_ref, cb_ref, o_ref, *, dt):
+    # VQ plane: uint8 indices stream per tile; the whole (C,) codebook
+    # rides a constant index map and stays VMEM-resident (like the shared
+    # Δ-PoT scales) — the gather decode never touches HBM-decoded weights
+    w = unpack_leaf({"vq_idx": idx_ref[...],
+                     "codebook": cb_ref[...]}).astype(dt)
     o_ref[...] = x_ref[...] @ w
 
 
@@ -93,20 +113,91 @@ def dpot_chunk_matmul(x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray,
     )(x, wq, scale)
 
 
+@functools.partial(jax.jit, static_argnames=("dt", "bm", "bn", "interpret"))
+def w4_chunk_matmul(x: jnp.ndarray, wq4: jnp.ndarray, scale: jnp.ndarray,
+                    *, dt, bm: int = 256, bn: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """x: (M, K) @ nibble-packed wq4: (K/2, N) with per-channel scale.
+
+    Same grid/bit-parity contract as `dpot_chunk_matmul` — full K per
+    cell, decode via `unpack_leaf` in-kernel — at HALF the streamed code
+    bytes: each uint8 tile carries two contraction rows."""
+    M, K = x.shape
+    Kh, N = wq4.shape
+    assert K == 2 * Kh, (x.shape, wq4.shape)
+    scale = scale.reshape(1, N)
+    bm, bn = _fit(bm, M), _fit(bn, N)
+    out_dt = jnp.result_type(x.dtype, jnp.dtype(dt))
+    return pl.pallas_call(
+        functools.partial(_mm_kernel_w4, dt=jnp.dtype(dt)),
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((Kh, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dt),
+        interpret=interpret_default(interpret),
+    )(x, wq4, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "bm", "bn", "interpret"))
+def vq_chunk_matmul(x: jnp.ndarray, idx: jnp.ndarray, codebook: jnp.ndarray,
+                    *, dt, bm: int = 256, bn: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """x: (M, K) @ codebook[idx: (K, N)] — VQ plane chunk matmul.
+
+    uint8 indices stream tile-by-tile; the flat (C,) bf16 codebook rides
+    a CONSTANT index map (resident across the grid, like the shared Δ-PoT
+    scales).  Decode is the oracle's `unpack_leaf` gather, in-kernel."""
+    M, K = x.shape
+    K2, N = idx.shape
+    assert K == K2, (x.shape, idx.shape)
+    cb = codebook.reshape(-1)
+    C = cb.shape[0]
+    bm, bn = _fit(bm, M), _fit(bn, N)
+    out_dt = jnp.result_type(x.dtype, jnp.dtype(dt))
+    return pl.pallas_call(
+        functools.partial(_mm_kernel_vq, dt=jnp.dtype(dt)),
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((C,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dt),
+        interpret=interpret_default(interpret),
+    )(x, idx, cb)
+
+
 def chunk_matmul(x: jnp.ndarray, leaf, dt, *,
                  interpret: bool | None = None) -> jnp.ndarray:
     """`x @ leaf` over a (..., K) chunk tensor, packed-leaf aware.
 
     Plain leaves take the jnp matmul (already in compute dtype via
-    `cast_compute` — identical to the oracle by construction).  Packed
-    `{"packed", "scale"}` leaves flatten the chunk to (S·C, K) and run the
-    in-kernel-decode matmul above: bitwise `x @ unpack_leaf(leaf).astype
-    (dt)` with the codes, not the decoded bf16, crossing HBM."""
-    if not is_packed_leaf(leaf):
+    `cast_compute` — identical to the oracle by construction).  Quantized
+    plane leaves — W8 `{"packed", "scale"}`, W4 `{"packed4", "scale"}`,
+    VQ `{"vq_idx", "codebook"}` — flatten the chunk to (S·C, K) and run
+    the matching in-kernel-decode matmul above: bitwise
+    `x @ unpack_leaf(leaf).astype(dt)` with the codes/indices, not the
+    decoded bf16, crossing HBM."""
+    plane = leaf_plane(leaf)
+    if plane is None:
         return x @ leaf
     lead, K = x.shape[:-1], x.shape[-1]
-    out = dpot_chunk_matmul(x.reshape(-1, K), leaf["packed"], leaf["scale"],
-                            dt=jnp.dtype(dt).name, interpret=interpret)
+    xf = x.reshape(-1, K)
+    dt_name = jnp.dtype(dt).name
+    if plane == "w4":
+        out = w4_chunk_matmul(xf, leaf["packed4"], leaf["scale"],
+                              dt=dt_name, interpret=interpret)
+    elif plane == "vq":
+        out = vq_chunk_matmul(xf, leaf["vq_idx"], leaf["codebook"],
+                              dt=dt_name, interpret=interpret)
+    else:
+        out = dpot_chunk_matmul(xf, leaf["packed"], leaf["scale"],
+                                dt=dt_name, interpret=interpret)
     return out.reshape(*lead, out.shape[-1])
 
 

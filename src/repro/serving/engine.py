@@ -166,6 +166,7 @@ class ServingEngine:
                  smoke: bool = True, max_batch: int = 8,
                  prefill_chunk: int = 16, max_len: int = 0,
                  state_dtype=jnp.bfloat16, quantized: bool = False,
+                 plane_policy=None,
                  fused_decode: bool | str | None = False,
                  fused_prefill: bool = False, seed: int = 0,
                  speculative: Optional[int] = None,
@@ -179,6 +180,7 @@ class ServingEngine:
         if plan is None:
             plan = build_plan(model, params, smoke=smoke, mesh=mesh,
                               quantized=quantized,
+                              plane_policy=plane_policy,
                               fused_decode=fused_decode,
                               fused_prefill=fused_prefill,
                               prefill_chunk=prefill_chunk,

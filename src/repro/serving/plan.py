@@ -220,15 +220,18 @@ class ExecutionPlan:
         """The prefix-cache `CacheVariant` this plan's prefill states file
         under — derived HERE so the isolation key can never drift from
         what actually executes: arch from the model config, quant form
-        from the prepared params, prefill path from the selected
-        descriptor, state dtype from the pool dtype.  The engine's paths
-        all run exact numerics; `numerics="hw_lut"` exists for callers
-        driving the paper's LUT/PWL variant directly
-        (tests/test_prefix_cache.py)."""
+        from the prepared params' ACTUAL per-tensor planes
+        (`core.quant.serving.plane_fingerprint` — "fp" / "dpot_w8" /
+        "dpot_mix_<hash>", so two plane policies can never alias one
+        cache entry), prefill path from the selected descriptor, state
+        dtype from the pool dtype.  The engine's paths all run exact
+        numerics; `numerics="hw_lut"` exists for callers driving the
+        paper's LUT/PWL variant directly (tests/test_prefix_cache.py)."""
+        from repro.core.quant.serving import plane_fingerprint
         from repro.serving.prefix_cache import CacheVariant
         return CacheVariant(
             arch=self.model.cfg.name,
-            quant="dpot_w8" if self.prepared.quantized else "fp",
+            quant=plane_fingerprint(self.prepared.raw),
             numerics=numerics,
             prefill=self.prefill_desc.name,
             state_dtype=self.state_dtype.name)
@@ -595,6 +598,7 @@ def _registry_arch_id(cfg_name: str, smoke: bool) -> str:
 
 def build_plan(model: Model | str, params: Any = None, *,
                mesh=None, smoke: bool = True, quantized: bool = False,
+               plane_policy=None,
                fused_decode: bool | str | None = False,
                fused_prefill: bool = False, prefill_chunk: int = 16,
                max_len: int = 0, state_dtype=jnp.bfloat16,
@@ -607,8 +611,11 @@ def build_plan(model: Model | str, params: Any = None, *,
     params        — pre-built weights (f32/bf16 tree); initialized from
                     `seed` when omitted
     mesh          — a jax Mesh for data-parallel serving, or None
-    quantized     — pack weights to Δ-PoT W8 once; per-op paths unpack
-                    in-trace, fused paths decode in-kernel
+    quantized     — pack weights once; per-op paths unpack in-trace, fused
+                    paths decode in-kernel.  Default plane is Δ-PoT W8.
+    plane_policy  — a `core.quant.PlanePolicy` choosing W8 / W4-nibble /
+                    VQ-codebook per tensor (requires quantized=True); None
+                    keeps the historical all-W8 packing
     fused_decode  — False | "block" | "model" (True means "block")
     fused_prefill — False (per-op scan) | True (fused chunked path)
     speculative   — K >= 1: self-speculative decode with a K-token verify
@@ -676,9 +683,12 @@ def build_plan(model: Model | str, params: Any = None, *,
     from_seed = params is None
     if params is None:
         params = model.init_params(jax.random.PRNGKey(seed))
+    if plane_policy is not None and not quantized:
+        raise ValueError("plane_policy selects quantized weight planes; "
+                         "it does nothing without quantized=True")
     if quantized:
         from repro.core.quant.serving import pack_params
-        params = pack_params(params)
+        params = pack_params(params, plane_policy)
     prepared = PreparedParams(
         raw=params,
         decode=model.prepare_path_params(decode_desc, params,
@@ -705,6 +715,8 @@ def build_plan(model: Model | str, params: Any = None, *,
         "arch": _registry_arch_id(name, smoke_flag),
         "smoke": smoke_flag,
         "quantized": bool(quantized),
+        "plane_policy": None if plane_policy is None
+        else plane_policy.to_config(),
         "fused_decode": decode_name,
         "fused_prefill": prefill_name == "chunked",
         "prefill_chunk": int(prefill_chunk),

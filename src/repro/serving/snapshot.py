@@ -381,10 +381,15 @@ def restore_engine(directory: str, *, params: Any = None,
             "snapshot was built from externally-supplied weights "
             "(build_config.from_seed=False) — pass the same params= tree "
             "to restore; checksums will verify it")
+    from repro.core.quant.policy import PlanePolicy
     from repro.serving.plan import build_plan
     plan = build_plan(pc["arch"], params, smoke=pc["smoke"],
                       mesh=_resolve_mesh(mesh, pc),
                       quantized=pc["quantized"],
+                      # pre-plane snapshots have no key -> None -> all-W8,
+                      # exactly what they were built with
+                      plane_policy=PlanePolicy.from_config(
+                          pc.get("plane_policy")),
                       # build_config records the normalized path name;
                       # build_plan spells the unfused path False
                       fused_decode=(False if pc["fused_decode"] == "per_op"

@@ -412,3 +412,94 @@ def test_fused_capability_flag():
     z = get_model("zamba2-7b", smoke=True)
     assert not z.has_fused_decode
     assert not z.has_fused_model_decode
+
+
+# ---------------------------------------------------------------------------
+# Mixed weight planes (W8 / W4-nibble / VQ-codebook per tensor)
+# ---------------------------------------------------------------------------
+
+# One tensor family per plane so every decode branch runs: wk streams W4
+# nibble pairs, the FFN down-projection gathers a VQ codebook, the head is
+# W4, everything else stays scalar W8.
+MIXED_PLANES_POLICY = None
+
+
+def _mixed_policy():
+    global MIXED_PLANES_POLICY
+    if MIXED_PLANES_POLICY is None:
+        from repro.core.quant.policy import PlanePolicy
+        MIXED_PLANES_POLICY = PlanePolicy(default="w8", overrides=(
+            (r"\['att'\]\['wk'\]", "w4"),
+            (r"\['ffn'\]\['wv'\]", "vq"),
+            (r"\['head'\]", "w4"),
+        ))
+    return MIXED_PLANES_POLICY
+
+
+@pytest.mark.parametrize("mode", ["block", "model"])
+@pytest.mark.parametrize("arch", ARCHS)
+def test_mixed_plane_bit_parity(arch, mode, rng):
+    """A tree packed under a MIXED plane policy runs every fused decode
+    granularity bit-identically to the per-op unpack oracle: the uint8
+    slab carries W8 codes, W4 nibble pairs (half bytes) and VQ indices
+    side by side; scales AND codebooks ride the resident const maps."""
+    model = get_model(arch, smoke=True)
+    packed = pack_params(model.init_params(jax.random.PRNGKey(0)),
+                         _mixed_policy())
+    state = _random_state(model, rng)
+    toks = jnp.asarray(rng.integers(0, model.cfg.vocab, (BATCH, 1)),
+                       jnp.int32)
+    oracle = jax.jit(lambda p, s, t: model.decode_step(
+        unpack_params(p), s, t, jnp.int32(0)))
+    fused = jax.jit(lambda p, s, t: _fused_step(model, mode)(
+        p, s, t, jnp.int32(0)))
+    l1, s1 = oracle(packed, state, toks)
+    l2, s2 = fused(packed, state, toks)
+    _assert_bitwise(l1, l2)
+    _assert_bitwise(s1, s2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_mixed_plane_prepared_megakernel(arch, rng):
+    """The serving form — `prepare_fused_model_params` over a mixed-plane
+    tree (per-dtype slabs + resident codebooks) — matches the per-op
+    oracle bitwise, and still launches exactly ONE pallas_call."""
+    model = get_model(arch, smoke=True)
+    packed = pack_params(model.init_params(jax.random.PRNGKey(0)),
+                         _mixed_policy())
+    prep = model.prepare_fused_model_params(packed)
+    state = _random_state(model, rng)
+    toks = jnp.asarray(rng.integers(0, model.cfg.vocab, (BATCH, 1)),
+                       jnp.int32)
+    oracle = jax.jit(lambda p, s, t: model.decode_step(
+        unpack_params(p), s, t, jnp.int32(0)))
+    mega = jax.jit(lambda p, s, t: model.decode_step_fused_model(
+        p, s, t, jnp.int32(0)))
+    l1, s1 = oracle(packed, state, toks)
+    l2, s2 = mega(prep, state, toks)
+    _assert_bitwise(l1, l2)
+    _assert_bitwise(s1, s2)
+    jx = jax.make_jaxpr(lambda s, t: mega(prep, s, t))(state, toks)
+    assert count_pallas_launches(jx.jaxpr) == 1
+
+
+def test_mixed_plane_engine_greedy_equivalence():
+    """The engine serves a mixed-plane plan end to end: fused decode
+    produces the same greedy tokens as the per-op path under the SAME
+    plane policy."""
+    from repro.serving import ServingEngine
+    model = get_model("rwkv4-169m", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, model.cfg.vocab, size=n).tolist()
+               for n in (3, 5)]
+
+    def run(fused):
+        eng = ServingEngine(model, params=params, quantized=True,
+                            plane_policy=_mixed_policy(),
+                            fused_decode=fused, max_batch=2)
+        handles = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        eng.run()
+        return [h.tokens for h in handles]
+
+    assert run(False) == run("model")

@@ -405,3 +405,128 @@ def test_counters_prefill_ttft_tracking(rwkv4):
     assert snap["mean_prefill_ticks"] == 2.0
     assert snap["mean_prefill_s"] > 0
     assert snap["prefill_tokens"] == 11
+
+
+# ---------------------------------------------------------------------------
+# Mixed weight planes through the fused prefill
+# ---------------------------------------------------------------------------
+
+
+def _mixed_policy():
+    from repro.core.quant.policy import PlanePolicy
+    return PlanePolicy(default="w8", overrides=(
+        (r"\['att'\]\['wk'\]", "w4"),
+        (r"\['ffn'\]\['wv'\]", "vq"),
+        (r"\['head'\]", "w4"),
+    ))
+
+
+def test_chunk_matmul_w4_equals_unpack(rng):
+    """`chunk_matmul` on a W4 nibble-packed leaf == the unpack oracle
+    exactly: the kernel re-interleaves the nibble pairs with the SAME
+    decode as `unpack_leaf`, and the streamed tile is HALF the bytes."""
+    from repro.core.quant.serving import unpack_leaf
+    from repro.kernels.fused_prefill import chunk_matmul
+    from repro.core.quant.delta_pot import FORMAT_W4, dpot_pack_nibbles, \
+        dpot_quantize
+    w = jnp.asarray(rng.normal(size=(48, 80)), jnp.float32)
+    q = dpot_quantize(w, FORMAT_W4, axis=-1)
+    leaf = {"packed4": dpot_pack_nibbles(q),
+            "scale": q.scale.astype(jnp.float32)}
+    assert leaf["packed4"].shape == (24, 80)
+    x = jnp.asarray(rng.normal(size=(3, 5, 48)), jnp.bfloat16)
+    got = exact_jit(lambda x, l: chunk_matmul(x, l, jnp.bfloat16))(x, leaf)
+    want = exact_jit(
+        lambda x, l: x @ unpack_leaf(l).astype(jnp.bfloat16))(x, leaf)
+    _assert_bitwise(want, got)
+
+
+def test_chunk_matmul_vq_equals_unpack(rng):
+    """`chunk_matmul` on a VQ leaf == the unpack oracle exactly: the
+    codebook enters the kernel flattened with a constant index map (one
+    resident copy, uint8 indices streamed)."""
+    from repro.core.quant.serving import unpack_leaf
+    from repro.core.quant.vq import vq_quantize
+    from repro.kernels.fused_prefill import chunk_matmul
+    w = jnp.asarray(rng.normal(size=(48, 80)), jnp.float32)
+    idx, codebook = vq_quantize(w, 64)
+    leaf = {"vq_idx": idx, "codebook": codebook}
+    x = jnp.asarray(rng.normal(size=(3, 5, 48)), jnp.bfloat16)
+    got = exact_jit(lambda x, l: chunk_matmul(x, l, jnp.bfloat16))(x, leaf)
+    want = exact_jit(
+        lambda x, l: x @ unpack_leaf(l).astype(jnp.bfloat16))(x, leaf)
+    _assert_bitwise(want, got)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_mixed_plane_prefill_bit_parity(arch, rng):
+    """Fused chunked prefill over a MIXED-plane tree (W4 wk, VQ ffn.wv,
+    W4 head, W8 rest) == the masked per-op scan oracle, bit for bit,
+    under prefix masks including an all-invalid lane."""
+    model = get_model(arch, smoke=True)
+    params = pack_params(model.init_params(jax.random.PRNGKey(0)),
+                         _mixed_policy())
+    state = _random_state(model, rng)
+    tokens = jnp.asarray(rng.integers(0, model.cfg.vocab, (B, C)),
+                         jnp.int32)
+    valid = _prefix_valid(PREFIX_LENS)
+    s1, l1 = exact_jit(lambda p, s: oracle_prefill(
+        model, p, s, tokens, valid, quantized=True))(params, state)
+    prep = model.prepare_prefill_params(params)
+    s2, l2 = exact_jit(lambda p, s: model.prefill_chunk(
+        p, s, tokens, valid))(prep, state)
+    _assert_bitwise(s1, s2)
+    _assert_bitwise(l1, l2)
+
+
+def _outside_kernel_flat_gather(jaxpr):
+    """True if a gather with a 1-D operand (the flattened VQ codebook)
+    appears OUTSIDE pallas_call kernels.  The embedding gather is exempt:
+    its operand is the 2-D (V, D) table."""
+    found = [False]
+
+    def walk(j):
+        for eqn in j.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue
+            if eqn.primitive.name == "gather" and \
+                    getattr(eqn.invars[0].aval, "ndim", 0) == 1:
+                found[0] = True
+            for v in eqn.params.values():
+                vals = v if isinstance(v, (list, tuple)) else [v]
+                for e in vals:
+                    if isinstance(e, jax.core.ClosedJaxpr):
+                        walk(e.jaxpr)
+                    elif isinstance(e, jax.core.Jaxpr):
+                        walk(e)
+    walk(jaxpr)
+    return found[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_mixed_plane_prefill_never_decodes_in_trace(arch):
+    """The bandwidth claim for ALL planes: the mixed-plane fused prefill
+    trace contains no weight decode outside a Pallas kernel — no exp2
+    (W8/W4 Δ-PoT decode) and no 1-D-operand gather (VQ codebook lookup)
+    outside pallas_call; the uint8 planes are consumed by kernels
+    directly.  The per-op oracle trips both detectors."""
+    model = get_model(arch, smoke=True)
+    packed = pack_params(model.init_params(jax.random.PRNGKey(0)),
+                         _mixed_policy())
+    prep = model.prepare_prefill_params(packed)
+    state = model.init_decode_state(B, 0, jnp.bfloat16)
+    tokens = jnp.zeros((B, C), jnp.int32)
+    valid = jnp.ones((B, C), bool)
+    jx = jax.make_jaxpr(lambda p, s: model.prefill_chunk(
+        p, s, tokens, valid))(prep, state)
+    outside = _outside_kernel_primitives(jx.jaxpr, set())
+    assert "exp2" not in outside, (
+        "Δ-PoT decode leaked out of the kernels into the prefill trace")
+    assert not _outside_kernel_flat_gather(jx.jaxpr), (
+        "VQ codebook gather leaked out of the kernels")
+    assert _pallas_consumes_uint8(jx.jaxpr)
+    # detector sanity: the per-op oracle decodes in-trace
+    jx_oracle = jax.make_jaxpr(lambda p, s: oracle_prefill(
+        model, p, s, tokens, valid, quantized=True))(packed, state)
+    assert "exp2" in _outside_kernel_primitives(jx_oracle.jaxpr, set())
+    assert _outside_kernel_flat_gather(jx_oracle.jaxpr)

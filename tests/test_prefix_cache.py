@@ -612,3 +612,69 @@ def test_engine_cached_vs_prefilled_token_accounting(rwkv4_fixture):
 def rwkv4_fixture():
     model = get_model("rwkv4-169m", smoke=True)
     return model, model.init_params(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Plane-policy isolation: the guardrail for mixed quantized planes
+# ---------------------------------------------------------------------------
+
+
+def test_plane_policy_variant_isolation():
+    """Two plans differing ONLY in plane policy can never share cache
+    entries: `cache_variant()` derives `quant` from the prepared tree's
+    actual per-tensor planes (`plane_fingerprint`), so a state cached
+    under the all-W8 pack is invisible to a W4 plan and vice versa —
+    while the all-W8 pack keeps the historical "dpot_w8" string and stays
+    compatible with pre-plane cache entries."""
+    from repro.core.quant.policy import PLANE_W4, PlanePolicy
+    w8 = build_plan("rwkv4-169m", quantized=True, prefill_chunk=C)
+    w4 = build_plan("rwkv4-169m", quantized=True, plane_policy=PLANE_W4,
+                    prefill_chunk=C)
+    mix = build_plan("rwkv4-169m", quantized=True, prefill_chunk=C,
+                     plane_policy=PlanePolicy(
+                         default="w8", overrides=((r"\['head'\]", "w4"),)))
+    v_w8, v_w4, v_mix = (p.cache_variant() for p in (w8, w4, mix))
+    assert v_w8.quant == "dpot_w8"
+    assert v_w4.quant.startswith("dpot_mix_")
+    assert v_mix.quant.startswith("dpot_mix_")
+    assert len({v_w8, v_w4, v_mix}) == 3
+
+    cache = PrefixCache(C, config=PrefixCacheConfig(device_slots=4,
+                                                    host_slots=0))
+    prompt = list(range(C + 1))
+    assert cache.insert(v_w8, prompt, C, _lane(1.0))
+    # the other policies MISS on the same tokens...
+    assert cache.probe(v_w4, prompt) is None
+    assert cache.probe(v_mix, prompt) is None
+    # ...and each can hold its own state for them side by side
+    assert cache.insert(v_w4, prompt, C, _lane(2.0))
+    for v, tag in ((v_w8, 1.0), (v_w4, 2.0)):
+        lease = cache.probe(v, prompt)
+        assert lease is not None
+        np.testing.assert_array_equal(
+            np.asarray(lease.state["a"], np.float32), tag)
+        lease.release()
+    cache.check_state()
+
+
+def test_plane_policy_in_snapshot_build_config():
+    """A plan's `build_config` records the plane policy (so snapshot
+    restore repacks the SAME per-tensor selection), round-trips through
+    `PlanePolicy.from_config`, and pre-plane configs restore as None —
+    the historical all-W8 pack."""
+    from repro.core.quant.policy import PlanePolicy
+    pol = PlanePolicy(default="w8", overrides=((r"\['head'\]", "w4"),))
+    plan = build_plan("rwkv4-169m", quantized=True, plane_policy=pol,
+                      prefill_chunk=C)
+    cfg = plan.build_config["plane_policy"]
+    assert PlanePolicy.from_config(cfg) == pol
+    rebuilt = build_plan("rwkv4-169m", quantized=True, prefill_chunk=C,
+                         plane_policy=PlanePolicy.from_config(cfg))
+    assert rebuilt.cache_variant() == plan.cache_variant()
+    # pre-plane snapshots: no key -> None -> "dpot_w8"
+    legacy = build_plan("rwkv4-169m", quantized=True, prefill_chunk=C,
+                        plane_policy=PlanePolicy.from_config(None))
+    assert legacy.cache_variant().quant == "dpot_w8"
+    assert legacy.build_config["plane_policy"] is None
+    with pytest.raises(ValueError, match="plane_policy"):
+        build_plan("rwkv4-169m", quantized=False, plane_policy=pol)

@@ -224,3 +224,231 @@ class TestPolicy:
         out = fake_quantize_tree(params)
         assert jax.tree_util.tree_structure(out) == \
             jax.tree_util.tree_structure(params)
+
+
+# ---------------------------------------------------------------------------
+# W4 nibble packing (FORMAT_W4: sign + 3-bit single-term codes, 2/byte)
+# ---------------------------------------------------------------------------
+
+
+class TestNibblePacking:
+    def _quantized(self, rng, shape=(48, 32)):
+        from repro.core.quant.delta_pot import FORMAT_W4
+        w = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        return dpot_quantize(w, FORMAT_W4, axis=-1)
+
+    def test_roundtrip_bitwise(self, rng):
+        """pack -> unpack reproduces codes, signs AND dequantized values
+        bit for bit — the property the in-kernel decode relies on."""
+        from repro.core.quant.delta_pot import (FORMAT_W4,
+                                                dpot_pack_nibbles,
+                                                dpot_unpack_nibbles)
+        q = self._quantized(rng)
+        packed = dpot_pack_nibbles(q)
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (24, 32)          # HALF the rows
+        q2 = dpot_unpack_nibbles(packed, q.scale, FORMAT_W4.ks)
+        np.testing.assert_array_equal(np.asarray(q.codes),
+                                      np.asarray(q2.codes))
+        np.testing.assert_array_equal(np.asarray(q.signs),
+                                      np.asarray(q2.signs))
+        np.testing.assert_array_equal(
+            np.asarray(dpot_dequantize(q), np.float32),
+            np.asarray(dpot_dequantize(q2), np.float32))
+
+    def test_stacked_leading_axes(self, rng):
+        """(L, K, N) stacked leaves pack along axis -2 per layer — the
+        megakernel slab form."""
+        from repro.core.quant.delta_pot import (FORMAT_W4,
+                                                dpot_pack_nibbles,
+                                                dpot_unpack_nibbles)
+        q = self._quantized(rng, shape=(3, 8, 16))
+        packed = dpot_pack_nibbles(q)
+        assert packed.shape == (3, 4, 16)
+        q2 = dpot_unpack_nibbles(packed, q.scale, FORMAT_W4.ks)
+        np.testing.assert_array_equal(np.asarray(q.codes),
+                                      np.asarray(q2.codes))
+
+    def test_rejects_wide_formats(self, rng):
+        """Only formats with <= 3 code bits fit a nibble beside the sign."""
+        from repro.core.quant.delta_pot import dpot_pack_nibbles
+        w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+        q = dpot_quantize(w, FORMAT_W8, axis=-1)
+        with pytest.raises(ValueError):
+            dpot_pack_nibbles(q)
+
+    def test_rejects_odd_contraction_axis(self, rng):
+        from repro.core.quant.delta_pot import FORMAT_W4, dpot_pack_nibbles
+        w = jnp.asarray(rng.normal(size=(7, 8)), jnp.float32)
+        with pytest.raises(ValueError):
+            dpot_pack_nibbles(dpot_quantize(w, FORMAT_W4, axis=-1))
+
+    def test_w4_levels_single_term_pot(self):
+        """FORMAT_W4's level grid is {0} ∪ {2^-1..2^-7}: the degenerate
+        single-term Δ-PoT the 3-bit code can address."""
+        from repro.core.quant.delta_pot import FORMAT_W4
+        lv = sorted(set(np.asarray(dpot_levels(FORMAT_W4)).tolist()))
+        np.testing.assert_allclose(
+            lv, [0.0] + [2.0 ** (-q) for q in range(7, 0, -1)])
+
+
+# ---------------------------------------------------------------------------
+# VQ codebook plane (per-tensor 1-D k-means, uint8 indices)
+# ---------------------------------------------------------------------------
+
+
+class TestVQ:
+    def test_exact_codebook_roundtrips(self, rng):
+        """Weights drawn from <= n_codes distinct values reconstruct to
+        those values exactly (mod bf16 rounding of the centroids)."""
+        from repro.core.quant.vq import vq_dequantize, vq_quantize
+        lv = np.asarray([-1.0, -0.25, 0.0, 0.5, 1.5], np.float32)
+        w = jnp.asarray(lv[rng.integers(0, len(lv), size=(32, 16))])
+        idx, cb = vq_quantize(w, 16)
+        got = np.asarray(vq_dequantize(idx, cb), np.float32)
+        np.testing.assert_array_equal(
+            got, np.asarray(jnp.asarray(w).astype(jnp.bfloat16), np.float32))
+
+    def test_forms(self, rng):
+        from repro.core.quant.vq import vq_quantize
+        w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+        idx, cb = vq_quantize(w, 256)
+        assert idx.dtype == jnp.uint8 and idx.shape == w.shape
+        assert cb.dtype == jnp.bfloat16 and cb.shape == (1, 256)
+
+    def test_deterministic(self, rng):
+        from repro.core.quant.vq import vq_quantize
+        w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+        i1, c1 = vq_quantize(w, 32)
+        i2, c2 = vq_quantize(w, 32)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(c1, np.float32),
+                                      np.asarray(c2, np.float32))
+
+    def test_assignment_is_nearest(self, rng):
+        """Every weight maps to its NEAREST stored (bf16) centroid — the
+        assignment optimizes the codebook that actually ships."""
+        from repro.core.quant.vq import vq_dequantize, vq_quantize
+        w = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+        idx, cb = vq_quantize(w, 16)
+        got = np.asarray(vq_dequantize(idx, cb), np.float32)
+        centers = np.asarray(cb, np.float32).reshape(-1)
+        best = np.abs(w[:, None] - centers[None, :]).min(1)
+        np.testing.assert_allclose(np.abs(np.asarray(w) - got), best,
+                                   atol=1e-6)
+
+    def test_kmeans_reduces_error_vs_quantiles(self, rng):
+        from repro.core.quant.vq import kmeans_1d
+        v = np.asarray(rng.standard_t(3, size=4096), np.float32)
+        c16 = np.asarray(kmeans_1d(jnp.asarray(v), 16), np.float32)
+        c4 = np.asarray(kmeans_1d(jnp.asarray(v), 4), np.float32)
+        e16 = np.abs(v[:, None] - c16[None]).min(1).mean()
+        e4 = np.abs(v[:, None] - c4[None]).min(1).mean()
+        assert e16 < e4
+
+
+# ---------------------------------------------------------------------------
+# PlanePolicy: per-tensor plane selection + fingerprints
+# ---------------------------------------------------------------------------
+
+
+class TestPlanePolicy:
+    def test_proxy_separates_tails(self, rng):
+        from repro.core.quant.policy import weight_outlier_proxy
+        gauss = rng.normal(size=(256, 256)).astype(np.float32)
+        heavy = rng.standard_t(3, size=(256, 256)).astype(np.float32)
+        assert weight_outlier_proxy(gauss) < 1.0
+        assert weight_outlier_proxy(heavy) > 8.0
+
+    def test_proxy_thresholds_route_planes(self, rng):
+        from repro.core.quant.policy import PLANE_PROXY
+        gauss = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+        heavy = jnp.asarray(rng.standard_t(3, size=(64, 64)), jnp.float32)
+        assert PLANE_PROXY.plane_for("['x']", gauss) == "w4"
+        assert PLANE_PROXY.plane_for("['x']", heavy) == "vq"
+
+    def test_overrides_win(self, rng):
+        from repro.core.quant.policy import PlanePolicy
+        pol = PlanePolicy(default="w8", overrides=((r"wk", "vq"),))
+        w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+        assert pol.plane_for("['att']['wk']", w) == "vq"
+        assert pol.plane_for("['att']['wv']", w) == "w8"
+
+    def test_invalid_rejected(self):
+        from repro.core.quant.policy import PlanePolicy
+        with pytest.raises(ValueError):
+            PlanePolicy(default="w3")
+        with pytest.raises(ValueError):
+            PlanePolicy(overrides=(("wk", "int4"),))
+
+    def test_config_roundtrip(self):
+        from repro.core.quant.policy import PlanePolicy
+        pol = PlanePolicy(default="proxy", w4_max_proxy=2.0,
+                          overrides=((r"head", "w4"),))
+        assert PlanePolicy.from_config(pol.to_config()) == pol
+        assert PlanePolicy.from_config(None) is None
+
+    def test_pack_params_w4_odd_axis_falls_back_to_w8(self, rng):
+        from repro.core.quant.policy import PLANE_W4
+        from repro.core.quant.serving import leaf_plane, pack_params
+        tree = {"att": {"wk": jnp.asarray(rng.normal(size=(47, 8)),
+                                          jnp.float32)}}
+        packed = pack_params(tree, PLANE_W4)
+        assert leaf_plane(packed["att"]["wk"]) == "w8"
+
+    def test_unpack_leaf_matches_reference_per_plane(self, rng):
+        """`unpack_leaf` (the single decode source of truth) reproduces
+        each plane's reference dequantization bitwise."""
+        from repro.core.quant.delta_pot import FORMAT_W4, dpot_pack_nibbles
+        from repro.core.quant.serving import unpack_leaf
+        from repro.core.quant.vq import vq_dequantize, vq_quantize
+        w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+        q = dpot_quantize(w, FORMAT_W4, axis=-1)
+        leaf = {"packed4": dpot_pack_nibbles(q),
+                "scale": q.scale.astype(jnp.float32)}
+        np.testing.assert_array_equal(
+            np.asarray(unpack_leaf(leaf), np.float32),
+            np.asarray(dpot_dequantize(q).astype(jnp.bfloat16), np.float32))
+        idx, cb = vq_quantize(w, 32)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_leaf({"vq_idx": idx, "codebook": cb}),
+                       np.float32),
+            np.asarray(vq_dequantize(idx, cb).astype(jnp.bfloat16),
+                       np.float32))
+
+    def test_quantize_tree_plane_stats(self, rng):
+        from repro.core.quant.policy import PlanePolicy
+        tree = {"att": {"wk": jnp.asarray(rng.normal(size=(16, 16)),
+                                          jnp.float32),
+                        "wv": jnp.asarray(rng.normal(size=(16, 16)),
+                                          jnp.float32)}}
+        pol = PlanePolicy(default="w4", overrides=((r"wv", "vq"),))
+        _, stats = quantize_tree(tree, planes=pol)
+        assert stats["planes"]["['att']['wk']"] == "w4"
+        assert stats["planes"]["['att']['wv']"] == "vq"
+        assert set(stats["bytes_by_plane"]) == {"w4", "vq"}
+        # W4 stores half the code bytes of W8 for the same tensor
+        assert stats["bytes_by_plane"]["w4"] < 16 * 16
+
+
+class TestPlaneFingerprint:
+    def test_historical_strings(self, rng):
+        """fp trees and all-W8 packs keep the exact historical CacheVariant
+        strings, so pre-plane cache entries and snapshots stay valid."""
+        from repro.core.quant.serving import pack_params, plane_fingerprint
+        tree = {"head": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+        assert plane_fingerprint(tree) == "fp"
+        assert plane_fingerprint(pack_params(tree)) == "dpot_w8"
+
+    def test_mixes_hash_and_never_alias(self, rng):
+        from repro.core.quant.policy import PLANE_VQ, PLANE_W4
+        from repro.core.quant.serving import pack_params, plane_fingerprint
+        tree = {"a": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+        f_w4 = plane_fingerprint(pack_params(tree, PLANE_W4))
+        f_vq = plane_fingerprint(pack_params(tree, PLANE_VQ))
+        assert f_w4.startswith("dpot_mix_")
+        assert f_vq.startswith("dpot_mix_")
+        assert f_w4 != f_vq
+        # deterministic: same policy, same fingerprint
+        assert f_w4 == plane_fingerprint(pack_params(tree, PLANE_W4))
